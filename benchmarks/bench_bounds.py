@@ -1,0 +1,34 @@
+"""Paper Theorems 2/3 — bound tables at the paper's experimental scales
+(their §6 configurations), and the tightness of Alg. 1 (§4.3)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (alg1_bandwidth_words, gemm_lower_bound,
+                        matmul_lower_bound, nystrom_lower_bound,
+                        select_matmul_grid)
+from .common import emit
+
+
+def main():
+    # metabarcoding: 1e6 x 1e6, r=1000 (their Fig. 4 data)
+    for P in (256, 512, 1024, 4096):
+        t0 = time.perf_counter()
+        W = matmul_lower_bound(10**6, 10**6, 1000, P)
+        g = select_matmul_grid(10**6, 10**6, 1000, P)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"thm2_metabarcoding_P{P}", us,
+             f"W_words={W:.3e};alg1_words={g.bandwidth_words:.3e};"
+             f"grid={g.shape};gemm_words={gemm_lower_bound(10**6, 10**6, 1000, P):.3e}")
+
+    # CIFAR kernel 50k x 50k, r in {500, 5000} (their Fig. 5-8 data)
+    for r in (500, 5000):
+        for P in (8, 32, 128, 512):
+            t0 = time.perf_counter()
+            W = nystrom_lower_bound(50000, r, P)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"thm3_cifar_r{r}_P{P}", us, f"W_words={W:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 3 — communicate Omega vs regenerate it redundantly.
+
+Wall-clock of the two strategies for instantiating Omega on all P
+processors (generation is step-indexed Philox, communication is the
+all-gather variant of Alg. 1), plus the HLO collective-byte counts.
+"""
+from __future__ import annotations
+
+from .common import emit, run_with_devices, time_us
+
+_SNIPPET = r"""
+import time, jax, jax.numpy as jnp
+from repro.core import rand_matmul, rand_matmul_communicating, make_grid_mesh
+from repro.core.sketch import input_sharding, omega_tile
+from repro.roofline.hlo import collective_bytes_of
+
+n1, n2 = 512, 1024
+mesh = make_grid_mesh(2, 2, 2)
+A = jax.device_put(jax.random.normal(jax.random.key(0), (n1, n2)),
+                   input_sharding(mesh))
+for r in (64, 256):
+    gen = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
+    com = jax.jit(lambda a: rand_matmul_communicating(a, 7, r, mesh))
+    for name, fn in (("generate", gen), ("communicate", com)):
+        jax.block_until_ready(fn(A))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(A))
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        cb = collective_bytes_of(fn.lower(A).compile().as_text()).total
+        print(f"RESULT fig3_{name}_r{r},{us:.1f},collective_bytes={cb:.0f}")
+"""
+
+
+def main():
+    out = run_with_devices(_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+
+
+if __name__ == "__main__":
+    main()

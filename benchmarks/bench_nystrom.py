@@ -1,0 +1,41 @@
+"""Paper Figs. 5-8 — Redist vs No-Redist Nyström: runtime and communication
+volume, including the P ~ n/r crossover of Fig. 7."""
+from __future__ import annotations
+
+from .common import run_with_devices
+
+_SNIPPET = r"""
+import time, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import nystrom_no_redist, nystrom_redist
+from repro.roofline.hlo import collective_bytes_of
+
+Pn = 8
+mesh = Mesh(np.asarray(jax.devices()), ("x",))
+for (n, r) in ((1024, 32), (512, 128)):   # n/r = 32 > P  and  n/r = 4 < P
+    S = jax.random.normal(jax.random.key(2), (n, n))
+    S = S @ S.T / n
+    Ssh = jax.device_put(S, NamedSharding(mesh, P("x", None)))
+    for name, fn in (("no_redist", nystrom_no_redist),
+                     ("redist", nystrom_redist)):
+        jfn = jax.jit(lambda a, f=fn: f(a, 5, r, mesh))
+        jax.block_until_ready(jfn(Ssh))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(jfn(Ssh))
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        cb = collective_bytes_of(jfn.lower(Ssh).compile().as_text()).total
+        print(f"RESULT fig5-7_nystrom_{name}_n{n}_r{r},{us:.1f},"
+              f"coll_bytes={cb:.0f};n_over_r={n//r};P={Pn}")
+"""
+
+
+def main():
+    out = run_with_devices(_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+
+
+if __name__ == "__main__":
+    main()

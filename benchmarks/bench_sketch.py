@@ -1,0 +1,46 @@
+"""Paper Fig. 4 — strong scaling of B = A·Omega (Alg. 1).
+
+P grows at fixed problem size; in the paper's regime-1 range the measured
+collective traffic must be exactly zero (their 'perfect scaling' result).
+Derived column: per-device collective bytes + the Theorem-2 bound.
+"""
+from __future__ import annotations
+
+from .common import emit, run_with_devices
+
+_SNIPPET = r"""
+import time, jax, jax.numpy as jnp
+from repro.core import rand_matmul, make_grid_mesh, select_matmul_grid, \
+    matmul_lower_bound
+from repro.core.sketch import input_sharding
+from repro.roofline.hlo import collective_bytes_of
+
+n1, n2, r = 1024, 2048, 64
+for P in (1, 2, 4, 8):
+    g = select_matmul_grid(n1, n2, r, P)
+    mesh = make_grid_mesh(*g.shape, devices=jax.devices()[:P])
+    A = jax.device_put(jax.random.normal(jax.random.key(0), (n1, n2)),
+                       input_sharding(mesh))
+    fn = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
+    jax.block_until_ready(fn(A))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(fn(A))
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    cb = collective_bytes_of(fn.lower(A).compile().as_text()).total
+    W = matmul_lower_bound(n1, n2, r, P)
+    print(f"RESULT fig4_scaling_P{P},{us:.1f},"
+          f"grid={g.shape};coll_bytes={cb:.0f};thm2_words={W:.0f}")
+    assert (cb == 0) == (W == 0), (cb, W)
+"""
+
+
+def main():
+    out = run_with_devices(_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from
+dryrun_results.jsonl.  Keeps the LAST record per cell (later runs supersede).
+
+    PYTHONPATH=src python -m benchmarks.rooflines [--jsonl FILE] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+
+def load_cells(path: str) -> Dict[str, dict]:
+    cells: Dict[str, dict] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            cells[r["cell"]] = r
+    return cells
+
+
+def fnum(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, str):
+        return x
+    if x == 0:
+        return "0"
+    return f"{x:.{nd}e}"
+
+
+def render(cells: Dict[str, dict], md: bool = False, mesh: str = None):
+    hdr = ["cell", "chips", "HLO_FLOPs", "HLO_bytes", "coll_bytes",
+           "t_comp(s)", "t_mem(s)", "t_coll(s)", "bottleneck",
+           "useful", "roofline_frac"]
+    rows = []
+    for cell in sorted(cells):
+        r = cells[cell]
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if "skip" in r:
+            rows.append([cell, "-", r["skip"], "", "", "", "", "", "", "",
+                         ""])
+            continue
+        if "error" in r:
+            rows.append([cell, "-", "ERROR " + r["error"][:40], "", "", "",
+                         "", "", "", "", ""])
+            continue
+        rows.append([
+            cell, str(r["chips"]), fnum(r["hlo_flops"]),
+            fnum(r["hlo_bytes"]), fnum(r["collective_bytes"]),
+            fnum(r["t_compute"]), fnum(r["t_memory"]),
+            fnum(r["t_collective"]), r["bottleneck"],
+            (f"{r['useful_ratio']:.3f}" if r.get("useful_ratio") else "-"),
+            (f"{r['roofline_fraction']:.4f}"
+             if r.get("roofline_fraction") is not None else "-"),
+        ])
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "|".join("---" for _ in hdr) + "|")
+        for row in rows:
+            print("| " + " | ".join(row) + " |")
+    else:
+        w = [max(len(h), *(len(r[i]) for r in rows)) for i, h in
+             enumerate(hdr)]
+        print("  ".join(h.ljust(w[i]) for i, h in enumerate(hdr)))
+        for row in rows:
+            print("  ".join(c.ljust(w[i]) for i, c in enumerate(row)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="dryrun_results.jsonl")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "single_pod", "multi_pod"])
+    args = ap.parse_args()
+    render(load_cells(args.jsonl), md=args.md, mesh=args.mesh)
+
+
+if __name__ == "__main__":
+    main()

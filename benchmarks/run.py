@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Multi-device benchmarks run in
+subprocesses with 8 fake XLA devices so this process keeps 1 device.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3_comm_vs_gen,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_bounds, bench_comm_vs_gen, bench_error,
+               bench_grad_compress, bench_kernels, bench_nystrom,
+               bench_sketch)
+
+SUITES = {
+    "thm_bounds": bench_bounds.main,        # Thm 2/3 tables
+    "fig3_comm_vs_gen": bench_comm_vs_gen.main,
+    "fig4_scaling": bench_sketch.main,
+    "fig5-8_nystrom": bench_nystrom.main,
+    "tab2_error": bench_error.main,
+    "kernels": bench_kernels.main,
+    "grad_compress": bench_grad_compress.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append((name, e))
+    if failed:
+        print(f"# {len(failed)} suites FAILED: {[n for n, _ in failed]}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

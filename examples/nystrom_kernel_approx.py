@@ -1,0 +1,31 @@
+"""Paper §6.2 / Tab. 2 end-to-end: Nyström approximation of kernel matrices
+at several ranks, on the linear and RBF kernels.
+
+    PYTHONPATH=src python examples/nystrom_kernel_approx.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import nystrom_reference, relative_error
+
+n, d = 2048, 128
+X = jax.random.normal(jax.random.key(0), (n, d))
+
+kernels = {}
+kernels["linear"] = X @ X.T
+sq = jnp.sum(X * X, 1)
+d2 = sq[:, None] + sq[None, :] - 2 * X @ X.T
+sigma = float(jnp.linalg.norm(X)) / (n ** 0.5)
+kernels[f"rbf sigma={sigma:.2f}"] = jnp.exp(-d2 / (2 * sigma ** 2))
+kernels["rbf sigma=1"] = jnp.exp(-d2 / 2.0)
+
+print(f"{'kernel':>18} | " + " | ".join(f"r={r:<5}" for r in (64, 256, 512)))
+for name, A in kernels.items():
+    errs = []
+    for r in (64, 256, 512):
+        B, C = nystrom_reference(A, seed=11, r=r)
+        errs.append(float(relative_error(A, B, C)))
+    print(f"{name:>18} | " + " | ".join(f"{e:.1e}" for e in errs))
+print("\nExpected pattern (paper Tab. 2): linear kernel -> machine precision"
+      "\nonce r exceeds the true rank; well-scaled RBF decays; sigma=1 RBF"
+      "\nstays O(1) (numerically full-rank).")

@@ -1,0 +1,13 @@
+"""Batched serving example: continuous-batching-lite over a reduced model.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-2b]
+"""
+import sys
+
+if "--requests" not in " ".join(sys.argv):
+    sys.argv += ["--requests", "6", "--slots", "3", "--max-new", "8"]
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

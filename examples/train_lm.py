@@ -1,0 +1,15 @@
+"""End-to-end training driver example: train a reduced llama-family model
+for a few hundred steps on the synthetic pipeline with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch gemma2-2b]
+"""
+import sys
+
+sys.argv = [sys.argv[0], *sys.argv[1:]]
+if "--steps" not in " ".join(sys.argv):
+    sys.argv += ["--steps", "200", "--batch", "8", "--seq", "128"]
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — communication-optimal distributed sketching (Al Daas et al.,
+CS.DC 2026) as a production JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,134 @@
+"""Sharded, atomic, mesh-agnostic checkpointing.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      — pytree structure, shapes, dtypes, step
+            arrays.npz         — flattened leaves (host-gathered)
+
+Writes are atomic (tmp dir + rename); ``keep`` old checkpoints are GC'd.
+Checkpoints store LOGICAL arrays (no mesh info), so restore works onto any
+device count / mesh — the elastic-scaling path (launch/elastic.py) re-shards
+on load via device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_RAW_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomically write a checkpoint; returns its path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        named = _flatten_with_names(tree)
+        arrays = {}
+        manifest = {"step": step, "leaves": [], "extra": extra or {}}
+        for i, (name, leaf) in enumerate(named):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"a{i}"
+            dtype_name = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16, fp8, ...)
+                arr = arr.view(_RAW_VIEW[arr.dtype.itemsize])
+            arrays[key] = arr
+            manifest["leaves"].append(
+                {"name": name, "key": key, "shape": list(arr.shape),
+                 "dtype": dtype_name})
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_like, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, int, Dict]:
+    """Load into the structure of ``tree_like``; optionally re-shard.
+
+    Returns (tree, step, extra).  Works across meshes/device counts —
+    arrays are logical; ``shardings`` (a matching pytree of NamedSharding)
+    re-places them (elastic restore)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    named_like = _flatten_with_names(tree_like)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    leaves = []
+    for name, like in named_like:
+        e = by_name.get(name)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = arrays[e["key"]]
+        want = _np_dtype(e["dtype"])
+        if arr.dtype != want:              # stored as a raw view
+            arr = arr.view(want)
+        want_shape = tuple(like.shape) if hasattr(like, "shape") else None
+        if want_shape is not None and tuple(arr.shape) != want_shape:
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{arr.shape} vs {want_shape}")
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(
+            lambda a, l: jax.numpy.asarray(
+                a, dtype=getattr(l, "dtype", None)), tree,
+            jax.tree_util.tree_unflatten(treedef,
+                                         [l for _, l in named_like]))
+    return tree, step, manifest.get("extra", {})

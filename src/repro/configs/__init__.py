@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config("<arch-id>")`` and shape helpers."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .base import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                   SHAPES_BY_NAME, TRAIN_4K, ModelConfig, RunConfig,
+                   ShapeConfig)
+
+from . import (dbrx_132b, falcon_mamba_7b, gemma2_2b, granite_moe_1b,
+               h2o_danube3_4b, internlm2_20b, internvl2_26b, llama3_8b,
+               whisper_tiny, zamba2_1p2b)
+
+_REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (internvl2_26b, h2o_danube3_4b, internlm2_20b, gemma2_2b,
+              llama3_8b, granite_moe_1b, dbrx_132b, zamba2_1p2b,
+              falcon_mamba_7b, whisper_tiny)
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
+    """The assigned shape set minus documented skips
+    (DESIGN.md §Arch-applicability)."""
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.sub_quadratic and cfg.family != "encdec":
+        shapes.append(LONG_500K)
+    return shapes
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """Non-empty string when (arch, shape) is a documented skip."""
+    if shape.name != "long_500k":
+        return ""
+    if cfg.family == "encdec":
+        return "SKIP(enc-dec: decoder context bound, 500k meaningless)"
+    if not cfg.sub_quadratic:
+        return "SKIP(pure full-attention arch; needs sub-quadratic attention)"
+    return ""
+
+
+def all_cells():
+    """Every (arch, shape) pair, with its skip reason ('' = runnable)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            yield arch, shape.name, skip_reason(cfg, shape)

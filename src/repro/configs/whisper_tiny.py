@@ -1,0 +1,26 @@
+"""Whisper-tiny — encoder-decoder, conv frontend stubbed (precomputed frame
+embeddings per assignment). [arXiv:2212.04356; unverified]
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+
+Note: decode_32k is lowered mechanically (positions beyond Whisper's native
+448-token decoder context clamp into the learned table); long_500k is
+skipped — see DESIGN.md §Arch-applicability."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,                  # decoder layers
+    n_enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab=51865,
+    enc_seq=1500,
+    abs_pos_embed=True,
+    max_pos=65536,
+    norm="layernorm",
+    activation="gelu",
+)

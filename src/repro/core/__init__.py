@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — communication-optimal distributed
+sketching with random dense matrices, and Nyström approximation."""
+from . import rng, lower_bounds, grid, sketch, nystrom  # noqa: F401
+
+from .lower_bounds import (  # noqa: F401
+    matmul_lower_bound, matmul_access_lower_bound, matmul_regime,
+    nystrom_lower_bound, nystrom_access_lower_bound, nystrom_regime,
+    gemm_lower_bound, report_matmul, report_nystrom,
+)
+from .grid import (  # noqa: F401
+    select_matmul_grid, select_nystrom_grids,
+    alg1_bandwidth_words, alg2_bandwidth_words,
+)
+from .sketch import (  # noqa: F401
+    rand_matmul, rand_matmul_auto, rand_matmul_communicating,
+    sketch_reference, omega_tile, make_grid_mesh,
+)
+from .nystrom import (  # noqa: F401
+    nystrom_reference, nystrom_no_redist, nystrom_redist, nystrom_general,
+    nystrom_auto, reconstruct, relative_error,
+)

@@ -1,0 +1,221 @@
+"""Algorithm 2 — parallel Nyström approximation (paper §5).
+
+Computes the pair  B = A·Omega  (n x r)  and  C = Omega^T·B  (r x r)  for a
+symmetric A (n x n), then reconstructs  Ã = B · C† · B^T.
+
+Two 1-D variants exactly as implemented in the paper (§5.3, Fig. 1):
+
+  * ``no_redist`` — p = q = (P, 1, 1).  A is row-sharded; every processor
+    regenerates the full Omega; B_i = A_i·Omega needs no communication; the
+    second product is a partial-sum C_i = Omega_i^T·B_i reduced with one
+    Reduce-Scatter of O(r^2) words.  Best when P < n/r.
+
+  * ``redist`` — p = (P, 1, 1), q = (1, 1, P).  Same first stage, then B is
+    re-laid out row-sharded -> column-sharded with one All-to-All of
+    O(nr/P) words per processor, and the second product is entirely local.
+    Best when P > n/r (the paper's empirical crossover, Fig. 7).
+
+Plus the general two-grid form (``nystrom_general``) that runs Alg. 1 on an
+arbitrary (p1,p2,p3) grid and the second multiply on an arbitrary
+(q1,q2,q3) grid, with XLA inserting the B redistribution (§5.2's
+``Redistribute``) via a sharding constraint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sketch import omega_tile, rand_matmul, make_grid_mesh, DEFAULT_AXES
+
+X_AXIS = "x"
+
+
+# ---------------------------------------------------------------------------
+# Reference (single device)
+# ---------------------------------------------------------------------------
+
+def nystrom_reference(A, seed: int, r: int, kind: str = "normal"):
+    """(B, C) on one device with the same Philox Omega as distributed runs."""
+    n = A.shape[0]
+    om = omega_tile(seed, 0, 0, n, r, kind, A.dtype)
+    B = A @ om
+    C = om.T @ B
+    return B, C
+
+
+def _default_rcond(dtype) -> float:
+    """Paper §6.2 uses 1e-12 — appropriate for their FP64 runs.  In reduced
+    precision the cutoff must sit above the noise floor of the dtype."""
+    if dtype == jnp.float64:
+        return 1e-12
+    return 1e-6
+
+
+def reconstruct(B, C, rcond: Optional[float] = None):
+    """Ã = B C† B^T with a numerically-tolerant pseudoinverse.
+
+    C = Omega^T A Omega is symmetric (A symmetric), so the pseudoinverse is
+    computed by eigendecomposition with a relative eigenvalue cutoff —
+    cheaper and more stable than SVD-based pinv for the PSD-dominated case.
+    """
+    rcond = _default_rcond(C.dtype) if rcond is None else rcond
+    Cs = (C + C.T) / 2
+    w, V = jnp.linalg.eigh(Cs)
+    cutoff = rcond * jnp.max(jnp.abs(w))
+    w_inv = jnp.where(jnp.abs(w) > cutoff, 1.0 / w, 0.0)
+    Cd = (V * w_inv[None, :]) @ V.T
+    return B @ Cd @ B.T
+
+
+def relative_error(A, B, C, rcond: Optional[float] = None):
+    """|| A - Ã ||_F / || A ||_F  (the paper's Tab. 2 metric)."""
+    At = reconstruct(B, C, rcond)
+    return jnp.linalg.norm(A - At) / jnp.linalg.norm(A)
+
+
+# ---------------------------------------------------------------------------
+# 1-D No-Redist  (p = q = (P,1,1))
+# ---------------------------------------------------------------------------
+
+def nystrom_no_redist(A, seed: int, r: int, mesh: Mesh,
+                      axis: str = X_AXIS, kind: str = "normal"):
+    """Paper's No-Redist variant.
+
+    in : A row-sharded P(x, None)
+    out: B row-sharded P(x, None); C row-sharded P(x, None)
+    comm: one Reduce-Scatter of r^2 words (the (1-1/P)·r^2 term).
+    """
+    Pn = mesh.shape[axis]
+    n = A.shape[0]
+    if n % Pn or r % Pn:
+        raise ValueError(f"n={n}, r={r} must divide P={Pn}")
+    rows = n // Pn
+
+    def body(a_i):                                # a_i: (n/P, n)
+        i = jax.lax.axis_index(axis)
+        om = omega_tile(seed, 0, 0, n, r, kind, a_i.dtype)   # full Omega
+        b_i = a_i @ om                            # (n/P, r) — no comm
+        om_i = jax.lax.dynamic_slice(om, (i * rows, 0), (rows, r))
+        c_part = om_i.T @ b_i                     # (r, r) partial sum
+        c_i = jax.lax.psum_scatter(c_part, axis, scatter_dimension=0,
+                                   tiled=True)    # (r/P, r)
+        return b_i, c_i
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=P(axis, None),
+                       out_specs=(P(axis, None), P(axis, None)))
+    return fn(A)
+
+
+# ---------------------------------------------------------------------------
+# 1-D Redist  (p = (P,1,1), q = (1,1,P))
+# ---------------------------------------------------------------------------
+
+def nystrom_redist(A, seed: int, r: int, mesh: Mesh,
+                   axis: str = X_AXIS, kind: str = "normal"):
+    """Paper's Redist variant.
+
+    in : A row-sharded P(x, None)
+    out: B column-sharded P(None, x); C column-sharded P(None, x)
+    comm: one All-to-All moving nr/P words per processor (B row-shard ->
+    column-shard re-layout), second multiply fully local.
+    """
+    Pn = mesh.shape[axis]
+    n = A.shape[0]
+    if n % Pn or r % Pn:
+        raise ValueError(f"n={n}, r={r} must divide P={Pn}")
+
+    def body(a_i):                                # a_i: (n/P, n)
+        om = omega_tile(seed, 0, 0, n, r, kind, a_i.dtype)   # full Omega
+        b_i = a_i @ om                            # (n/P, r) — no comm
+        # Redistribute B: rows-sharded -> cols-sharded (paper's All-to-All).
+        b_k = jax.lax.all_to_all(b_i, axis, split_axis=1, concat_axis=0,
+                                 tiled=True)      # (n, r/P)
+        c_k = om.T @ b_k                          # (r, r/P) — local
+        return b_k, c_k
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=P(axis, None),
+                       out_specs=(P(None, axis), P(None, axis)))
+    return fn(A)
+
+
+# ---------------------------------------------------------------------------
+# General two-grid Alg. 2
+# ---------------------------------------------------------------------------
+
+def nystrom_general(A, seed: int, r: int, mesh: Mesh,
+                    p_axes: Tuple[str, str, str] = DEFAULT_AXES,
+                    q_axes: Optional[Tuple[str, str, str]] = None,
+                    kind: str = "normal"):
+    """Alg. 2 on arbitrary (p1,p2,p3) / (q1,q2,q3) grids over one mesh.
+
+    Stage 1 is Alg. 1 (``rand_matmul``).  The ``Redistribute`` of §5.2 is
+    expressed as a sharding constraint — XLA emits the all-to-all /
+    collective-permute exactly where the paper's algorithm places it.
+    Stage 2 (C = Omega^T B) mirrors Alg. 1 with the roles of the grid axes
+    shifted: all-gather B over q2, generate Omega_{i'j'}, local GEMM,
+    reduce-scatter C over q1.
+    """
+    q_axes = q_axes or p_axes
+    a1, a2, a3 = q_axes
+    q1, q2, q3 = (mesh.shape[a] for a in q_axes)
+    n = A.shape[0]
+
+    B = rand_matmul(A, seed, r, mesh, axes=p_axes, kind=kind)
+
+    # Redistribute B into the stage-2 layout: rows over q1, cols over
+    # (q3, q2) — each block B_{i'k'} split column-wise across the q2 fiber.
+    B = jax.lax.with_sharding_constraint(
+        B, NamedSharding(mesh, P(a1, (a3, a2))))
+
+    if n % q1 or r % (q2 * q3) or r % q2 or r % q3:
+        raise ValueError(f"(n={n}, r={r}) not divisible by q-grid "
+                         f"({q1},{q2},{q3})")
+    om_rows = n // q1
+    om_cols = r // q2
+
+    def stage2(b_blk):                            # (n/q1, r/(q3 q2))
+        i = jax.lax.axis_index(a1)
+        j = jax.lax.axis_index(a2)
+        b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
+        om = omega_tile(seed, i * om_rows, j * om_cols,
+                        om_rows, om_cols, kind, b_ik.dtype)
+        c_part = om.T @ b_ik                      # (r/q2, r/q3) partial
+        if q1 == 1:
+            return c_part
+        return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
+                                    tiled=True)
+
+    fn = jax.shard_map(stage2, mesh=mesh,
+                       in_specs=P(a1, (a3, a2)),
+                       out_specs=P((a2, a1), a3))
+    C = fn(B)
+    return B, C
+
+
+# ---------------------------------------------------------------------------
+# Convenience driver
+# ---------------------------------------------------------------------------
+
+def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
+                 kind: str = "normal"):
+    """Run the paper-preferred variant on a 1-D mesh over all devices."""
+    devices = devices if devices is not None else jax.devices()
+    Pn = len(devices)
+    n = A.shape[0]
+    if variant == "auto":
+        variant = "redist" if Pn > max(1, n // max(r, 1)) else "no_redist"
+    mesh = Mesh(np.asarray(devices), (X_AXIS,))
+    A = jax.device_put(A, NamedSharding(mesh, P(X_AXIS, None)))
+    if variant == "no_redist":
+        B, C = nystrom_no_redist(A, seed, r, mesh, kind=kind)
+    elif variant == "redist":
+        B, C = nystrom_redist(A, seed, r, mesh, kind=kind)
+    else:
+        raise ValueError(variant)
+    return B, C, mesh, variant

@@ -1,0 +1,209 @@
+"""Counter-based pseudorandom generation for communication-free sketching.
+
+The paper's central systems insight (§6.3) is that a dense random sketching
+matrix Omega never needs to be *communicated*: any processor can regenerate
+exactly the block it consumes from a shared seed using a counter-based PRNG
+(they use Philox-4x32-10 via MKL/cuRAND).  This module provides two
+realizations of that insight:
+
+1. ``block_omega`` / ``omega_full`` — JAX-native. JAX's threefry PRNG is
+   itself counter-based, so ``fold_in(key, linear_block_index)`` gives a
+   deterministic, device-local, communication-free block of Omega.  The block
+   grid is defined *globally* (independent of the mesh), so any processor
+   grid regenerates bit-identical entries — this is what makes the
+   distributed algorithms bitwise-equal to the single-device reference.
+
+2. ``philox_4x32`` / ``philox_uniform`` / ``philox_normal`` — a pure-jnp
+   Philox-4x32-10 (the paper's exact generator, Salmon et al. SC'11),
+   written only with uint32 ops and 16-bit-limb multiplies so the identical
+   bitstream is reproducible inside a Pallas TPU kernel (no 64-bit multiply
+   on the TPU VPU).  ``kernels/sketch_matmul.py`` consumes these helpers to
+   generate Omega tiles in VMEM, and ``kernels/ref.py`` uses them as the
+   bitwise oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Philox-4x32-10 in pure jnp uint32 ops (TPU-VPU compatible: no 64-bit mult)
+# ---------------------------------------------------------------------------
+
+PHILOX_M0 = np.uint32(0xD2511F53)
+PHILOX_M1 = np.uint32(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)  # golden ratio
+PHILOX_W1 = np.uint32(0xBB67AE85)  # sqrt(3) - 1
+PHILOX_ROUNDS = 10
+
+
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def _mulhilo32(a, b):
+    """(hi, lo) of the 32x32->64 bit product using 16-bit limbs.
+
+    TPU VPU has no 64-bit integer multiply; CUDA's ``mulhi.u32`` must be
+    re-derived via schoolbook 16-bit limbs so the same code runs in a Pallas
+    kernel body and in plain jnp.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+
+    ll = a_lo * b_lo                     # <= (2^16-1)^2 < 2^32, exact in u32
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+
+    # low 32 bits: ll + ((lh + hl) << 16)  (mod 2^32)
+    mid = lh + hl                         # may wrap; handle carry manually
+    mid_carry = _u32(mid < lh)            # wrapped iff result < an addend
+    lo = ll + (mid << 16)
+    lo_carry = _u32(lo < ll)
+    # high 32 bits: hh + (mid >> 16) + (mid_carry << 16) + carry from lo
+    hi = hh + (mid >> 16) + (mid_carry << 16) + lo_carry
+    return hi, lo
+
+
+def _philox_round(c0, c1, c2, c3, k0, k1):
+    hi0, lo0 = _mulhilo32(PHILOX_M0, c0)
+    hi1, lo1 = _mulhilo32(PHILOX_M1, c2)
+    n0 = hi1 ^ c1 ^ k0
+    n1 = lo1
+    n2 = hi0 ^ c3 ^ k1
+    n3 = lo0
+    return n0, n1, n2, n3
+
+
+def philox_4x32(counter: Tuple[jnp.ndarray, ...], key: Tuple[jnp.ndarray, jnp.ndarray],
+                rounds: int = PHILOX_ROUNDS):
+    """Philox-4x32 with ``rounds`` rounds (default 10, the standard).
+
+    ``counter`` is a 4-tuple and ``key`` a 2-tuple of uint32 arrays of any
+    broadcastable shape. Returns 4 uint32 arrays of the broadcast shape.
+    """
+    c0, c1, c2, c3 = (_u32(c) for c in counter)
+    k0, k1 = _u32(key[0]), _u32(key[1])
+    for _ in range(rounds):
+        c0, c1, c2, c3 = _philox_round(c0, c1, c2, c3, k0, k1)
+        k0 = k0 + PHILOX_W0
+        k1 = k1 + PHILOX_W1
+    return c0, c1, c2, c3
+
+
+def _uniform_from_u32(bits):
+    """uint32 -> float32 uniform in [0, 1) with 24-bit mantissa usage."""
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def philox_uniform_grid(key0: jnp.ndarray, key1: jnp.ndarray,
+                        row0: jnp.ndarray, col0: jnp.ndarray,
+                        rows: int, cols: int,
+                        salt: int = 0) -> jnp.ndarray:
+    """A (rows, cols) float32 uniform[0,1) tile.
+
+    Entry (i, j) depends only on the *global* coordinates
+    (row0 + i, col0 + j) and the key — independent of the tiling — so any
+    tile decomposition regenerates identical values (the paper's
+    regenerate-don't-communicate invariant at tile granularity).
+    """
+    gi = row0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    gj = col0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    r0, r1, r2, r3 = philox_4x32(
+        (gi, gj, _u32(salt) + jnp.zeros_like(gi), jnp.zeros_like(gi)),
+        (key0, key1))
+    del r1, r2, r3
+    return _uniform_from_u32(r0)
+
+
+def philox_normal_grid(key0: jnp.ndarray, key1: jnp.ndarray,
+                       row0: jnp.ndarray, col0: jnp.ndarray,
+                       rows: int, cols: int,
+                       salt: int = 0) -> jnp.ndarray:
+    """A (rows, cols) float32 N(0,1) tile via Box-Muller on two Philox lanes.
+
+    Uses output lanes r0/r1 of a single Philox call per element, so the cost
+    equals one generator invocation per entry (as in the paper's MKL/cuRAND
+    usage).
+    """
+    gi = row0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    gj = col0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    r0, r1, r2, r3 = philox_4x32(
+        (gi, gj, _u32(salt) + jnp.zeros_like(gi), jnp.zeros_like(gi)),
+        (key0, key1))
+    del r2, r3
+    u1 = _uniform_from_u32(r0)
+    u2 = _uniform_from_u32(r1)
+    # Box-Muller; clamp u1 away from 0 to keep log finite.
+    u1 = jnp.maximum(u1, jnp.float32(1e-7))
+    radius = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = jnp.float32(2.0 * np.pi) * u2
+    return radius * jnp.cos(theta)
+
+
+# ---------------------------------------------------------------------------
+# JAX-threefry block Omega (used by the distributed shard_map algorithms)
+# ---------------------------------------------------------------------------
+
+def _as_key(seed_or_key):
+    if isinstance(seed_or_key, (int, np.integer)):
+        return jax.random.key(seed_or_key)
+    return seed_or_key
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6, 7))
+def block_omega(key, j, k, block_rows: int, block_cols: int,
+                n_block_cols: int, dtype=jnp.float32, kind: str = "normal"):
+    """Block (j, k) of the global random matrix Omega.
+
+    The (j, k) indexing is over a *global* block grid of
+    ``block_rows x block_cols`` tiles covering Omega (n2 x r).  Any processor
+    calls this with its own (j, k) — zero communication, deterministic in
+    ``key``.  Different (mesh, grid) decompositions must use the *same*
+    (block_rows, block_cols) to be bitwise-consistent; `omega_full`
+    reassembles the same matrix on one device.
+    """
+    key = _as_key(key)
+    kk = jax.random.fold_in(key, j * n_block_cols + k)
+    if kind == "normal":
+        return jax.random.normal(kk, (block_rows, block_cols), dtype)
+    elif kind == "uniform":
+        return jax.random.uniform(kk, (block_rows, block_cols), dtype)
+    elif kind == "rademacher":
+        return jax.random.rademacher(kk, (block_rows, block_cols), dtype)
+    raise ValueError(f"unknown omega kind: {kind}")
+
+
+def omega_full(key, n2: int, r: int, p2: int, p3: int,
+               dtype=jnp.float32, kind: str = "normal"):
+    """Assemble the full Omega from its (p2 x p3) block grid on one device.
+
+    Reference/oracle path: must equal the concatenation of every processor's
+    ``block_omega`` outputs.
+    """
+    assert n2 % p2 == 0 and r % p3 == 0, (n2, r, p2, p3)
+    br, bc = n2 // p2, r // p3
+    rows = []
+    for j in range(p2):
+        cols = [block_omega(key, j, k, br, bc, p3, dtype, kind)
+                for k in range(p3)]
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def philox_omega_full(seed: int, n2: int, r: int, dtype=jnp.float32,
+                      salt: int = 0):
+    """Full Omega from the Philox path (tile-decomposition independent)."""
+    key0 = _u32(seed & 0xFFFFFFFF)
+    key1 = _u32((seed >> 32) & 0xFFFFFFFF)
+    return philox_normal_grid(key0, key1, _u32(0), _u32(0), n2, r,
+                              salt=salt).astype(dtype)

@@ -1,0 +1,214 @@
+"""Algorithm 1 — communication-optimal parallel B = A·Omega (paper §4.2).
+
+The processor grid is a JAX mesh with three named axes (p1, p2, p3).  The
+algorithm is *exactly* the paper's: one All-Gather of A over the p3 fibers,
+local regeneration of the Omega block (zero communication — the paper's
+point), one local GEMM, one Reduce-Scatter of B over the p2 fibers.
+
+Data layout contract (paper §4.2):
+  in : A is evenly divided into a (p1 x p2) grid of blocks; each block A_ij
+       is split column-wise across the p3 fiber -> in_specs P(p1, (p2, p3)).
+  out: B is evenly divided into a (p1 x p3) grid of blocks; each block B_ik
+       is split row-wise across the p2 fiber -> out_specs P((p1, p2), p3).
+
+Omega entries are generated with the Philox-4x32-10 counter-based generator
+keyed by *global* coordinates, so every processor-grid decomposition of the
+same (seed, n2, r) produces bitwise-identical sketches — the distributed
+result equals the single-device reference exactly, which is the executable
+form of the paper's regenerate-don't-communicate claim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import rng
+from .grid import MatmulGrid, select_matmul_grid
+
+DEFAULT_AXES = ("p1", "p2", "p3")
+
+
+# ---------------------------------------------------------------------------
+# Omega tile generation (shared by local + distributed paths)
+# ---------------------------------------------------------------------------
+
+def omega_tile(seed: int, row0, col0, rows: int, cols: int,
+               kind: str = "normal", dtype=jnp.float32, salt: int = 0):
+    """Tile [row0:row0+rows, col0:col0+cols] of the global Omega.
+
+    Entry values depend only on global coordinates + seed, never on the
+    tiling, so this is safe to call from any shard with traced offsets.
+    """
+    key0 = jnp.uint32(seed & 0xFFFFFFFF)
+    key1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+    row0 = jnp.asarray(row0, jnp.uint32)
+    col0 = jnp.asarray(col0, jnp.uint32)
+    if kind == "normal":
+        t = rng.philox_normal_grid(key0, key1, row0, col0, rows, cols, salt)
+    elif kind == "uniform":
+        t = rng.philox_uniform_grid(key0, key1, row0, col0, rows, cols, salt)
+    elif kind == "rademacher":
+        u = rng.philox_uniform_grid(key0, key1, row0, col0, rows, cols, salt)
+        t = jnp.where(u < 0.5, -1.0, 1.0)
+    else:
+        raise ValueError(f"unknown omega kind {kind!r}")
+    return t.astype(dtype)
+
+
+def sketch_reference(A, seed: int, r: int, kind: str = "normal",
+                     scale: Optional[float] = None):
+    """Single-device oracle: B = A @ Omega with the full Omega materialized."""
+    n2 = A.shape[-1]
+    om = omega_tile(seed, 0, 0, n2, r, kind, A.dtype)
+    if scale is not None:
+        om = om * jnp.asarray(scale, A.dtype)
+    return A @ om
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+def make_grid_mesh(p1: int, p2: int, p3: int,
+                   axis_names: Tuple[str, str, str] = DEFAULT_AXES,
+                   devices=None) -> Mesh:
+    """A (p1, p2, p3) mesh for the paper's processor grid."""
+    if devices is None:
+        devices = jax.devices()
+    n = p1 * p2 * p3
+    if len(devices) < n:
+        raise ValueError(f"grid {p1}x{p2}x{p3} needs {n} devices, "
+                         f"have {len(devices)}")
+    devs = np.asarray(devices[:n]).reshape(p1, p2, p3)
+    return Mesh(devs, axis_names)
+
+
+def input_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
+    """Sharding of A per the Alg. 1 layout contract."""
+    return NamedSharding(mesh, P(axes[0], (axes[1], axes[2])))
+
+
+def output_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
+    """Sharding of B per the Alg. 1 layout contract."""
+    return NamedSharding(mesh, P((axes[0], axes[1]), axes[2]))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def rand_matmul(A, seed: int, r: int, mesh: Mesh,
+                axes: Tuple[str, str, str] = DEFAULT_AXES,
+                kind: str = "normal",
+                scale: Optional[float] = None,
+                precision=None):
+    """B = A @ Omega on the (p1, p2, p3) grid ``mesh`` (paper Alg. 1).
+
+    A must be shardable as P(p1, (p2, p3)); the result is sharded
+    P((p1, p2), p3).  Communication: one tiled All-Gather over p3 and one
+    tiled Reduce-Scatter over p2 — matching the paper's optimal bandwidth
+    ``(1-1/p3)·n1n2/(p1p2) + (1-1/p2)·n1r/(p1p3)`` exactly.
+    """
+    ax1, ax2, ax3 = axes
+    p1 = mesh.shape[ax1]
+    p2 = mesh.shape[ax2]
+    p3 = mesh.shape[ax3]
+    n1, n2 = A.shape
+    if n1 % p1 or n2 % (p2 * p3) or n2 % p2 or r % p3:
+        raise ValueError(f"shape ({n1},{n2},r={r}) not divisible by grid "
+                         f"({p1},{p2},{p3})")
+
+    blk_rows = n2 // p2   # Omega block rows  (contraction dim)
+    blk_cols = r // p3    # Omega block cols
+
+    def body(a_blk):
+        j = jax.lax.axis_index(ax2)
+        k = jax.lax.axis_index(ax3)
+        # All-Gather A_ij over the p3 fiber (tiled along columns).
+        if p3 == 1:
+            a_ij = a_blk                      # regime-1 grids: no collective
+        else:
+            a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
+        # Regenerate Omega_jk locally — zero communication.
+        om = omega_tile(seed, j * blk_rows, k * blk_cols,
+                        blk_rows, blk_cols, kind, a_ij.dtype)
+        if scale is not None:
+            om = om * jnp.asarray(scale, a_ij.dtype)
+        b_partial = jnp.matmul(a_ij, om, precision=precision)
+        # Reduce-Scatter B_ik over the p2 fiber (tiled along rows).
+        if p2 == 1:
+            return b_partial
+        return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
+                                    tiled=True)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=P(ax1, (ax2, ax3)),
+        out_specs=P((ax1, ax2), ax3))
+    return fn(A)
+
+
+def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
+                     kind: str = "normal", devices=None):
+    """Alg. 1 with the paper's §4.3 optimal grid chosen automatically."""
+    devices = devices if devices is not None else jax.devices()
+    P_procs = P_procs or len(devices)
+    n1, n2 = A.shape
+    g: MatmulGrid = select_matmul_grid(n1, n2, r, P_procs)
+    mesh = make_grid_mesh(g.p1, g.p2, g.p3, devices=devices)
+    A = jax.device_put(A, input_sharding(mesh))
+    return rand_matmul(A, seed, r, mesh, kind=kind), g, mesh
+
+
+# ---------------------------------------------------------------------------
+# The anti-pattern, for the Fig.-3 comparison: communicate Omega instead of
+# regenerating it.  Only rank (j==0, k==0) "owns" Omega; everyone else
+# receives it via All-Gather over (p2, p3) fibers.
+# ---------------------------------------------------------------------------
+
+def rand_matmul_communicating(A, seed: int, r: int, mesh: Mesh,
+                              axes: Tuple[str, str, str] = DEFAULT_AXES,
+                              kind: str = "normal"):
+    """Baseline that COMMUNICATES Omega (paper Fig. 3's losing strategy).
+
+    Omega starts distributed over the full mesh (one copy in the system) and
+    is all-gathered by every processor before the local GEMM.  Same result,
+    strictly more communication; used by benchmarks/bench_comm_vs_gen.py.
+    """
+    ax1, ax2, ax3 = axes
+    p1, p2, p3 = (mesh.shape[a] for a in axes)
+    n1, n2 = A.shape
+
+    # Build Omega once, sharded across the whole mesh (the "one copy").
+    om_global = omega_tile(seed, 0, 0, n2, r, kind, A.dtype)
+    om_sharding = NamedSharding(mesh, P((ax1, ax2, ax3), None))
+    om_global = jax.device_put(om_global, om_sharding)
+
+    blk_rows = n2 // p2
+    blk_cols = r // p3
+
+    def body(a_blk, om_blk):
+        j = jax.lax.axis_index(ax2)
+        k = jax.lax.axis_index(ax3)
+        a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
+        # Omega arrives over the network instead of being regenerated:
+        om_full = jax.lax.all_gather(om_blk, (ax1, ax2, ax3), axis=0,
+                                     tiled=True)
+        om = jax.lax.dynamic_slice(
+            om_full, (j * blk_rows, k * blk_cols), (blk_rows, blk_cols))
+        b_partial = a_ij @ om
+        if p2 == 1:
+            return b_partial
+        return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
+                                    tiled=True)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax1, (ax2, ax3)), P((ax1, ax2, ax3), None)),
+        out_specs=P((ax1, ax2), ax3))
+    return fn(A, om_global)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, Pipeline, data_config_for, make_batch  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the sketch GEMM with
+in-VMEM Omega generation (HBM-level analogue of regenerate-don't-communicate).
+Validated in interpret mode on CPU; targeted at TPU MXU tiling."""
+from .ops import (  # noqa: F401
+    gen_omega, nystrom_fused, sketch_matmul, sketch_t_matmul,
+)
+from .sketch_matmul import (  # noqa: F401
+    gen_omega_pallas, sketch_matmul_pallas, sketch_t_matmul_pallas,
+)
+from . import ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Public jit'd wrappers around the Pallas sketch kernels.
+
+Handles arbitrary (non-block-aligned) shapes by zero-padding A up to block
+multiples (zero rows of A contribute nothing to B; zero *columns* of A would
+pair with extra Omega rows, so the contraction dim must instead clamp the
+generated Omega — we pad the contraction with zeros in A AND generate the
+padded Omega rows anyway: zero x anything = 0, so the result is exact).
+Block sizes default to MXU-aligned values for the TPU target; interpret=True
+executes the kernel body in Python on CPU for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sketch_matmul import (
+    gen_omega_pallas,
+    sketch_matmul_pallas,
+    sketch_t_matmul_pallas,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("r", "bm", "bn", "bk", "kind",
+                                             "salt", "interpret", "seed"))
+def sketch_matmul(A, *, seed: int, r: int,
+                  bm: int = 256, bn: int = 128, bk: int = 512,
+                  kind: str = "normal", salt: int = 0,
+                  interpret: bool = False):
+    """B = A @ Omega(n2, r) with in-kernel Omega generation; any shape."""
+    n1, n2 = A.shape
+    bm_ = min(bm, _round_up(n1, 8))
+    bn_ = min(bn, _round_up(r, 8))
+    bk_ = min(bk, _round_up(n2, 8))
+    n1p, n2p, rp = _round_up(n1, bm_), _round_up(n2, bk_), _round_up(r, bn_)
+    Ap = jnp.pad(A, ((0, n1p - n1), (0, n2p - n2)))
+    # NOTE: padded contraction rows of Omega multiply zero columns of A.
+    # Padded output columns [r:rp] are generated but sliced away.
+    Bp = sketch_matmul_pallas(Ap, seed, rp, bm=bm_, bn=bn_, bk=bk_,
+                              kind=kind, salt=salt, interpret=interpret)
+    return Bp[:n1, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "bm", "bn", "bk", "kind",
+                                             "salt", "interpret", "seed"))
+def sketch_t_matmul(B, *, seed: int, r: int,
+                    bm: int = 128, bn: int = 128, bk: int = 512,
+                    kind: str = "normal", salt: int = 0,
+                    interpret: bool = False):
+    """C = Omega(n, r)^T @ B with in-kernel Omega generation; any shape.
+
+    CAUTION: the contraction dim (rows of B / rows of Omega) must not be
+    padded with generated Omega rows against zero B rows — zeros kill them,
+    so padding is exact here too.
+    """
+    n, r2 = B.shape
+    bm_ = min(bm, _round_up(r, 8))
+    bn_ = min(bn, _round_up(r2, 8))
+    bk_ = min(bk, _round_up(n, 8))
+    np_, r2p, rp = _round_up(n, bk_), _round_up(r2, bn_), _round_up(r, bm_)
+    Bp = jnp.pad(B, ((0, np_ - n), (0, r2p - r2)))
+    Cp = sketch_t_matmul_pallas(Bp, seed, rp, bm=bm_, bn=bn_, bk=bk_,
+                                kind=kind, salt=salt, interpret=interpret)
+    return Cp[:r, :r2]
+
+
+@functools.partial(jax.jit, static_argnames=("n2", "r", "br", "bc", "kind",
+                                             "salt", "interpret", "seed",
+                                             "dtype"))
+def gen_omega(*, seed: int, n2: int, r: int, br: int = 256, bc: int = 128,
+              kind: str = "normal", salt: int = 0, dtype=jnp.float32,
+              interpret: bool = False):
+    """Materialize Omega via the kernel's generator (oracle parity checks)."""
+    br_ = min(br, _round_up(n2, 8))
+    bc_ = min(bc, _round_up(r, 8))
+    n2p, rp = _round_up(n2, br_), _round_up(r, bc_)
+    om = gen_omega_pallas(seed, n2p, rp, br=br_, bc=bc_, kind=kind,
+                          salt=salt, dtype=dtype, interpret=interpret)
+    return om[:n2, :r]
+
+
+def nystrom_fused(A, *, seed: int, r: int, kind: str = "normal",
+                  interpret: bool = False, **blocks):
+    """(B, C) of the Nyström pair with Omega never materialized in HBM:
+    B = A·Omega via the fused kernel, then C = Omega^T·B likewise."""
+    B = sketch_matmul(A, seed=seed, r=r, kind=kind, interpret=interpret,
+                      **{k: v for k, v in blocks.items()
+                         if k in ("bm", "bn", "bk")})
+    C = sketch_t_matmul(B, seed=seed, r=r, kind=kind, interpret=interpret)
+    return B, C

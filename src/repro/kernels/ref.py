@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The Omega construction calls the *same* Philox helpers as the kernel bodies,
+keyed by global coordinates, so oracle and kernel agree bitwise on Omega;
+results agree to float accumulation order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def omega_ref(seed: int, n2: int, r: int, kind: str = "normal",
+              salt: int = 0, dtype=jnp.float32):
+    key0 = jnp.uint32(seed & 0xFFFFFFFF)
+    key1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+    z = jnp.uint32(0)
+    if kind == "normal":
+        om = rng.philox_normal_grid(key0, key1, z, z, n2, r, salt)
+    elif kind == "uniform":
+        om = rng.philox_uniform_grid(key0, key1, z, z, n2, r, salt)
+    elif kind == "rademacher":
+        u = rng.philox_uniform_grid(key0, key1, z, z, n2, r, salt)
+        om = jnp.where(u < 0.5, jnp.float32(-1), jnp.float32(1))
+    else:
+        raise ValueError(kind)
+    return om.astype(dtype)
+
+
+def sketch_matmul_ref(A, seed: int, r: int, kind: str = "normal",
+                      salt: int = 0, out_dtype=None):
+    """B = A @ Omega, f32 accumulation."""
+    n2 = A.shape[-1]
+    om = omega_ref(seed, n2, r, kind, salt)
+    out = jnp.matmul(A.astype(jnp.float32), om)
+    return out.astype(out_dtype or A.dtype)
+
+
+def sketch_t_matmul_ref(B, seed: int, r: int, kind: str = "normal",
+                        salt: int = 0, out_dtype=None):
+    """C = Omega^T @ B, f32 accumulation; Omega is (n x r)."""
+    n = B.shape[0]
+    om = omega_ref(seed, n, r, kind, salt)
+    out = jnp.matmul(om.T, B.astype(jnp.float32))
+    return out.astype(out_dtype or B.dtype)

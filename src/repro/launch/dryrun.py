@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell against
+# ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, and
+# emit the roofline terms consumed by EXPERIMENTS.md.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+#       --shape train_4k --mesh single --save-hlo /tmp/hlo
+# ---------------------------------------------------------------------------
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, get_config, get_shape, skip_reason,
+                           ALL_SHAPES)
+from repro.configs.base import RunConfig
+from repro.models import get_api, input_specs
+from repro.models.api import count_params_split, count_active_params, model_flops
+from repro.optim.adamw import AdamWState
+from repro.parallel.sharding import (batch_shardings, cache_shardings,
+                                     make_shard_ctx, param_shardings)
+from repro.roofline.analysis import analyze_compiled, format_table
+from repro.serve.engine import serve_prefill
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+from repro.launch.mesh import data_axes, make_production_mesh, mesh_chips
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  kv_chunk: int = 1024):
+    """Lower one cell; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    daxes = data_axes(mesh)
+    da = daxes if len(daxes) > 1 else daxes[0]
+    ctx = make_shard_ctx(mesh, daxes)
+    api = get_api(cfg)
+
+    params_shapes = jax.eval_shape(lambda: api.init(jax.random.key(0), cfg))
+    p_shard = param_shardings(params_shapes, mesh)
+    n_total, _ = count_params_split(cfg, params_shapes)
+    n_active = count_active_params(cfg, params_shapes)
+    specs = input_specs(cfg, shape)
+    meta = dict(arch=arch, shape=shape_name,
+                mesh="multi_pod" if multi_pod else "single_pod",
+                chips=mesh_chips(mesh), n_params=n_total,
+                n_active_params=n_active,
+                model_flops=model_flops(cfg, shape, n_total, n_active))
+
+    if shape.kind == "train":
+        run = RunConfig(remat=True)
+        state_shapes = TrainState(
+            params=params_shapes,
+            opt=AdamWState(
+                m=jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                    params_shapes),
+                v=jax.tree_util.tree_map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                    params_shapes),
+                count=jax.ShapeDtypeStruct((), jnp.int32)),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            error_fb=None)
+        state_shardings = TrainState(
+            params=p_shard,
+            opt=AdamWState(m=p_shard, v=p_shard, count=_replicated(mesh)),
+            step=_replicated(mesh), error_fb=None)
+        b_shard = batch_shardings(specs, mesh, da)
+        train_step = make_train_step(api, cfg, run, ctx)
+        metric_shardings = {k: _replicated(mesh)
+                            for k in ("loss", "grad_norm", "lr")}
+        fn = jax.jit(train_step,
+                     in_shardings=(state_shardings, b_shard),
+                     out_shardings=(state_shardings, metric_shardings))
+        lowered = fn.lower(state_shapes, specs)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        b_shard = batch_shardings(specs, mesh, da)
+
+        def prefill_fn(params, batch):
+            return serve_prefill(params, cfg, batch, ctx=ctx,
+                                 max_len=shape.seq_len, remat=True)
+
+        fn = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+        lowered = fn.lower(params_shapes, specs)
+        return lowered, meta
+
+    # decode
+    cache_shard = cache_shardings(specs["cache"], mesh, da)
+    tok_shard = batch_shardings(specs["token"], mesh, da)
+
+    def decode_fn(params, token, cache, pos):
+        return api.decode_step(params, cfg, token, cache, pos, ctx=ctx)
+
+    # the cache is donated: decode updates it in place (without donation
+    # every step copies the full multi-GB cache into fresh output buffers)
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_shard, tok_shard, cache_shard,
+                               _replicated(mesh)),
+                 out_shardings=(None, cache_shard),
+                 donate_argnums=(2,))
+    lowered = fn.lower(params_shapes, specs["token"], specs["cache"],
+                       specs["pos"])
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: str = None, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    reason = skip_reason(cfg, shape)
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    cell_id = f"{arch}|{shape_name}|{mesh_name}"
+    if reason:
+        print(f"[dryrun] {cell_id}: {reason}")
+        return {"cell": cell_id, "arch": arch, "shape": shape_name,
+                "mesh": mesh_name, "skip": reason}
+
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowered(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        print(f"[dryrun] {cell_id} memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        print(f"[dryrun] {cell_id} cost_analysis: "
+              f"flops={ca.get('flops', 0):.4g} "
+              f"bytes={ca.get('bytes accessed', 0):.4g}")
+
+        hlo_text = compiled.as_text()
+        if save_hlo:
+            os.makedirs(save_hlo, exist_ok=True)
+            fname = os.path.join(save_hlo, cell_id.replace("|", "__") + ".hlo")
+            with open(fname, "w") as f:
+                f.write(hlo_text)
+
+        terms = analyze_compiled(cell_id, compiled, meta["chips"],
+                                 model_flops=meta["model_flops"],
+                                 hlo_text=hlo_text)
+        rec = dict(meta)
+        rec.update(terms.to_dict())
+        rec["cell"] = cell_id
+        rec["t_lower_s"] = round(t_lower, 1)
+        rec["t_compile_s"] = round(t_compile, 1)
+        try:
+            rec["per_device_bytes"] = {
+                "args": mem.argument_size_in_bytes,
+                "output": mem.output_size_in_bytes,
+                "temp": mem.temp_size_in_bytes,
+                "alias": mem.alias_size_in_bytes,
+            }
+        except AttributeError:
+            rec["per_device_bytes"] = str(mem)
+        if verbose:
+            print(f"[dryrun] {cell_id}: OK  "
+                  f"t_c={terms.t_compute:.3e}s t_m={terms.t_memory:.3e}s "
+                  f"t_l={terms.t_collective:.3e}s "
+                  f"bottleneck={terms.bottleneck} "
+                  f"useful={terms.useful_ratio} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        return rec
+    except Exception as e:  # noqa: BLE001 — report and continue the sweep
+        traceback.print_exc()
+        return {"cell": cell_id, "arch": arch, "shape": shape_name,
+                "mesh": mesh_name, "error": f"{type(e).__name__}: {e}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = ([s.name for s in ALL_SHAPES] if args.shape == "all"
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    with open(args.out, "a") as f:
+        for multi in meshes:
+            for arch in archs:
+                for shape in shapes:
+                    rec = run_cell(arch, shape, multi,
+                                   save_hlo=args.save_hlo)
+                    results.append(rec)
+                    f.write(json.dumps(rec, default=str) + "\n")
+                    f.flush()
+
+    ok = [r for r in results if "error" not in r and "skip" not in r]
+    skipped = [r for r in results if "skip" in r]
+    failed = [r for r in results if "error" in r]
+    print(f"\n[dryrun] {len(ok)} ok, {len(skipped)} documented skips, "
+          f"{len(failed)} FAILED")
+    for r in failed:
+        print("  FAIL", r["cell"], r["error"])
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

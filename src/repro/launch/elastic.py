@@ -1,0 +1,53 @@
+"""Elastic scaling: resume a checkpoint onto a DIFFERENT device count/mesh.
+
+Checkpoints are mesh-agnostic (logical arrays), so elasticity is:
+  1. build the new mesh from the surviving device set,
+  2. recompute shardings for the same param pytree on the new mesh,
+  3. ``ckpt.restore(..., shardings=new)`` re-places every leaf,
+  4. rescale gradient accumulation so the global batch is preserved
+     (global_batch = dp_size * per_device_batch * accum_steps).
+
+Exercised by tests/test_fault_tolerance.py on 8->4 fake devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import ckpt
+from repro.parallel.sharding import param_shardings
+
+
+def remesh(devices, dp: int, tp: int, axis_names=("data", "model")) -> Mesh:
+    devs = np.asarray(devices[: dp * tp]).reshape(dp, tp)
+    return Mesh(devs, axis_names)
+
+
+def elastic_restore(directory: str, state_template, *, mesh: Mesh,
+                    model_axis: str = "model",
+                    step: Optional[int] = None):
+    """Restore a TrainState onto ``mesh`` (any device count)."""
+    from repro.optim.adamw import AdamWState
+    from repro.train.state import TrainState
+    p_shard = param_shardings(state_template.params, mesh, model_axis)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = TrainState(
+        params=p_shard,
+        opt=AdamWState(m=p_shard, v=p_shard, count=repl),
+        step=repl,
+        error_fb=(jax.tree_util.tree_map(lambda _: repl,
+                                         state_template.error_fb)
+                  if state_template.error_fb is not None else None))
+    return ckpt.restore(directory, state_template, step=step,
+                        shardings=shardings)
+
+
+def rescale_accum(global_batch: int, per_device_batch: int,
+                  dp_size: int) -> Tuple[int, int]:
+    """(accum_steps, effective_global_batch) preserving the global batch."""
+    denom = per_device_batch * dp_size
+    accum = max(1, global_batch // denom)
+    return accum, accum * denom

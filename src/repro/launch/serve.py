@@ -1,0 +1,49 @@
+"""Serving driver: batched decoding with the continuous-batching-lite
+scheduler.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
+      --requests 6 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_api
+from repro.serve.engine import BatchedServer, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+
+    server = BatchedServer(params, cfg, slots=args.slots,
+                           max_len=args.max_len, eos=-1)
+    for i in range(args.requests):
+        server.submit(Request(rid=i, prompt=[2 + i, 5, 7],
+                              max_new=args.max_new))
+    t0 = time.time()
+    server.run()
+    dt = time.time() - t0
+    done = args.requests
+    print(f"[serve] {done} requests on {args.slots} slots in {dt:.1f}s")
+    return server
+
+
+if __name__ == "__main__":
+    main()

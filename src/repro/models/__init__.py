@@ -1,0 +1,5 @@
+"""Model zoo: all assigned architecture families in raw JAX."""
+from . import (api, attention, common, ffn, mamba_lm, ssm, transformer,
+               whisper, zamba)  # noqa: F401
+from .api import ModelAPI, get_api, input_specs, model_flops  # noqa: F401
+from .common import ShardCtx, NULL_CTX, count_params  # noqa: F401

@@ -1,0 +1,147 @@
+"""Uniform model API across families + ShapeDtypeStruct input specs.
+
+Every family exposes:
+  init(key, cfg) -> params
+  loss(params, cfg, batch, ctx, remat) -> scalar
+  init_cache(cfg, batch, max_len) -> cache pytree
+  decode_step(params, cfg, token, cache, pos, ctx) -> (logits, cache)
+  (dense/moe/vlm also expose prefill)
+
+``input_specs(cfg, shape)`` returns the ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — exactly what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import mamba_lm, transformer, whisper, zamba
+from .common import NULL_CTX
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+    prefill: Optional[Callable] = None
+
+
+def _vlm_loss(params, cfg, batch, *, ctx=NULL_CTX, remat=True):
+    return transformer.lm_loss(params, cfg, batch, ctx=ctx, remat=remat)
+
+
+_FAMILIES: Dict[str, ModelAPI] = {
+    "dense": ModelAPI(transformer.lm_init, transformer.lm_loss,
+                      transformer.init_cache, transformer.decode_step,
+                      transformer.prefill),
+    "moe": ModelAPI(transformer.lm_init, transformer.lm_loss,
+                    transformer.init_cache, transformer.decode_step,
+                    transformer.prefill),
+    "vlm": ModelAPI(transformer.lm_init, _vlm_loss,
+                    transformer.init_cache, transformer.decode_step,
+                    transformer.prefill),
+    "ssm": ModelAPI(mamba_lm.mamba_lm_init, mamba_lm.mamba_lm_loss,
+                    mamba_lm.mamba_lm_init_cache,
+                    mamba_lm.mamba_lm_decode_step),
+    "hybrid": ModelAPI(zamba.hybrid_init, zamba.hybrid_loss,
+                       zamba.hybrid_init_cache, zamba.hybrid_decode_step),
+    "encdec": ModelAPI(whisper.encdec_init, whisper.encdec_loss,
+                       whisper.encdec_init_cache, whisper.encdec_decode_step),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    train/prefill: the token batch (+ stub frontend features);
+    decode: one new token + the KV/state cache at seq_len + position.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            nf = cfg.num_frontend_tokens
+            batch = {
+                "tokens": _sds((B, S - nf), i32),
+                "labels": _sds((B, S - nf), i32),
+                "frontend_feats": _sds((B, nf, cfg.frontend_dim),
+                                       jnp.float32),
+            }
+        elif cfg.family == "encdec":
+            batch = {
+                "frames": _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32),
+                "tokens": _sds((B, S), i32),
+                "labels": _sds((B, S), i32),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), i32),
+                     "labels": _sds((B, S), i32)}
+        if shape.kind == "prefill":
+            batch.pop("labels", None)
+        return batch
+
+    # decode: one token against a cache of length S
+    api = get_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    return {
+        "token": _sds((B, 1), i32),
+        "cache": cache,
+        "pos": _sds((), i32),
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                n_params: Optional[int] = None,
+                n_active_params: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train;
+    2·N·D for inference-type shapes (forward only)."""
+    N = n_active_params or n_params or 0
+    D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * N * D
+
+
+def count_params_split(cfg: ModelConfig, params_shapes):
+    """(total, expert) param counts from a shape pytree (no allocation)."""
+    total = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    for path, leaf in flat:
+        name = "/".join(str(p) for p in path)
+        sz = 1
+        for s in leaf.shape:
+            sz *= int(s)
+        if cfg.n_experts and "moe" in name and any(
+                w in name for w in ("w_gate", "w_up", "w_down")):
+            expert += sz
+        else:
+            total += sz
+    return total + expert, expert
+
+
+def count_active_params(cfg: ModelConfig, params_shapes) -> int:
+    """Active params per token: MoE experts count at top_k/E weight."""
+    total, expert = count_params_split(cfg, params_shapes)
+    if cfg.n_experts:
+        return int(total - expert + expert * cfg.top_k / cfg.n_experts)
+    return int(total)

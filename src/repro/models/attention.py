@@ -1,0 +1,280 @@
+"""Attention: GQA/MQA/MHA with chunked (flash-style) softmax, sliding
+windows, gemma-2 softcaps, KV-cache decode, and Nyström landmark attention
+(the paper's two-product structure applied to the attention kernel matrix).
+
+The chunked implementation scans over KV chunks with an online softmax, so
+the (S x S) score matrix never materializes — required for the 32k-prefill
+dry-run cells to fit HBM.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, NULL_CTX, dense_init, matmul, softcap, apply_rope
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray   # (d, Hq*D)
+    wk: jnp.ndarray   # (d, Hk*D)
+    wv: jnp.ndarray   # (d, Hk*D)
+    wo: jnp.ndarray   # (Hq*D, d)
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, dtype) -> AttnParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(k1, d_model, n_heads * head_dim, dtype),
+        wk=dense_init(k2, d_model, n_kv_heads * head_dim, dtype),
+        wv=dense_init(k3, d_model, n_kv_heads * head_dim, dtype),
+        wo=dense_init(k4, n_heads * head_dim, d_model,
+                      dtype, scale=1.0 / math.sqrt(n_heads * head_dim)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked softmax attention core
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                      window=None, attn_softcap: float = 0.0,
+                      kv_chunk: int = 1024, scale: Optional[float] = None,
+                      remat_chunks: bool = True):
+    """Online-softmax attention.
+
+    q: (B, S, Hk, G, D) — grouped query heads; k, v: (B, T, Hk, D).
+    q_pos: (S,), k_pos: (T,) absolute positions for masking.
+    window: None for full attention, or a python/traced int — key j is
+    visible to query i iff  0 <= pos_i - pos_j < window  (plus causality).
+    Returns (B, S, Hk, G, D).
+    """
+    B, S, Hk, G, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kv_chunk = min(kv_chunk, T)
+    n_chunks = (T + kv_chunk - 1) // kv_chunk
+    Tp = n_chunks * kv_chunk
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, Tp - T), constant_values=jnp.iinfo(jnp.int32).max // 2)
+
+    kc = k.reshape(B, n_chunks, kv_chunk, Hk, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hk, D).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, kv_chunk)
+
+    # HBM-traffic optimization (EXPERIMENTS.md §Perf): for bf16 models the
+    # (B,S,H,G,c) score/probability tensors — the dominant HBM traffic of
+    # this lowering — are STORED in bf16 (softmax statistics m/l and the
+    # output accumulator stay f32).  f32 inputs keep the exact f32 path.
+    store_dt = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+    qf = (q.astype(jnp.float32) * scale).astype(store_dt)
+
+    NEG = jnp.float32(-3e9)      # additive mask bias; see note below
+
+    def step(carry, xs):
+        m, l, acc = carry                     # m,l: (B,S,Hk,G); acc: +D
+        k_c, v_c, p_c = xs                    # (B,c,Hk,D), (B,c,Hk,D), (c,)
+        s = jnp.einsum("bshgd,bchd->bshgc", qf, k_c.astype(store_dt),
+                       preferred_element_type=store_dt)
+        sf = s.astype(jnp.float32)
+        if attn_softcap:
+            sf = jnp.tanh(sf / attn_softcap) * attn_softcap
+        mask = jnp.ones((S, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= p_c[None, :]
+        if window is not None:
+            dist = q_pos[:, None] - p_c[None, :]
+            mask &= (dist < window) & (dist >= 0 if not causal else True)
+        # masking as an ADDITIVE bias folded into the exp: masked entries
+        # get s-3e9 while m_safe is clamped to >= -1e9, so exp underflows
+        # to exactly 0 — no score-sized where/select passes (two fewer
+        # full-tensor HBM streams per chunk than the where() formulation).
+        bias = jnp.where(mask, 0.0, NEG)[None, :, None, None, :]
+        sf = sf + bias
+        m_new = jnp.maximum(m, sf.max(axis=-1))
+        m_safe = jnp.maximum(m_new, -1e9)
+        p = jnp.exp(sf - m_safe[..., None])
+        corr = jnp.exp(m - m_safe)            # m0 = -inf -> corr = 0
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(store_dt), v_c.astype(store_dt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hk, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hk, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hk, G, D), jnp.float32)
+    # remat each kv-chunk step: without it, AD saves the per-chunk f32
+    # score/probability tensors stacked over chunks — the single largest
+    # HBM stream of the train lowering (EXPERIMENTS.md §Perf, llama3).
+    step_fn = jax.checkpoint(step) if remat_chunks else step
+    (m, l, acc), _ = jax.lax.scan(step_fn, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention(params: AttnParams, x, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, positions=None, causal: bool = True,
+              window=None, attn_softcap: float = 0.0,
+              rope_theta: float = 1e4, use_rope: bool = True,
+              kv_chunk: int = 1024, ctx: ShardCtx = NULL_CTX,
+              xkv=None, kv_positions=None):
+    """Standard attention layer over (B, S, d). ``xkv`` enables
+    cross-attention (keys/values from the encoder stream)."""
+    B, S, d = x.shape
+    Hq, Hk, D = n_heads, n_kv_heads, head_dim
+    G = Hq // Hk
+    src = x if xkv is None else xkv
+    T = src.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = (positions if xkv is None
+                        else jnp.arange(T, dtype=jnp.int32))
+
+    q = matmul(x, params.wq).reshape(B, S, Hk, G, D)
+    k = matmul(src, params.wk).reshape(B, T, Hk, D)
+    v = matmul(src, params.wv).reshape(B, T, Hk, D)
+    if use_rope:
+        qr = q.reshape(B, S, Hk * G, D)
+        qr = apply_rope(qr, positions[None, :], rope_theta)
+        q = qr.reshape(B, S, Hk, G, D)
+        k = apply_rope(k, kv_positions[None, :], rope_theta)
+    if ctx.mesh is not None:
+        # kv-heads over the model axis; grouped q heads follow their kv head
+        q = ctx.constrain(q, jax.sharding.PartitionSpec(
+            ctx.data, None, ctx.model, None, None))
+        k = ctx.act_bthd(k)
+        v = ctx.act_bthd(v)
+
+    out = chunked_attention(q, k, v, positions, kv_positions, causal=causal,
+                            window=window, attn_softcap=attn_softcap,
+                            kv_chunk=kv_chunk)
+    out = out.reshape(B, S, Hq * D)
+    y = matmul(out, params.wo)
+    return ctx.act_btd(y)
+
+
+# ---------------------------------------------------------------------------
+# decode step against a KV cache
+# ---------------------------------------------------------------------------
+
+def attention_decode(params: AttnParams, x, cache_k, cache_v, pos, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     window=None, attn_softcap: float = 0.0,
+                     rope_theta: float = 1e4, use_rope: bool = True,
+                     ctx: ShardCtx = NULL_CTX):
+    """One-token decode. x: (B, 1, d); cache_k/v: (B, T, Hk, D) with a ring
+    layout when ``window`` is set (cache length == window).  ``pos``:
+    scalar int32, absolute position of the new token.
+    Returns (y, new_cache_k, new_cache_v)."""
+    B, _, d = x.shape
+    Hq, Hk, D = n_heads, n_kv_heads, head_dim
+    G = Hq // Hk
+    T = cache_k.shape[1]
+
+    q = matmul(x, params.wq).reshape(B, 1, Hk, G, D)
+    k = matmul(x, params.wk).reshape(B, 1, Hk, D)
+    v = matmul(x, params.wv).reshape(B, 1, Hk, D)
+    posv = jnp.full((1,), pos, jnp.int32)
+    if use_rope:
+        qr = apply_rope(q.reshape(B, 1, Hq, D), posv[None, :], rope_theta)
+        q = qr.reshape(B, 1, Hk, G, D)
+        k = apply_rope(k, posv[None, :], rope_theta)
+
+    slot = pos % T if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+
+    # absolute positions stored in each cache slot
+    idx = jnp.arange(T, dtype=jnp.int32)
+    if window is not None:
+        # ring: slot i holds position  i + T*floor((pos-i)/T) pattern;
+        # equivalently the largest value <= pos congruent to i mod T
+        k_pos = pos - ((pos - idx) % T)
+    else:
+        k_pos = idx
+    valid = (k_pos <= pos) & (k_pos >= 0)
+    if window is not None:
+        valid &= (pos - k_pos) < window
+
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bshgd,bchd->bshgc", qf, cache_k.astype(jnp.float32))
+    if attn_softcap:
+        s = jnp.tanh(s / attn_softcap) * attn_softcap
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bshgc,bchd->bshgd", p, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, Hq * D).astype(x.dtype)
+    y = matmul(out, params.wo)
+    return ctx.act_btd(y), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Nyström landmark attention (paper technique -> sub-quadratic attention)
+# ---------------------------------------------------------------------------
+
+def nystrom_attention(params: AttnParams, x, *, n_heads: int,
+                      n_kv_heads: int, head_dim: int, n_landmarks: int = 64,
+                      rope_theta: float = 1e4, use_rope: bool = True,
+                      ctx: ShardCtx = NULL_CTX, pinv_iters: int = 6):
+    """Nyströmformer-style attention: the softmax kernel matrix
+    K = softmax(QK^T) is approximated as  F · A† · Bm  — structurally the
+    paper's Nyström pair (two sketched products + a small core inverse),
+    with landmark means playing the role of the sketch.  O(S·m) time/memory.
+
+    Non-causal (used for the hybrid arch's shared attention blocks on
+    long-context cells; see DESIGN.md §Arch-applicability)."""
+    B, S, d = x.shape
+    Hq, Hk, D = n_heads, n_kv_heads, head_dim
+    G = Hq // Hk
+    m = min(n_landmarks, S)
+    assert S % m == 0, (S, m)
+
+    q = matmul(x, params.wq).reshape(B, S, Hq, D)
+    k = matmul(x, params.wk).reshape(B, S, Hk, D)
+    v = matmul(x, params.wv).reshape(B, S, Hk, D)
+    if use_rope:
+        pos = jnp.arange(S, dtype=jnp.int32)
+        q = apply_rope(q, pos[None, :], rope_theta)
+        k = apply_rope(k, pos[None, :], rope_theta)
+    # expand kv heads to query heads
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    kf = k.astype(jnp.float32)
+    # landmarks: segment means (sketching Q and K with a fixed averaging
+    # matrix — a structured Omega)
+    q_l = qf.reshape(B, m, S // m, Hq, D).mean(axis=2)
+    k_l = kf.reshape(B, m, S // m, Hq, D).mean(axis=2)
+
+    F = jax.nn.softmax(jnp.einsum("bshd,bmhd->bhsm", qf, k_l), axis=-1)
+    A = jax.nn.softmax(jnp.einsum("bmhd,bnhd->bhmn", q_l, k_l), axis=-1)
+    Bm = jax.nn.softmax(jnp.einsum("bmhd,bshd->bhms", q_l, kf), axis=-1)
+
+    # iterative Moore-Penrose pseudoinverse of the (m x m) core
+    I = jnp.eye(m, dtype=jnp.float32)
+    a1 = A.sum(-1).max(-1)[..., None, None]
+    a2 = A.sum(-2).max(-1)[..., None, None]
+    Z = A.swapaxes(-1, -2) / (a1 * a2)
+    def mp(Z, _):
+        AZ = A @ Z
+        Z = 0.25 * Z @ (13 * I - AZ @ (15 * I - AZ @ (7 * I - AZ)))
+        return Z, None
+    Z, _ = jax.lax.scan(mp, Z, None, length=pinv_iters)
+
+    out = F @ Z @ jnp.einsum("bhms,bshd->bhmd", Bm, v.astype(jnp.float32))
+    # out: (B, H, S, D)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * D).astype(x.dtype)
+    y = matmul(out, params.wo)
+    return ctx.act_btd(y)

@@ -1,0 +1,238 @@
+"""Shared model building blocks (raw JAX pytrees, no framework deps).
+
+Conventions:
+  * params are nested dicts of jnp arrays; per-layer params are stacked
+    along a leading L axis so the layer stack runs under ``jax.lax.scan``
+    (one trace per unique block — keeps dry-run compile time and HLO size
+    bounded for 48-layer models).
+  * compute dtype is the param dtype (bf16 on the TPU target); all matmuls
+    accumulate in f32 via ``preferred_element_type``.
+  * sharding is injected via a ``ShardCtx`` of logical-axis constraints; on
+    a single device all constraints are no-ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Logical→mesh axis mapping used by with_sharding_constraint calls.
+
+    data  : batch-like dims          (mesh axes, e.g. ("pod", "data"))
+    model : tensor-parallel dims     (e.g. "model")
+    seq   : sequence-parallel dim    (usually == model axis, exclusive with
+                                      head sharding at any given point)
+    """
+    mesh: Optional[object] = None
+    data: Optional[object] = None
+    model: Optional[object] = None
+    use_sp: bool = True
+
+    def constrain(self, x, spec: P):
+        """Apply a sharding constraint, dropping spec entries that do not
+        divide the corresponding dim (production meshes are fixed powers of
+        two; models with e.g. 8 kv heads on a 16-way model axis fall back to
+        replication on that dim instead of GSPMD padding)."""
+        if self.mesh is None:
+            return x
+        fixed = []
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            fixed.append(entry if x.shape[dim] % size == 0 else None)
+        fixed += [None] * (x.ndim - len(fixed))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*fixed)))
+
+    @property
+    def data_size(self) -> int:
+        """Number of data-parallel shards (1 without a mesh)."""
+        if self.mesh is None or self.data is None:
+            return 1
+        axes = self.data if isinstance(self.data, tuple) else (self.data,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # canonical activation layouts ------------------------------------
+    def act_btd(self, x):
+        """(batch, seq, d_model) residual stream: batch over data axes and,
+        if SP is on, seq over the model axis (Megatron-SP layout)."""
+        if self.mesh is None:
+            return x
+        seq_ax = self.model if self.use_sp else None
+        return self.constrain(x, P(self.data, seq_ax, None))
+
+    def act_bthd(self, x):
+        """(batch, seq, heads, head_dim): heads over the model axis."""
+        if self.mesh is None:
+            return x
+        return self.constrain(x, P(self.data, None, self.model, None))
+
+    def act_btf(self, x):
+        """(batch, seq, d_ff): ff dim over the model axis."""
+        if self.mesh is None:
+            return x
+        return self.constrain(x, P(self.data, None, self.model))
+
+    def logits(self, x):
+        """(batch, seq, vocab): vocab over the model axis."""
+        if self.mesh is None:
+            return x
+        return self.constrain(x, P(self.data, None, self.model))
+
+
+NULL_CTX = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def matmul(x, w):
+    """bf16-safe matmul with f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}     # (1 + scale) convention
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (gemma-2)
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    xf = x.astype(jnp.float32)
+    return (jnp.tanh(xf / cap) * cap).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy_chunked(logits_fn: Callable, h, labels, vocab: int,
+                          chunk: int = 1024,
+                          final_softcap: float = 0.0,
+                          ctx: ShardCtx = NULL_CTX):
+    """Memory-bounded LM loss: computes logits per sequence chunk inside a
+    scan so the (B, S, vocab) tensor never materializes (vital for 256k
+    vocabularies at 4k seq).
+
+    ``logits_fn(h_chunk) -> (B, c, vocab)``; labels: (B, S) int32, -100 pads.
+    Returns mean NLL over non-pad tokens.
+    """
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    def one(h_c, y_c):
+        logits = logits_fn(h_c)
+        logits = softcap(logits, final_softcap)
+        logits = ctx.logits(logits)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        valid = y_c >= 0
+        y_safe = jnp.where(valid, y_c, 0)
+        picked = jnp.take_along_axis(lf, y_safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return nll.sum(), valid.sum()
+
+    if n_chunks > 0:
+        hs = h[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, -1)
+        ys = labels[:, :n_chunks * chunk].reshape(B, n_chunks, chunk)
+        def body(carry, xs):
+            h_c, y_c = xs
+            s, c = one(h_c.swapaxes(0, 0), y_c)
+            return (carry[0] + s, carry[1] + c), None
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.int32(0)),
+            (hs.swapaxes(0, 1), ys.swapaxes(0, 1)))
+    else:
+        tot, cnt = jnp.float32(0), jnp.int32(0)
+    if rem:
+        s, c = one(h[:, n_chunks * chunk:], labels[:, n_chunks * chunk:])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Param counting
+# ---------------------------------------------------------------------------
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(x.size for x in leaves))

@@ -1,0 +1,214 @@
+"""Feed-forward layers: gated-GLU dense FFN and top-k MoE with
+capacity-based dispatch (einsum form — expert axis shardable for EP)."""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ShardCtx, NULL_CTX, dense_init, matmul
+
+
+# ---------------------------------------------------------------------------
+# dense gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+class FFNParams(NamedTuple):
+    w_gate: jnp.ndarray   # (d, f)
+    w_up: jnp.ndarray     # (d, f)
+    w_down: jnp.ndarray   # (f, d)
+
+
+def ffn_init(key, d: int, f: int, dtype) -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return FFNParams(
+        w_gate=dense_init(k1, d, f, dtype),
+        w_up=dense_init(k2, d, f, dtype),
+        w_down=dense_init(k3, f, d, dtype, scale=1.0 / math.sqrt(f)),
+    )
+
+
+def ffn(params: FFNParams, x, activation: str = "silu",
+        ctx: ShardCtx = NULL_CTX):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    g = matmul(x, params.w_gate)
+    u = matmul(x, params.w_up)
+    h = act(g) * u
+    h = ctx.act_btf(h)
+    return ctx.act_btd(matmul(h, params.w_down))
+
+
+# plain 2-layer MLP (whisper)
+class MLPParams(NamedTuple):
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+
+
+def mlp_init(key, d: int, f: int, dtype) -> MLPParams:
+    k1, k2 = jax.random.split(key)
+    return MLPParams(
+        w1=dense_init(k1, d, f, dtype), b1=jnp.zeros((f,), dtype),
+        w2=dense_init(k2, f, d, dtype, scale=1.0 / math.sqrt(f)),
+        b2=jnp.zeros((d,), dtype))
+
+
+def mlp(params: MLPParams, x, ctx: ShardCtx = NULL_CTX):
+    h = jax.nn.gelu(matmul(x, params.w1) + params.b1.astype(x.dtype))
+    h = ctx.act_btf(h)
+    return ctx.act_btd(matmul(h, params.w2) + params.b2.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# top-k MoE with capacity-based dispatch (GShard/Switch einsum form)
+# ---------------------------------------------------------------------------
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray    # (d, E)
+    w_gate: jnp.ndarray    # (E, d, f)
+    w_up: jnp.ndarray      # (E, d, f)
+    w_down: jnp.ndarray    # (E, f, d)
+
+
+def moe_init(key, d: int, f: int, n_experts: int, dtype) -> MoEParams:
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    scd = 1.0 / math.sqrt(f)
+    return MoEParams(
+        router=dense_init(k0, d, n_experts, jnp.float32),  # router in f32
+        w_gate=(jax.random.normal(k1, (n_experts, d, f), jnp.float32) * sc).astype(dtype),
+        w_up=(jax.random.normal(k2, (n_experts, d, f), jnp.float32) * sc).astype(dtype),
+        w_down=(jax.random.normal(k3, (n_experts, f, d), jnp.float32) * scd).astype(dtype),
+    )
+
+
+def moe(params: MoEParams, x, *, top_k: int, capacity_factor: float = 1.25,
+        ctx: ShardCtx = NULL_CTX, return_aux: bool = False,
+        dispatch: str = "scatter"):
+    """Token-choice top-k routing with per-expert capacity.
+
+    x: (B, S, d) -> (B, S, d).  Two dispatch paths:
+
+      * ``scatter`` (default, beyond-paper optimized): tokens are scattered
+        into the (E, cap, d) expert buffers and gathered back — O(N·k·d)
+        data movement, no token-count-quadratic FLOPs.
+      * ``einsum`` (GShard-style baseline): one-hot dispatch/combine
+        einsums — O(N·E·cap·d) FLOPs, which at 1M-token batches dominates
+        the entire step (see EXPERIMENTS.md §Perf, dbrx hillclimb).
+
+    The expert (E) axis shards over the model/EP mesh axis in both paths.
+    Tokens overflowing an expert's capacity are dropped (standard
+    capacity-based semantics); the aux loss balances load to keep drops low.
+    """
+    B, S, d = x.shape
+    E = params.router.shape[1]
+    N = B * S
+    xt = x.reshape(N, d)
+
+    logits = jnp.asarray(xt, jnp.float32) @ params.router          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)              # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dispatch == "scatter":
+        # ---- grouped gather/scatter dispatch.  Tokens are grouped by DP
+        # shard (G groups); capacity/positions are PER (group, expert)
+        # bucket, so the scatter/gather are shard-local and the only
+        # cross-device movement is the canonical EP all-to-all when the
+        # (G, E, cap, d) buffer re-shards from G@data to E@model.
+        G = ctx.data_size if N % max(ctx.data_size, 1) == 0 else 1
+        n_loc = N // G
+        NK = n_loc * top_k
+        cap = max(1, int(capacity_factor * top_k * n_loc / E))
+        idx_g = gate_idx.reshape(G, NK)                            # (G,NK)
+        oh = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)             # (G,NK,E)
+        pos = jnp.cumsum(oh, axis=1) - oh
+        pos = (pos * oh).sum(-1)                                   # (G,NK)
+        keep = pos < cap
+        p_flat = jnp.where(keep, pos, cap)
+        tok_id = jnp.repeat(jnp.arange(n_loc), top_k)              # (NK,)
+        xg = xt.reshape(G, n_loc, d)
+
+        # vmap over groups => gather/scatter carry explicit batch dims that
+        # GSPMD partitions trivially along the (data-sharded) G axis
+        def disp_one(xg_g, idx_1, p_1):
+            buf = jnp.zeros((E, cap + 1, d), x.dtype)
+            return buf.at[idx_1, p_1].set(xg_g[tok_id], mode="drop")
+
+        xe = jax.vmap(disp_one)(xg, idx_g, p_flat)[:, :, :cap]
+        if ctx.mesh is not None:
+            # groups over DATA axes, experts over the MODEL axis (EP)
+            xe = ctx.constrain(xe, P(ctx.data, ctx.model, None, None))
+        gg = jnp.einsum("gecd,edf->gecf", xe, params.w_gate,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        uu = jnp.einsum("gecd,edf->gecf", xe, params.w_up,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        h = jax.nn.silu(gg) * uu
+        ye = jnp.einsum("gecf,efd->gecd", h, params.w_down,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        if ctx.mesh is not None:
+            # bring each group's expert outputs home in ONE collective (an
+            # all-gather over the model axis); the element gather below is
+            # then shard-local.  Leaving ye expert-sharded makes XLA emit
+            # per-element masked all-reduces of the full (G,NK,d) tensor —
+            # the 686s-collective pathology of §Perf round 3.
+            ye = ctx.constrain(ye, P(ctx.data, None, None, None))
+        # gather combine: y_n = sum_k gate_{nk} * ye[g, e_{nk}, p_{nk}]
+        w = (gate_vals.reshape(G, NK) * keep).astype(x.dtype)
+        p_safe = jnp.where(keep, pos, 0)
+
+        def comb_one(ye_g, idx_1, p_1, w_1):
+            picked = ye_g[idx_1, p_1]                              # (NK, d)
+            buf = jnp.zeros((n_loc, d), jnp.float32)
+            return buf.at[tok_id].add(
+                (picked * w_1[:, None]).astype(jnp.float32))
+
+        y = jax.vmap(comb_one)(ye, idx_g, p_safe, w)
+        y = y.astype(x.dtype).reshape(B, S, d)
+        onehot = oh.reshape(N, top_k, E)
+    else:
+        # ---- GShard-style one-hot einsum dispatch (baseline)
+        cap = max(1, int(capacity_factor * top_k * N / E))
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (N,k,E)
+        flat = onehot.reshape(N * top_k, E)
+        pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(
+            N, top_k, E)
+        pos_in_expert = (pos_in_expert * onehot).sum(-1)           # (N, k)
+        keep = pos_in_expert < cap
+        disp = jnp.einsum(
+            "nke,nkc->nec",
+            jax.nn.one_hot(gate_idx, E, dtype=x.dtype)
+            * keep[..., None].astype(x.dtype),
+            jax.nn.one_hot(pos_in_expert, cap, dtype=x.dtype))
+        xe = jnp.einsum("nd,nec->ecd", xt, disp)                   # (E,cap,d)
+        if ctx.mesh is not None:
+            xe = ctx.constrain(xe, P(ctx.model, ctx.data, None))
+        g = jnp.einsum("ecd,edf->ecf", xe, params.w_gate,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        u = jnp.einsum("ecd,edf->ecf", xe, params.w_up,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        h = jax.nn.silu(g) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, params.w_down,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        if ctx.mesh is not None:
+            ye = ctx.constrain(ye, P(ctx.model, ctx.data, None))
+        comb = jnp.einsum(
+            "nke,nkc,nk->nec",
+            jax.nn.one_hot(gate_idx, E, dtype=jnp.float32),
+            jax.nn.one_hot(pos_in_expert, cap, dtype=jnp.float32),
+            gate_vals * keep.astype(jnp.float32)).astype(x.dtype)
+        y = jnp.einsum("ecd,nec->nd", ye, comb).reshape(B, S, d)
+    y = ctx.act_btd(y)
+
+    if return_aux:
+        # Switch-style load-balancing loss
+        me = probs.mean(0)                                          # (E,)
+        ce = (onehot.sum(1) > 0).astype(jnp.float32).mean(0)        # (E,)
+        aux = E * jnp.sum(me * ce)
+        return y, aux
+    return y

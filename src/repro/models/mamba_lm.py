@@ -1,0 +1,89 @@
+"""Attention-free Mamba-1 LM (falcon-mamba family)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import (NULL_CTX, ShardCtx, cross_entropy_chunked, embed_init,
+                     matmul, rmsnorm, rmsnorm_init)
+from .ssm import Mamba1Params, mamba1, mamba1_init
+
+
+def mamba_lm_init(key, cfg: ModelConfig):
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [{
+        "mamba": mamba1_init(keys[i], cfg.d_model, cfg.d_inner,
+                             cfg.ssm_state, cfg.dt_rank, cfg.d_conv,
+                             dtype)._asdict(),
+        "ln": rmsnorm_init(cfg.d_model, dtype),
+    } for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "ln_final": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+def mamba_lm_hidden(params, cfg: ModelConfig, tokens, *,
+                    ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    h = params["embed"][tokens]
+    h = ctx.act_btd(h)
+
+    def body(h, blk):
+        x = rmsnorm(blk["ln"], h, cfg.norm_eps)
+        y = mamba1(Mamba1Params(**blk["mamba"]), x, d_state=cfg.ssm_state,
+                   dt_rank=cfg.dt_rank, chunk=cfg.ssm_chunk, ctx=ctx)
+        return h + y, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["blocks"])
+    return rmsnorm(params["ln_final"], h, cfg.norm_eps)
+
+
+def mamba_lm_loss(params, cfg: ModelConfig, batch, *,
+                  ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    h = mamba_lm_hidden(params, cfg, batch["tokens"], ctx=ctx, remat=remat)
+    logits_fn = lambda hc: matmul(hc, params["lm_head"].T)
+    return cross_entropy_chunked(logits_fn, h, batch["labels"], cfg.vocab,
+                                 chunk=cfg.loss_chunk, ctx=ctx)
+
+
+def mamba_lm_init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+                        dtype=None) -> Dict[str, Any]:
+    """SSM decode state is O(1) in sequence length — max_len is ignored
+    (that is the whole point of the long_500k cell for this family)."""
+    dtype = dtype or cfg.jnp_dtype
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                           cfg.d_inner), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def mamba_lm_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                         ctx: ShardCtx = NULL_CTX):
+    """Position-independent O(1) decode (pos kept for API uniformity)."""
+    del pos
+    h = params["embed"][token]
+    h = ctx.act_btd(h)
+
+    def body(h, xs):
+        blk, conv_s, ssm_s = xs
+        x = rmsnorm(blk["ln"], h, cfg.norm_eps)
+        y, cs, ss = mamba1(Mamba1Params(**blk["mamba"]), x,
+                           d_state=cfg.ssm_state, dt_rank=cfg.dt_rank,
+                           chunk=1, ctx=ctx, conv_state=conv_s,
+                           ssm_state=ssm_s, return_state=True)
+        return h + y, (cs, ss)
+
+    h, (new_conv, new_ssm) = jax.lax.scan(
+        body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+    h = rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = matmul(h, params["lm_head"].T)
+    return ctx.logits(logits), {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,249 @@
+"""State-space sequence layers: Mamba-1 (diagonal selective scan) and
+Mamba-2 (SSD, chunked scalar-decay form).
+
+Both use a chunked formulation: the sequence is processed in chunks with an
+O(1)-size carried state, so the (B, S, d_inner, N) tensor of a naive
+associative scan never materializes — necessary for the 4k-train and
+32k-prefill cells (d_inner up to 8192).  The channel/head dimension is
+sharded over the model axis (Mamba TP).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ShardCtx, NULL_CTX, dense_init, matmul, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b, state=None):
+    """x: (B, S, C); w: (K, C) depthwise; left-causal.
+    If ``state`` (B, K-1, C) is given, it is prepended (decode/chunk carry);
+    returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else state
+    return out + b[None, None, :], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+class Mamba1Params(NamedTuple):
+    in_proj: jnp.ndarray    # (d, 2*dI)
+    conv_w: jnp.ndarray     # (K, dI)
+    conv_b: jnp.ndarray     # (dI,)
+    x_proj: jnp.ndarray     # (dI, dt_rank + 2N)
+    dt_proj: jnp.ndarray    # (dt_rank, dI)
+    dt_bias: jnp.ndarray    # (dI,)
+    A_log: jnp.ndarray      # (dI, N)
+    D: jnp.ndarray          # (dI,)
+    out_proj: jnp.ndarray   # (dI, d)
+
+
+def mamba1_init(key, d: int, d_inner: int, d_state: int, dt_rank: int,
+                d_conv: int, dtype) -> Mamba1Params:
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return Mamba1Params(
+        in_proj=dense_init(ks[0], d, 2 * d_inner, dtype),
+        conv_w=(jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                / math.sqrt(d_conv)).astype(dtype),
+        conv_b=jnp.zeros((d_inner,), dtype),
+        x_proj=dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        dt_proj=dense_init(ks[3], dt_rank, d_inner, dtype),
+        dt_bias=jnp.full((d_inner,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        A_log=jnp.log(A),
+        D=jnp.ones((d_inner,), jnp.float32),
+        out_proj=dense_init(ks[4], d_inner, d, dtype,
+                            scale=1.0 / math.sqrt(d_inner)),
+    )
+
+
+def _scan_chunk_diag(h0, a, bx):
+    """h_t = a_t * h_{t-1} + bx_t within one chunk via associative scan.
+    a, bx: (B, c, C, N) f32; h0: (B, C, N). Returns (h_all, h_last)."""
+    def comb(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+    A_, Bv = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h = Bv + A_ * h0[:, None]
+    return h, h[:, -1]
+
+
+def mamba1(params: Mamba1Params, x, *, d_state: int, dt_rank: int,
+           chunk: int = 256, ctx: ShardCtx = NULL_CTX,
+           conv_state=None, ssm_state=None, return_state: bool = False):
+    """Mamba-1 block. x: (B, S, d) -> (B, S, d).
+
+    For decode, pass S=1 with ``conv_state``/``ssm_state`` and
+    ``return_state=True``.
+    """
+    B, S, d = x.shape
+    dI = params.conv_w.shape[1]
+    N = d_state
+
+    xz = matmul(x, params.in_proj)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    if ctx.mesh is not None:
+        xs = ctx.constrain(xs, P(ctx.data, None, ctx.model))
+        z = ctx.constrain(z, P(ctx.data, None, ctx.model))
+    xs, new_conv_state = causal_conv1d(xs, params.conv_w, params.conv_b,
+                                       conv_state)
+    xs = jax.nn.silu(xs)
+
+    dbc = matmul(xs, params.x_proj)
+    dt_r = dbc[..., :dt_rank]
+    Bm = dbc[..., dt_rank:dt_rank + N].astype(jnp.float32)        # (B,S,N)
+    Cm = dbc[..., dt_rank + N:].astype(jnp.float32)               # (B,S,N)
+    dt = jax.nn.softplus(
+        matmul(dt_r, params.dt_proj).astype(jnp.float32)
+        + params.dt_bias)                                          # (B,S,dI)
+    A = -jnp.exp(params.A_log)                                     # (dI,N)
+    xf = xs.astype(jnp.float32)
+
+    nc = max(1, S // chunk)
+    c = S // nc
+    assert nc * c == S, (S, chunk)
+
+    def chunk_step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * c, c, axis=1)
+        dt_c, B_c, C_c, x_c = sl(dt), sl(Bm), sl(Cm), sl(xf)
+        a = jnp.exp(dt_c[..., None] * A[None, None])               # (B,c,dI,N)
+        bx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]          # (B,c,dI,N)
+        h_all, h_last = _scan_chunk_diag(h, a, bx)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, C_c)
+        return h_last, y_c
+
+    h0 = (ssm_state if ssm_state is not None
+          else jnp.zeros((B, dI, N), jnp.float32))
+    h_last, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nc))
+    y = ys.swapaxes(0, 1).reshape(B, S, dI)
+    y = y + params.D[None, None] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = matmul(y, params.out_proj)
+    out = ctx.act_btd(out)
+    if return_state:
+        return out, new_conv_state, h_last
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+class Mamba2Params(NamedTuple):
+    in_proj: jnp.ndarray    # (d, 2*dI + 2N + H)
+    conv_w: jnp.ndarray     # (K, dI + 2N)
+    conv_b: jnp.ndarray     # (dI + 2N,)
+    A_log: jnp.ndarray      # (H,)
+    D: jnp.ndarray          # (H,)
+    dt_bias: jnp.ndarray    # (H,)
+    norm_scale: jnp.ndarray # (dI,)
+    out_proj: jnp.ndarray   # (dI, d)
+
+
+def mamba2_init(key, d: int, d_inner: int, d_state: int, n_heads: int,
+                d_conv: int, dtype) -> Mamba2Params:
+    ks = jax.random.split(key, 3)
+    conv_dim = d_inner + 2 * d_state
+    return Mamba2Params(
+        in_proj=dense_init(ks[0], d, 2 * d_inner + 2 * d_state + n_heads,
+                           dtype),
+        conv_w=(jax.random.normal(ks[1], (d_conv, conv_dim), jnp.float32)
+                / math.sqrt(d_conv)).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        D=jnp.ones((n_heads,), jnp.float32),
+        dt_bias=jnp.full((n_heads,), -4.6, jnp.float32),
+        norm_scale=jnp.zeros((d_inner,), dtype),
+        out_proj=dense_init(ks[2], d_inner, d, dtype,
+                            scale=1.0 / math.sqrt(d_inner)),
+    )
+
+
+def mamba2(params: Mamba2Params, x, *, d_state: int, n_heads: int,
+           chunk: int = 256, ctx: ShardCtx = NULL_CTX,
+           conv_state=None, ssm_state=None, return_state: bool = False):
+    """Mamba-2 / SSD block (scalar per-head decay, n_groups=1).
+
+    x: (B, S, d) -> (B, S, d).  Chunked: intra-chunk is an attention-like
+    (c x c) masked product per head; inter-chunk passes the (Pd x N) state.
+    """
+    B, S, d = x.shape
+    H = n_heads
+    N = d_state
+    dI = params.out_proj.shape[0]
+    Pd = dI // H                                        # head dim
+
+    zxbcdt = matmul(x, params.in_proj)
+    z = zxbcdt[..., :dI]
+    xbc = zxbcdt[..., dI:dI + dI + 2 * N]
+    dt_in = zxbcdt[..., -H:].astype(jnp.float32)
+    if ctx.mesh is not None:
+        z = ctx.constrain(z, P(ctx.data, None, ctx.model))
+    xbc, new_conv_state = causal_conv1d(xbc, params.conv_w, params.conv_b,
+                                        conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :dI]
+    Bm = xbc[..., dI:dI + N].astype(jnp.float32)        # (B,S,N)
+    Cm = xbc[..., dI + N:].astype(jnp.float32)          # (B,S,N)
+
+    dt = jax.nn.softplus(dt_in + params.dt_bias)        # (B,S,H)
+    A = -jnp.exp(params.A_log)                          # (H,)
+    xh = xs.astype(jnp.float32).reshape(B, S, H, Pd)
+
+    nc = max(1, S // chunk)
+    c = S // nc
+    assert nc * c == S, (S, chunk)
+
+    def chunk_step(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * c, c, axis=1)
+        dt_c, B_c, C_c, x_c = sl(dt), sl(Bm), sl(Cm), sl(xh)
+        a = dt_c * A[None, None]                         # (B,c,H) log-decay
+        cum = jnp.cumsum(a, axis=1)                      # (B,c,H)
+        # intra-chunk: y_t += sum_{tau<=t} exp(cum_t - cum_tau) dt_tau
+        #              (C_t . B_tau) x_tau
+        Lmask = jnp.tril(jnp.ones((c, c), bool))
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,t,s,H)
+        decay = jnp.where(Lmask[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", C_c, B_c)                  # (B,t,s)
+        w = cb[..., None] * decay * dt_c[:, None, :, :]            # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, x_c)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", C_c, h,
+                             jnp.exp(cum))
+        # state update: h' = exp(cum_c) h + sum_tau exp(cum_c - cum_tau)
+        #               dt_tau B_tau (x) x_tau
+        tail = jnp.exp(cum[:, -1:, :] - cum) * dt_c                # (B,c,H)
+        dh = jnp.einsum("bsh,bsn,bshp->bhpn", tail, B_c, x_c)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + dh
+        return h_new, y_intra + y_inter
+
+    h0 = (ssm_state if ssm_state is not None
+          else jnp.zeros((B, H, Pd, N), jnp.float32))
+    h_last, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, Pd)
+    y = y + params.D[None, None, :, None] * xh
+    y = y.reshape(B, S, dI).astype(x.dtype)
+    # gated RMSNorm then out-projection
+    y = rmsnorm({"scale": params.norm_scale}, y * jax.nn.silu(z))
+    out = matmul(y, params.out_proj)
+    out = ctx.act_btd(out)
+    if return_state:
+        return out, new_conv_state, h_last
+    return out

@@ -1,0 +1,326 @@
+"""Decoder-only LM covering the dense and MoE families (llama3, internlm2,
+h2o-danube3, gemma2, granite-moe, dbrx) plus the text backbone of the VLM.
+
+Train/prefill run the layer stack under ``jax.lax.scan`` over stacked
+per-layer params (bounded HLO for 48-layer models) with optional remat;
+decode unrolls a Python loop over layers so heterogeneous per-layer caches
+(ring buffers for local layers, full caches for global layers) stay exact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .attention import (AttnParams, attn_init, attention, attention_decode,
+                        nystrom_attention)
+from .common import (NULL_CTX, ShardCtx, apply_rope, cross_entropy_chunked,
+                     embed_init, matmul, rmsnorm, rmsnorm_init, layernorm,
+                     layernorm_init, softcap)
+from .ffn import FFNParams, MoEParams, ffn, ffn_init, moe, moe_init
+
+FULL_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig, d: int, dtype):
+    return (rmsnorm_init(d, dtype) if cfg.norm == "rmsnorm"
+            else layernorm_init(d, dtype))
+
+
+def _norm_apply(cfg: ModelConfig, p, x):
+    return (rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rmsnorm"
+            else layernorm(p, x, cfg.norm_eps))
+
+
+def _block_init(key, cfg: ModelConfig):
+    dtype = cfg.jnp_dtype
+    k1, k2 = jax.random.split(key)
+    blk: Dict[str, Any] = {
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype)._asdict(),
+        "ln_attn": _norm_init(cfg, cfg.d_model, dtype),
+        "ln_ffn": _norm_init(cfg, cfg.d_model, dtype),
+    }
+    if cfg.use_post_norms:
+        blk["ln_attn_post"] = _norm_init(cfg, cfg.d_model, dtype)
+        blk["ln_ffn_post"] = _norm_init(cfg, cfg.d_model, dtype)
+    if cfg.n_experts:
+        blk["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                              dtype)._asdict()
+    else:
+        blk["ffn"] = ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)._asdict()
+    return blk
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [_block_init(keys[i], cfg) for i in range(cfg.n_layers)]
+    # stack per-layer params along leading L axis for scan
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype),
+        "blocks": stacked,
+        "ln_final": _norm_init(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[-2], cfg.vocab, cfg.d_model,
+                                       dtype)
+    if cfg.frontend != "none":
+        # modality projector (frontend itself is a stub per assignment)
+        params["projector"] = {
+            "w": embed_init(keys[-3], cfg.frontend_dim, cfg.d_model, dtype),
+            "ln": _norm_init(cfg, cfg.d_model, dtype),
+        }
+    return params
+
+
+def param_sharding_rules(cfg: ModelConfig, mesh, data_axes, model_axis):
+    """NamedSharding pytree for the params (used by jit in_shardings)."""
+    def spec_for(path: str, x):
+        d = {
+            "embed": P(model_axis, None),
+            "lm_head": P(model_axis, None),
+            "wq": P(None, None, model_axis),
+            "wk": P(None, None, model_axis),
+            "wv": P(None, None, model_axis),
+            "wo": P(None, model_axis, None),
+            "w_gate": P(None, None, model_axis),
+            "w_up": P(None, None, model_axis),
+            "w_down": P(None, model_axis, None),
+            "router": P(None, None, None),
+        }
+        return d.get(path.split("/")[-1])
+    return spec_for  # resolved fully in parallel/sharding.py
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, ctx: ShardCtx):
+    h = params["embed"][tokens]                         # gather (B,S,d)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return ctx.act_btd(h)
+
+
+def _project_frontend(params, cfg: ModelConfig, feats, ctx: ShardCtx):
+    p = params["projector"]
+    h = matmul(feats.astype(cfg.jnp_dtype), p["w"])
+    return _norm_apply(cfg, p["ln"], h)
+
+
+def _block_apply(cfg: ModelConfig, blk, h, *, window, positions,
+                 ctx: ShardCtx, kv_chunk: int, use_nystrom: bool = False):
+    attn_p = AttnParams(**blk["attn"])
+    a_in = _norm_apply(cfg, blk["ln_attn"], h)
+    if use_nystrom:
+        a = nystrom_attention(attn_p, a_in, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim,
+                              n_landmarks=cfg.nystrom_landmarks,
+                              rope_theta=cfg.rope_theta, ctx=ctx)
+    else:
+        a = attention(attn_p, a_in, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                      positions=positions, causal=True, window=window,
+                      attn_softcap=cfg.attn_softcap,
+                      rope_theta=cfg.rope_theta, kv_chunk=kv_chunk, ctx=ctx)
+    if cfg.use_post_norms:
+        a = _norm_apply(cfg, blk["ln_attn_post"], a)
+    h = h + a
+
+    f_in = _norm_apply(cfg, blk["ln_ffn"], h)
+    aux = jnp.float32(0)
+    if cfg.n_experts:
+        f, aux = moe(MoEParams(**blk["moe"]), f_in, top_k=cfg.top_k,
+                     capacity_factor=cfg.capacity_factor, ctx=ctx,
+                     return_aux=True, dispatch=cfg.moe_dispatch)
+    else:
+        f = ffn(FFNParams(**blk["ffn"]), f_in, activation=cfg.activation,
+                ctx=ctx)
+    if cfg.use_post_norms:
+        f = _norm_apply(cfg, blk["ln_ffn_post"], f)
+    return h + f, aux
+
+
+def lm_hidden(params, cfg: ModelConfig, tokens, *, ctx: ShardCtx = NULL_CTX,
+              frontend_feats=None, remat: bool = True,
+              kv_chunk: int = 1024):
+    """Token ids (+ optional frontend features, prepended) -> final hidden.
+
+    Returns (h, aux_loss)."""
+    B, S_tok = tokens.shape
+    h = _embed_tokens(params, cfg, tokens, ctx)
+    if frontend_feats is not None:
+        fe = _project_frontend(params, cfg, frontend_feats, ctx)
+        h = jnp.concatenate([fe, h], axis=1)
+        h = ctx.act_btd(h)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows(S), jnp.int32)
+    use_nystrom = bool(cfg.nystrom_attn_above) and S >= cfg.nystrom_attn_above
+
+    def body(carry, xs):
+        h, aux = carry
+        blk, window_l = xs
+        h, a = _block_apply(cfg, blk, h, window=window_l,
+                            positions=positions, ctx=ctx, kv_chunk=kv_chunk,
+                            use_nystrom=use_nystrom)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.float32(0)),
+                               (params["blocks"], windows))
+    h = _norm_apply(cfg, params["ln_final"], h)
+    return h, aux
+
+
+def _lm_head_weight(params, cfg: ModelConfig):
+    return (params["embed"] if cfg.tie_embeddings else params["lm_head"])
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, ctx: ShardCtx = NULL_CTX,
+            remat: bool = True):
+    """batch: {"tokens": (B,S), "labels": (B,S)} (+ "frontend_feats")."""
+    h, aux = lm_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                       frontend_feats=batch.get("frontend_feats"),
+                       remat=remat)
+    labels = batch["labels"]
+    if h.shape[1] != labels.shape[1]:   # frontend tokens prepended: no loss
+        pad = h.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -100, labels.dtype), labels],
+            axis=1)
+    W = _lm_head_weight(params, cfg)
+    logits_fn = lambda hc: matmul(hc, W.T)
+    nll = cross_entropy_chunked(logits_fn, h, labels, cfg.vocab,
+                                chunk=cfg.loss_chunk,
+                                final_softcap=cfg.final_softcap, ctx=ctx)
+    return nll + cfg.router_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> List[Dict[str, Any]]:
+    """Per-layer KV caches; local (windowed) layers get ring buffers."""
+    dtype = dtype or cfg.jnp_dtype
+    caches = []
+    for w in cfg.layer_windows(max_len):
+        L = min(w, max_len)
+        caches.append({
+            "k": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), dtype),
+        })
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStruct pytree of ``init_cache`` (dry-run input specs)."""
+    dtype = dtype or cfg.jnp_dtype
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
+                ctx: ShardCtx = NULL_CTX):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (absolute).
+
+    Returns (logits (B, 1, vocab), new_caches). Python-unrolled over layers
+    so windowed ring caches and full caches coexist."""
+    h = _embed_tokens(params, cfg, token, ctx)
+    windows = cfg.layer_windows(FULL_WINDOW)
+    new_caches = []
+    for l in range(cfg.n_layers):
+        blk = jax.tree.map(lambda a: a[l], params["blocks"])
+        attn_p = AttnParams(**blk["attn"])
+        a_in = _norm_apply(cfg, blk["ln_attn"], h)
+        w = windows[l]
+        a, ck, cv = attention_decode(
+            attn_p, a_in, caches[l]["k"], caches[l]["v"], pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            window=(w if w < FULL_WINDOW else None),
+            attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            ctx=ctx)
+        new_caches.append({"k": ck, "v": cv})
+        if cfg.use_post_norms:
+            a = _norm_apply(cfg, blk["ln_attn_post"], a)
+        h = h + a
+        f_in = _norm_apply(cfg, blk["ln_ffn"], h)
+        if cfg.n_experts:
+            f = moe(MoEParams(**blk["moe"]), f_in, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, ctx=ctx,
+                    dispatch=cfg.moe_dispatch)
+        else:
+            f = ffn(FFNParams(**blk["ffn"]), f_in,
+                    activation=cfg.activation, ctx=ctx)
+        if cfg.use_post_norms:
+            f = _norm_apply(cfg, blk["ln_ffn_post"], f)
+        h = h + f
+    h = _norm_apply(cfg, params["ln_final"], h)
+    logits = matmul(h, _lm_head_weight(params, cfg).T)
+    logits = softcap(logits, cfg.final_softcap)
+    return ctx.logits(logits), new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, ctx: ShardCtx = NULL_CTX,
+            remat: bool = True, kv_chunk: int = 1024,
+            max_len: Optional[int] = None):
+    """Process a full prompt; returns (last-position logits, caches).
+
+    The cache is built by re-projecting K/V per layer (scan output), then
+    re-laid out into the per-layer list used by decode: full layers pad to
+    ``max_len`` (slot == absolute position); windowed layers become ring
+    buffers (slot == position mod ring length)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    h = _embed_tokens(params, cfg, tokens, ctx)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows(S), jnp.int32)
+
+    def body(carry, xs):
+        h, aux = carry
+        blk, window_l = xs
+        a_in = _norm_apply(cfg, blk["ln_attn"], h)
+        attn_p = AttnParams(**blk["attn"])
+        k = matmul(a_in, attn_p.wk).reshape(B, S, cfg.n_kv_heads,
+                                            cfg.head_dim)
+        v = matmul(a_in, attn_p.wv).reshape(B, S, cfg.n_kv_heads,
+                                            cfg.head_dim)
+        k = apply_rope(k, positions[None, :], cfg.rope_theta)
+        h, a = _block_apply(cfg, blk, h, window=window_l,
+                            positions=positions, ctx=ctx, kv_chunk=kv_chunk)
+        return (h, aux + a), (k, v)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (h, _), (ks, vs) = jax.lax.scan(body_fn, (h, jnp.float32(0)),
+                                    (params["blocks"], windows))
+    h = _norm_apply(cfg, params["ln_final"], h)
+    logits = matmul(h[:, -1:], _lm_head_weight(params, cfg).T)
+    logits = softcap(logits, cfg.final_softcap)
+
+    caches = []
+    for l, w in enumerate(cfg.layer_windows(S)):
+        L = min(w, max_len)
+        k_l, v_l = ks[l], vs[l]
+        if L >= S:
+            # slot == absolute position; pad tail for future tokens
+            pad = ((0, 0), (0, L - S), (0, 0), (0, 0))
+            caches.append({"k": jnp.pad(k_l, pad), "v": jnp.pad(v_l, pad)})
+        else:
+            # ring: keep last L positions, place position p at slot p % L
+            caches.append({"k": jnp.roll(k_l[:, -L:], S, axis=1),
+                           "v": jnp.roll(v_l[:, -L:], S, axis=1)})
+    return ctx.logits(logits), caches

@@ -1,0 +1,198 @@
+"""Whisper-style encoder-decoder (audio backbone only; the conv/mel
+frontend is a stub per the assignment — ``input_specs`` supplies precomputed
+frame embeddings (B, enc_seq, d_model))."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import AttnParams, attn_init, attention, attention_decode
+from .common import (NULL_CTX, ShardCtx, cross_entropy_chunked, embed_init,
+                     layernorm, layernorm_init, matmul)
+from .ffn import MLPParams, mlp, mlp_init
+
+
+def _enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    d = cfg.jnp_dtype
+    return {
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, d)._asdict(),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, d)._asdict(),
+        "ln1": layernorm_init(cfg.d_model, d),
+        "ln2": layernorm_init(cfg.d_model, d),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.jnp_dtype
+    return {
+        "self_attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, d)._asdict(),
+        "cross_attn": attn_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, d)._asdict(),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, d)._asdict(),
+        "ln1": layernorm_init(cfg.d_model, d),
+        "ln2": layernorm_init(cfg.d_model, d),
+        "ln3": layernorm_init(cfg.d_model, d),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    d = cfg.jnp_dtype
+    keys = jax.random.split(key, cfg.n_enc_layers + cfg.n_layers + 5)
+    enc = [_enc_block_init(keys[i], cfg) for i in range(cfg.n_enc_layers)]
+    dec = [_dec_block_init(keys[cfg.n_enc_layers + i], cfg)
+           for i in range(cfg.n_layers)]
+    return {
+        "enc_pos": embed_init(keys[-1], cfg.enc_seq, cfg.d_model, d),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_ln": layernorm_init(cfg.d_model, d),
+        "embed": embed_init(keys[-2], cfg.vocab, cfg.d_model, d),
+        "dec_pos": embed_init(keys[-3], max(cfg.max_pos, 4096), cfg.d_model, d),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "dec_ln": layernorm_init(cfg.d_model, d),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, *, ctx: ShardCtx = NULL_CTX,
+           remat: bool = True):
+    """frames: (B, enc_seq, d_model) precomputed conv-frontend output."""
+    T = frames.shape[1]
+    h = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None, :T]
+    h = ctx.act_btd(h)
+
+    def body(h, blk):
+        a = attention(AttnParams(**blk["attn"]),
+                      layernorm(blk["ln1"], h, cfg.norm_eps),
+                      n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                      head_dim=cfg.head_dim, causal=False, use_rope=False,
+                      ctx=ctx)
+        h = h + a
+        f = mlp(MLPParams(**blk["mlp"]),
+                layernorm(blk["ln2"], h, cfg.norm_eps), ctx=ctx)
+        return h + f, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["enc_blocks"])
+    return layernorm(params["enc_ln"], h, cfg.norm_eps)
+
+
+def decode_hidden(params, cfg: ModelConfig, tokens, enc_out, *,
+                  ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    B, S = tokens.shape
+    h = params["embed"][tokens] + params["dec_pos"][None, :S]
+    h = ctx.act_btd(h)
+
+    def body(h, blk):
+        a = attention(AttnParams(**blk["self_attn"]),
+                      layernorm(blk["ln1"], h, cfg.norm_eps),
+                      n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                      head_dim=cfg.head_dim, causal=True, use_rope=False,
+                      ctx=ctx)
+        h = h + a
+        c = attention(AttnParams(**blk["cross_attn"]),
+                      layernorm(blk["ln2"], h, cfg.norm_eps),
+                      n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                      head_dim=cfg.head_dim, causal=False, use_rope=False,
+                      xkv=enc_out, ctx=ctx)
+        h = h + c
+        f = mlp(MLPParams(**blk["mlp"]),
+                layernorm(blk["ln3"], h, cfg.norm_eps), ctx=ctx)
+        return h + f, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["dec_blocks"])
+    return layernorm(params["dec_ln"], h, cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch, *,
+                ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    """batch: {"frames": (B,T,d), "tokens": (B,S), "labels": (B,S)}."""
+    enc_out = encode(params, cfg, batch["frames"], ctx=ctx, remat=remat)
+    h = decode_hidden(params, cfg, batch["tokens"], enc_out, ctx=ctx,
+                      remat=remat)
+    logits_fn = lambda hc: matmul(hc, params["embed"].T)
+    return cross_entropy_chunked(logits_fn, h, batch["labels"], cfg.vocab,
+                                 chunk=cfg.loss_chunk, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    d = dtype or cfg.jnp_dtype
+    L = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), d),
+        "self_v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), d),
+        # cross-attention K/V computed once from enc_out at prefill
+        "cross_k": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads,
+                              cfg.head_dim), d),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads,
+                              cfg.head_dim), d),
+    }
+
+
+def encdec_prepare_cross(params, cfg: ModelConfig, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    B, T, _ = enc_out.shape
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        blk = jax.tree.map(lambda a: a[l], params["dec_blocks"])
+        ap = AttnParams(**blk["cross_attn"])
+        ks.append(matmul(enc_out, ap.wk).reshape(B, T, cfg.n_kv_heads,
+                                                 cfg.head_dim))
+        vs.append(matmul(enc_out, ap.wv).reshape(B, T, cfg.n_kv_heads,
+                                                 cfg.head_dim))
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                       ctx: ShardCtx = NULL_CTX):
+    import math as _m
+    B = token.shape[0]
+    pos_emb = jnp.take(params["dec_pos"],
+                       jnp.full((1,), pos, jnp.int32), axis=0)
+    h = params["embed"][token] + pos_emb[None]
+    h = ctx.act_btd(h)
+    sk, sv = cache["self_k"], cache["self_v"]
+    for l in range(cfg.n_layers):
+        blk = jax.tree.map(lambda a: a[l], params["dec_blocks"])
+        a, ck, cv = attention_decode(
+            AttnParams(**blk["self_attn"]),
+            layernorm(blk["ln1"], h, cfg.norm_eps), sk[l], sv[l], pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, use_rope=False, ctx=ctx)
+        sk = sk.at[l].set(ck)
+        sv = sv.at[l].set(cv)
+        h = h + a
+        # cross-attn against fixed K/V
+        q_in = layernorm(blk["ln2"], h, cfg.norm_eps)
+        ap = AttnParams(**blk["cross_attn"])
+        Hq, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        G = Hq // Hk
+        q = matmul(q_in, ap.wq).reshape(B, 1, Hk, G, D)
+        s = jnp.einsum("bshgd,bchd->bshgc",
+                       q.astype(jnp.float32) / _m.sqrt(D),
+                       cache["cross_k"][l].astype(jnp.float32))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bshgc,bchd->bshgd", p,
+                       cache["cross_v"][l].astype(jnp.float32))
+        o = o.reshape(B, 1, Hq * D).astype(h.dtype)
+        h = h + matmul(o, ap.wo)
+        f = mlp(MLPParams(**blk["mlp"]),
+                layernorm(blk["ln3"], h, cfg.norm_eps), ctx=ctx)
+        h = h + f
+    h = layernorm(params["dec_ln"], h, cfg.norm_eps)
+    logits = matmul(h, params["embed"].T)
+    new_cache = dict(cache, self_k=sk, self_v=sv)
+    return ctx.logits(logits), new_cache

@@ -1,0 +1,211 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with ONE shared
+attention+FFN block applied every ``shared_attn_every`` layers (weight
+sharing across applications, as in Zamba/Zamba2).
+
+Long-context note (paper tie-in): when ``cfg.nystrom_attn_above`` is set and
+the sequence is long, the shared block's softmax attention is replaced by
+Nyström landmark attention — the paper's two-product sketch structure — so
+the hybrid arch stays sub-quadratic on the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import (AttnParams, attn_init, attention, attention_decode,
+                        nystrom_attention)
+from .common import (NULL_CTX, ShardCtx, cross_entropy_chunked, embed_init,
+                     matmul, rmsnorm, rmsnorm_init, softcap)
+from .ffn import FFNParams, ffn, ffn_init
+from .ssm import (Mamba2Params, mamba2, mamba2_init)
+
+FULL_WINDOW = 1 << 30
+
+
+def _shared_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    dtype = cfg.jnp_dtype
+    return {
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype)._asdict(),
+        "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)._asdict(),
+        "ln_attn": rmsnorm_init(cfg.d_model, dtype),
+        "ln_ffn": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def hybrid_init(key, cfg: ModelConfig):
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({
+            "mamba": mamba2_init(keys[i], cfg.d_model, cfg.d_inner,
+                                 cfg.ssm_state, cfg.ssm_heads, cfg.d_conv,
+                                 dtype)._asdict(),
+            "ln": rmsnorm_init(cfg.d_model, dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype),
+        "blocks": stacked,
+        "shared": _shared_block_init(keys[-2], cfg),
+        "ln_final": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": embed_init(keys[-3], cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+def _apply_shared(params, cfg: ModelConfig, h, *, ctx: ShardCtx,
+                  use_nystrom: bool, kv_chunk: int = 1024):
+    sb = params["shared"]
+    attn_p = AttnParams(**sb["attn"])
+    a_in = rmsnorm(sb["ln_attn"], h, cfg.norm_eps)
+    if use_nystrom:
+        a = nystrom_attention(attn_p, a_in, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads,
+                              head_dim=cfg.head_dim,
+                              n_landmarks=cfg.nystrom_landmarks,
+                              rope_theta=cfg.rope_theta, ctx=ctx)
+    else:
+        a = attention(attn_p, a_in, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                      causal=True, rope_theta=cfg.rope_theta,
+                      kv_chunk=kv_chunk, ctx=ctx)
+    h = h + a
+    f = ffn(FFNParams(**sb["ffn"]), rmsnorm(sb["ln_ffn"], h, cfg.norm_eps),
+            ctx=ctx)
+    return h + f
+
+
+def _mamba_segment(params, cfg: ModelConfig, h, lo: int, hi: int,
+                   ctx: ShardCtx, remat: bool):
+    """Scan mamba layers [lo, hi) over the stacked params."""
+    seg = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+
+    def body(h, blk):
+        x = rmsnorm(blk["ln"], h, cfg.norm_eps)
+        y = mamba2(Mamba2Params(**blk["mamba"]), x, d_state=cfg.ssm_state,
+                   n_heads=cfg.ssm_heads, chunk=cfg.ssm_chunk, ctx=ctx)
+        return h + y, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, seg)
+    return h
+
+
+def hybrid_hidden(params, cfg: ModelConfig, tokens, *,
+                  ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    h = params["embed"][tokens]
+    h = ctx.act_btd(h)
+    S = h.shape[1]
+    use_ny = bool(cfg.nystrom_attn_above) and S >= cfg.nystrom_attn_above
+    every = cfg.shared_attn_every or (cfg.n_layers + 1)
+    lo = 0
+    while lo < cfg.n_layers:
+        hi = min(lo + every, cfg.n_layers)
+        h = _mamba_segment(params, cfg, h, lo, hi, ctx, remat)
+        if hi < cfg.n_layers or cfg.n_layers % every == 0:
+            h = _apply_shared(params, cfg, h, ctx=ctx, use_nystrom=use_ny)
+        lo = hi
+    return rmsnorm(params["ln_final"], h, cfg.norm_eps)
+
+
+def hybrid_loss(params, cfg: ModelConfig, batch, *,
+                ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    h = hybrid_hidden(params, cfg, batch["tokens"], ctx=ctx, remat=remat)
+    logits_fn = lambda hc: matmul(hc, params["lm_head"].T)
+    return cross_entropy_chunked(logits_fn, h, batch["labels"], cfg.vocab,
+                                 chunk=cfg.loss_chunk, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> Dict[str, Any]:
+    """SSM states are stacked (scanned homogeneously); the shared-attention
+    KV caches are a per-application LIST — a stacked (n_shared, B, T, H, D)
+    array forces full-cache dynamic-update-slices on every decode step
+    (2 x 2.1 GB x 6 of pure copy traffic at 500k context; §Perf round 1 of
+    the zamba hillclimb), while list entries update in place."""
+    dtype = dtype or cfg.jnp_dtype
+    Pd = cfg.d_inner // cfg.ssm_heads
+    n_shared = _n_shared_applications(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, Pd,
+                          cfg.ssm_state), jnp.float32),
+        "shared": [
+            {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+             "v": jnp.zeros((batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dtype)}
+            for _ in range(n_shared)],
+    }
+
+
+def _n_shared_applications(cfg: ModelConfig) -> int:
+    every = cfg.shared_attn_every or (cfg.n_layers + 1)
+    n = 0
+    lo = 0
+    while lo < cfg.n_layers:
+        hi = min(lo + every, cfg.n_layers)
+        if hi < cfg.n_layers or cfg.n_layers % every == 0:
+            n += 1
+        lo = hi
+    return n
+
+
+def hybrid_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                       ctx: ShardCtx = NULL_CTX):
+    """One-token decode: SSM layers update O(1) state; shared attention
+    blocks append to their (per-application) KV caches."""
+    h = params["embed"][token]
+    h = ctx.act_btd(h)
+    every = cfg.shared_attn_every or (cfg.n_layers + 1)
+    new_conv, new_ssm = [], []
+    new_shared = []
+    s_idx = 0
+    lo = 0
+    while lo < cfg.n_layers:
+        hi = min(lo + every, cfg.n_layers)
+        for l in range(lo, hi):
+            blk = jax.tree.map(lambda a: a[l], params["blocks"])
+            x = rmsnorm(blk["ln"], h, cfg.norm_eps)
+            y, cs, ss = mamba2(Mamba2Params(**blk["mamba"]), x,
+                               d_state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+                               chunk=1, ctx=ctx,
+                               conv_state=cache["conv"][l],
+                               ssm_state=cache["ssm"][l], return_state=True)
+            new_conv.append(cs)
+            new_ssm.append(ss)
+            h = h + y
+        if hi < cfg.n_layers or cfg.n_layers % every == 0:
+            sb = params["shared"]
+            attn_p = AttnParams(**sb["attn"])
+            a_in = rmsnorm(sb["ln_attn"], h, cfg.norm_eps)
+            entry = cache["shared"][s_idx]
+            a, ck, cv = attention_decode(
+                attn_p, a_in, entry["k"], entry["v"], pos,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, ctx=ctx)
+            new_shared.append({"k": ck, "v": cv})
+            h = h + a
+            f = ffn(FFNParams(**sb["ffn"]),
+                    rmsnorm(sb["ln_ffn"], h, cfg.norm_eps), ctx=ctx)
+            h = h + f
+            s_idx += 1
+        lo = hi
+    h = rmsnorm(params["ln_final"], h, cfg.norm_eps)
+    logits = matmul(h, params["lm_head"].T)
+    new_cache = {
+        "conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm),
+        "shared": new_shared,
+    }
+    return ctx.logits(logits), new_cache

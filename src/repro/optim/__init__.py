@@ -1,0 +1,3 @@
+from . import adamw  # noqa: F401
+from .adamw import AdamWState, clip_by_global_norm, global_norm  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

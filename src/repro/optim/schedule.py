@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * (step + 1) / max(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)

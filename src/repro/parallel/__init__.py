@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    batch_shardings, cache_shardings, make_shard_ctx, param_shardings,
+)
+from .grad_compress import (  # noqa: F401
+    compress_and_allreduce, comm_words_compressed, comm_words_exact,
+    init_error_fb,
+)
+from .pipeline import pipeline, pipeline_loss  # noqa: F401

@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over a mesh axis (the "pod" axis on the
+multi-pod production mesh).
+
+Stages hold disjoint layer ranges; microbatches flow stage-to-stage via
+``jax.lax.ppermute`` (maps to ICI collective-permute between pods).  The
+schedule is the standard GPipe loop of ``n_micro + n_stages - 1`` ticks with
+bubble fraction (S-1)/(M+S-1); activations for the backward pass are kept by
+jax's autodiff through the scan (remat-friendly).
+
+This composes with TP/SP inside each stage (the stage fn is ordinary GSPMD
+code over the remaining mesh axes) and with DP by vmapping microbatches.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline(stage_fn: Callable, stage_params, x_micro, *, axis: str,
+             n_stages: int):
+    """Run ``stage_fn(params, x) -> x`` as a pipeline over mesh axis
+    ``axis``.
+
+    Must be called inside ``shard_map`` where ``axis`` is un-consumed.
+    ``stage_params``: this stage's params (already sharded per stage, i.e.
+    the local slice along the axis).  ``x_micro``: (M, micro_batch, ...) —
+    the microbatch queue, identical on every stage (only stage 0 consumes
+    it; other stages ignore inputs and work on permuted activations).
+    Returns (M, micro_batch, ...) outputs valid on the LAST stage.
+    """
+    M = x_micro.shape[0]
+    stage = jax.lax.axis_index(axis)
+    n_ticks = M + n_stages - 1
+
+    buf = jnp.zeros_like(x_micro[0])
+    outs = jnp.zeros_like(x_micro)
+
+    def tick(carry, t):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (when in range)
+        mb_idx = jnp.clip(t, 0, M - 1)
+        fresh = jnp.where(t < M, 1, 0)
+        inject = jax.lax.dynamic_index_in_dim(x_micro, mb_idx, 0,
+                                              keepdims=False)
+        x_in = jnp.where((stage == 0) & (fresh == 1), inject, buf)
+        y = stage_fn(stage_params, x_in)
+        # pass activations to the next stage (ring; last->0 ignored)
+        y_next = jax.lax.ppermute(
+            y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+        # last stage emits microbatch t - (n_stages - 1)
+        out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+        emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+        outs = jax.lax.cond(
+            emit,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, out_idx, 0),
+            lambda o: o, outs)
+        return (y_next, outs), None
+
+    (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+    # only the last stage holds real outputs (zeros elsewhere); sum over the
+    # stage axis replicates them so callers can use plain out_specs
+    return jax.lax.psum(outs, axis)
+
+
+def pipeline_loss(stage_fn: Callable, loss_fn: Callable, stage_params,
+                  x_micro, y_micro, *, axis: str, n_stages: int):
+    """Pipelined forward + mean loss on the last stage, broadcast to all
+    stages via psum (so jax.grad gives every stage its local params grads).
+    """
+    acts = pipeline(stage_fn, stage_params, x_micro, axis=axis,
+                    n_stages=n_stages)
+    stage = jax.lax.axis_index(axis)
+    raw = loss_fn(acts, y_micro)
+    local = jnp.where(stage == n_stages - 1, raw, 0.0)
+    return jax.lax.psum(local, axis)

@@ -1,0 +1,130 @@
+"""Parameter/activation sharding rules (DP / TP / SP / EP over a named mesh).
+
+Rules are (leaf-name -> dim-from-end to shard over the model axis); anything
+unmatched or non-divisible replicates.  Works for both stacked (leading L)
+and unstacked params.  Experts shard over the model axis (EP); dense FFN and
+attention projections shard TP; embeddings shard over vocab.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ShardCtx
+
+# leaf name -> dim (negative, from end) sharded over the model axis
+_MODEL_DIM_RULES: Dict[str, int] = {
+    # attention projections
+    "wq": -1, "wk": -1, "wv": -1, "wo": -2,
+    # dense FFN (TP)
+    "w1": -1, "w2": -2, "b1": -1,
+    # embeddings / heads: vocab dim
+    "embed": -2, "lm_head": -2,
+    # mamba
+    "in_proj": -1, "conv_w": -1, "conv_b": -1,
+    "x_proj": -2, "dt_proj": -1, "dt_bias": -1,
+    "A_log": -2, "D": -1, "out_proj": -2, "norm_scale": -1,
+}
+
+# MoE expert tensors: shard the EXPERT dim (EP) over the model axis
+_EXPERT_DIM_RULES: Dict[str, int] = {
+    "w_gate": -3, "w_up": -3, "w_down": -3,
+}
+
+# dense-FFN gate/up/down reuse MoE names; disambiguated by path (.../moe/...)
+_DENSE_GLU_RULES: Dict[str, int] = {
+    "w_gate": -1, "w_up": -1, "w_down": -2,
+}
+
+
+def _leaf_rule(path_str: str, name: str) -> Optional[int]:
+    if name in ("w_gate", "w_up", "w_down"):
+        return (_EXPERT_DIM_RULES[name] if "moe" in path_str
+                else _DENSE_GLU_RULES[name])
+    # mamba2 A_log/D/dt_bias are 1-D per-head tensors
+    if name in ("A_log", "D", "dt_bias"):
+        return -2 if name == "A_log" else -1
+    return _MODEL_DIM_RULES.get(name)
+
+
+def param_shardings(params_shapes, mesh: Mesh, model_axis: str = "model"):
+    """NamedSharding pytree mirroring ``params_shapes``."""
+    model_size = mesh.shape[model_axis]
+
+    def spec_of(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p)))
+                 for p in path]
+        path_str = "/".join(str(n) for n in names)
+        name = str(names[-1]) if names else ""
+        dim = _leaf_rule(path_str, name)
+        ndim = len(leaf.shape)
+        spec = [None] * ndim
+        if dim is not None and -dim <= ndim:
+            d = ndim + dim
+            if leaf.shape[d] % model_size == 0 and leaf.shape[d] >= model_size:
+                spec[d] = model_axis
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, l) for p, l in flat])
+
+
+def batch_shardings(batch_specs, mesh: Mesh, data_axes) -> Any:
+    """Batch dims shard over the data axes; everything else replicated."""
+    def spec_of(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and leaf.shape[0] > 1:
+            size = int(np.prod([mesh.shape[a] for a in _as_tuple(data_axes)]))
+            if leaf.shape[0] % size == 0:
+                spec[0] = data_axes
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(spec_of, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh: Mesh, data_axes, model_axis="model"):
+    """KV/state caches: batch over data axes; head/feature dims over model.
+
+    Cache layouts: k/v (B, T, Hk, D) or stacked (L, B, T, Hk, D);
+    ssm states (L, B, H, P, N) / (L, B, dI, N); conv (L, B, K-1, C)."""
+    model_size = mesh.shape[model_axis]
+    data_size = int(np.prod([mesh.shape[a] for a in _as_tuple(data_axes)]))
+
+    def spec_of(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # batch dim: per-layer list caches (path starts with a list index)
+        # have batch at dim 0; stacked (L, B, ...) arrays at dim 1.
+        is_list_entry = path and isinstance(
+            path[0], jax.tree_util.SequenceKey)
+        bdim = 0 if is_list_entry else min(1, len(shape) - 1)
+        if shape[bdim] % data_size == 0 and shape[bdim] >= data_size:
+            spec[bdim] = data_axes
+        # shard one feature dim over model: prefer the sequence/time dim
+        # (large, always divisible at our shapes), else the largest
+        # divisible trailing dim.
+        candidates = [d for d in range(bdim + 1, len(shape))
+                      if spec[d] is None
+                      and shape[d] % model_size == 0
+                      and shape[d] >= model_size]
+        if candidates:
+            best = max(candidates, key=lambda d: shape[d])
+            spec[best] = model_axis
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, l) for p, l in flat])
+
+
+def _as_tuple(x) -> Tuple:
+    return x if isinstance(x, tuple) else (x,)
+
+
+def make_shard_ctx(mesh: Mesh, data_axes=("data",), model_axis: str = "model",
+                   use_sp: bool = True) -> ShardCtx:
+    da = data_axes if len(_as_tuple(data_axes)) > 1 else _as_tuple(data_axes)[0]
+    return ShardCtx(mesh=mesh, data=da, model=model_axis, use_sp=use_sp)

@@ -1,0 +1,5 @@
+from .hlo import CollectiveBytes, collective_bytes_of, op_histogram  # noqa: F401
+from .analysis import (  # noqa: F401
+    RooflineTerms, analyze_compiled, format_table, save_json,
+    PEAK_FLOPS_BF16, HBM_BW, ICI_LINK_BW,
+)

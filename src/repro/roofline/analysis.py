@@ -1,0 +1,152 @@
+"""Three-term roofline model for TPU v5e from compiled (AOT) artifacts.
+
+    compute term    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes        / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device SPMD
+program — multiplied by chip count for the global figures), collective bytes
+from the HLO-text parser in :mod:`repro.roofline.hlo`.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, asdict, field
+from typing import Dict, Optional
+
+from .hlo import CollectiveBytes, collective_bytes_of, op_histogram
+from . import hlo_cost
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_LINK_BW = 50e9            # bytes/s per link (spec constant)
+
+
+@dataclass
+class RooflineTerms:
+    name: str
+    chips: int
+    # global (fleet) quantities — trip-count-corrected HLO walk
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    # derived times (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # usefulness
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    # raw (uncorrected) cost_analysis numbers, for reference: XLA counts
+    # while bodies once, so these undercount scanned models by ~L x.
+    raw_flops: Optional[float] = None
+    raw_bytes: Optional[float] = None
+    # extras
+    per_device_peak_memory: Optional[float] = None
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    notes: str = ""
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step that is *useful* compute at peak, under the
+        max-of-terms execution model: (model_flops/peak/chips) / t_bound."""
+        if not self.model_flops or self.t_bound <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal / self.t_bound
+
+    def to_dict(self):
+        d = asdict(self)
+        d["t_bound"] = self.t_bound
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze_compiled(name: str, compiled, chips: int,
+                     model_flops: Optional[float] = None,
+                     hlo_text: Optional[str] = None,
+                     notes: str = "") -> RooflineTerms:
+    """Build roofline terms from a ``jax.stages.Compiled`` artifact.
+
+    FLOPs/bytes/collective-bytes come from the trip-count-corrected HLO walk
+    (``hlo_cost.analyze``); raw ``cost_analysis()`` numbers (which count
+    while bodies once) are recorded alongside."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):           # older jax returns [dict]
+        ca = ca[0]
+    raw_flops_dev = float(ca.get("flops", 0.0))
+    raw_bytes_dev = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = hlo_cost.analyze(text)
+
+    flops = hc.flops * chips
+    mem_bytes = hc.hbm_bytes * chips
+    coll_bytes = hc.collective_bytes * chips    # sum of operand sizes
+
+    t_c = flops / (chips * PEAK_FLOPS_BF16)
+    t_m = mem_bytes / (chips * HBM_BW)
+    t_l = coll_bytes / (chips * ICI_LINK_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    bottleneck = max(terms, key=terms.get)
+
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = (getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+
+    return RooflineTerms(
+        name=name, chips=chips,
+        hlo_flops=flops, hlo_bytes=mem_bytes, collective_bytes=coll_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_l,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if (model_flops and flops) else None,
+        raw_flops=raw_flops_dev * chips,
+        raw_bytes=raw_bytes_dev * chips,
+        per_device_peak_memory=peak_mem,
+        collective_counts=dict(hc.collective_counts),
+        collective_by_kind={k: v * chips
+                            for k, v in hc.collective_by_kind.items()},
+        notes=notes,
+    )
+
+
+def format_table(rows, keys=("name", "chips", "hlo_flops", "hlo_bytes",
+                             "collective_bytes", "t_compute", "t_memory",
+                             "t_collective", "bottleneck", "useful_ratio",
+                             "roofline_fraction")) -> str:
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.3e}" if (abs(v) >= 1e4 or 0 < abs(v) < 1e-3) else f"{v:.4f}"
+        return str(v)
+    dicts = [r.to_dict() if hasattr(r, "to_dict") else dict(r) for r in rows]
+    widths = {k: max(len(k), *(len(fmt(d.get(k, ""))) for d in dicts))
+              for k in keys}
+    head = " | ".join(k.ljust(widths[k]) for k in keys)
+    sep = "-+-".join("-" * widths[k] for k in keys)
+    body = "\n".join(" | ".join(fmt(d.get(k, "")).ljust(widths[k]) for k in keys)
+                     for d in dicts)
+    return f"{head}\n{sep}\n{body}"
+
+
+def save_json(rows, path: str):
+    data = [r.to_dict() if hasattr(r, "to_dict") else dict(r) for r in rows]
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, default=str)
+
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes_of",
+           "op_histogram", "format_table", "save_json",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_LINK_BW"]

@@ -1,0 +1,160 @@
+"""HLO-text parsing: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (post-SPMD-partitioning) HLO text and sum the
+operand sizes of every collective op — all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (+ their async -start
+forms).  The HLO is the per-device SPMD program, so sums here are
+*per-device* bytes; multiply by the partition count for fleet totals.
+
+XLA prints collective operands by %name only (no inline shapes), so parsing
+is two-pass: build a symbol table of instruction result shapes, then resolve
+each collective's operand names against it.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# collective op kinds we account, normalized (async -start folded in)
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute", "ragged-all-to-all")
+
+# definition site:  %name = <type> op(...)   where <type> is a shape or tuple
+_DEF = re.compile(
+    r"(%[\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,\s]*)\]")
+
+_OPERAND = re.compile(r"%[\w.\-]+")
+
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str):
+    """Participants per replica group of a collective (None if unknown)."""
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA.search(line)
+    if m:  # [G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    return None
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    dims = dims.strip()
+    if dims:
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _type_bytes(type_text: str) -> float:
+    """Bytes of a shape or tuple-of-shapes type string."""
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(type_text))
+
+
+def _operand_span(text: str) -> str:
+    """The operand list of an op call: text up to the matching close-paren."""
+    depth = 1
+    for i, ch in enumerate(text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return text[:i]
+    return text
+
+
+@dataclass
+class CollectiveBytes:
+    """Per-device collective traffic of one compiled HLO module."""
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+    num_partitions: int = 1
+
+    @property
+    def total(self) -> float:
+        """Per-device bytes summed over all collective ops."""
+        return float(sum(self.by_kind.values()))
+
+    @property
+    def fleet_total(self) -> float:
+        """Across all participating devices."""
+        return self.total * self.num_partitions
+
+    def __repr__(self):
+        kinds = ", ".join(f"{k}:{v:.4g}B x{self.counts.get(k, 0)}"
+                          for k, v in sorted(self.by_kind.items()))
+        return (f"CollectiveBytes(per_device_total={self.total:.6g}, "
+                f"partitions={self.num_partitions}, {kinds or 'none'})")
+
+
+def collective_bytes_of(hlo_text: str) -> CollectiveBytes:
+    out = CollectiveBytes()
+    m = re.search(r"num_partitions\s*=\s*(\d+)", hlo_text)
+    if m:
+        out.num_partitions = int(m.group(1))
+
+    # pass 1: symbol table  %name -> result bytes
+    sizes: Dict[str, float] = {}
+    pending = []  # (kind, operand names, def line) for pass 2
+    for line in hlo_text.splitlines():
+        dm = _DEF.search(line)
+        if not dm:
+            continue
+        name, type_text, op = dm.group(1), dm.group(2), dm.group(3)
+        sizes[name] = _type_bytes(type_text)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _KINDS and not op.endswith("-done"):
+            if _group_size(line) == 1:
+                continue  # degenerate collective: no traffic
+            rest = line[dm.end():]
+            operands = _OPERAND.findall(_operand_span(rest))
+            pending.append((base, operands, type_text))
+
+    # pass 2: resolve operand sizes
+    for kind, operands, type_text in pending:
+        nbytes = sum(sizes.get(o, 0.0) for o in operands)
+        if nbytes == 0.0:
+            # fall back to result size (conservative, e.g. params as operands)
+            nbytes = _type_bytes(type_text)
+        out.by_kind[kind] = out.by_kind.get(kind, 0.0) + nbytes
+        out.counts[kind] = out.counts.get(kind, 0) + 1
+    return out
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                     "transpose", "reshape", "copy",
+                                     "dynamic-slice", "scatter")) -> Dict[str, int]:
+    """Rough HLO op histogram — used in the perf loop to spot layout
+    mismatches (transpose/copy storms) and remat recompute."""
+    hist: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        dm = _DEF.search(line)
+        if not dm:
+            continue
+        op = dm.group(3)
+        if op in ops:
+            hist[op] = hist.get(op, 0) + 1
+    return hist

@@ -1,0 +1,1 @@
+from .engine import BatchedServer, Request, serve_decode_step, serve_prefill  # noqa: F401

@@ -1,0 +1,147 @@
+"""Serving engine: family-uniform prefill / decode entry points + a simple
+batched request scheduler (continuous-batching-lite) used by examples and
+the serve driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_api
+from repro.models.common import NULL_CTX, ShardCtx, matmul
+from repro.models import mamba_lm, transformer, whisper as whisper_mod, zamba
+
+
+# ---------------------------------------------------------------------------
+# uniform prefill: returns (last-position logits, decode cache)
+# ---------------------------------------------------------------------------
+
+def serve_prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                  ctx: ShardCtx = NULL_CTX, max_len: Optional[int] = None,
+                  remat: bool = True):
+    """Process the prompt for every family; produce the decode cache."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        tokens = batch["tokens"]
+        if fam == "vlm":
+            # fold projected frontend tokens in by prefilling embeds path:
+            # (kept simple: frontend tokens participate via lm_hidden; the
+            # decode cache covers the text region only in this engine)
+            h, _ = transformer.lm_hidden(params, cfg, tokens, ctx=ctx,
+                                         frontend_feats=batch.get(
+                                             "frontend_feats"), remat=remat)
+            W = (params["embed"] if cfg.tie_embeddings
+                 else params["lm_head"])
+            logits = matmul(h[:, -1:], W.T)
+            cache = None
+            return logits, cache
+        return transformer.prefill(params, cfg, tokens, ctx=ctx,
+                                   remat=remat, max_len=max_len)
+    if fam == "ssm":
+        h = mamba_lm.mamba_lm_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                                     remat=remat)
+        logits = matmul(h[:, -1:], params["lm_head"].T)
+        return logits, None   # state prefill via chunked replay (below)
+    if fam == "hybrid":
+        h = zamba.hybrid_hidden(params, cfg, batch["tokens"], ctx=ctx,
+                                remat=remat)
+        logits = matmul(h[:, -1:], params["lm_head"].T)
+        return logits, None
+    if fam == "encdec":
+        enc = whisper_mod.encode(params, cfg, batch["frames"], ctx=ctx,
+                                 remat=remat)
+        B = batch["frames"].shape[0]
+        cache = whisper_mod.encdec_init_cache(cfg, B, max_len or 4096)
+        ck, cv = whisper_mod.encdec_prepare_cross(params, cfg, enc)
+        cache = dict(cache, cross_k=ck, cross_v=cv)
+        bos = batch.get("tokens",
+                        jnp.zeros((B, 1), jnp.int32))[:, :1]
+        logits, cache = whisper_mod.encdec_decode_step(
+            params, cfg, bos, cache, jnp.int32(0), ctx=ctx)
+        return logits, cache
+    raise ValueError(fam)
+
+
+def serve_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                      ctx: ShardCtx = NULL_CTX):
+    api = get_api(cfg)
+    return api.decode_step(params, cfg, token, cache, pos, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# batched request scheduler (continuous-batching-lite)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Fixed-slot batched decoding: requests claim slots; finished slots are
+    refilled from the queue each step (continuous batching without paged
+    memory — cache slots are per-request rows of the batched cache)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int,
+                 max_len: int, eos: int = 1,
+                 ctx: ShardCtx = NULL_CTX):
+        self.params, self.cfg, self.ctx = params, cfg, ctx
+        self.slots, self.max_len, self.eos = slots, max_len, eos
+        api = get_api(cfg)
+        self.cache = api.init_cache(cfg, slots, max_len)
+        self.pos = [0] * slots
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._step = jax.jit(
+            lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos,
+                                                 ctx=ctx))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                self.pos[s] = 0
+                # teacher-forced prompt replay into the cache
+                for t in req.prompt:
+                    self._advance_slot(s, t)
+
+    def _advance_slot(self, s: int, token: int) -> int:
+        tok = jnp.zeros((self.slots, 1), jnp.int32).at[s, 0].set(token)
+        logits, self.cache = self._step(self.params, tok, self.cache,
+                                        jnp.int32(self.pos[s]))
+        self.pos[s] += 1
+        return int(jnp.argmax(logits[s, -1]))
+
+    def step(self) -> bool:
+        """One scheduler tick; returns False when idle."""
+        self._fill_slots()
+        busy = False
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            busy = True
+            last = req.out[-1] if req.out else req.prompt[-1]
+            nxt = self._advance_slot(s, last)
+            req.out.append(nxt)
+            if nxt == self.eos or len(req.out) >= req.max_new \
+                    or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                self.active[s] = None
+        return busy or bool(self.queue)
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step():
+                break

@@ -1,0 +1,3 @@
+from .loop import LoopResult, StragglerMonitor, train_loop  # noqa: F401
+from .state import TrainState  # noqa: F401
+from .step import init_state, make_dp_compressed_step, make_train_step  # noqa: F401

@@ -1,0 +1,18 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray                 # int32 scalar
+    error_fb: Optional[Any] = None    # sketched-grad-compression feedback
+
+    def replace(self, **kw) -> "TrainState":
+        return self._replace(**kw)

@@ -1,0 +1,135 @@
+"""jit-compiled train step factory: loss -> grads -> clip -> AdamW.
+
+Two variants:
+  * ``make_train_step``     — GSPMD path (TP/SP/EP via sharding constraints,
+    DP reduction emitted by XLA).  Supports gradient accumulation.
+  * ``make_dp_compressed_step`` — pure-DP shard_map path where the gradient
+    all-reduce is replaced by the paper's sketched compression
+    (parallel/grad_compress.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.api import ModelAPI
+from repro.models.common import NULL_CTX, ShardCtx
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.grad_compress import (compress_and_allreduce,
+                                          init_error_fb)
+from .state import TrainState
+
+
+def init_state(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
+               key) -> TrainState:
+    params = api.init(key, cfg)
+    st = TrainState(params=params, opt=adamw.init(params),
+                    step=jnp.zeros((), jnp.int32))
+    if run.grad_compress_rank:
+        st = st.replace(error_fb=init_error_fb(
+            params, run.grad_compress_rank, run.grad_compress_min_dim))
+    return st
+
+
+def make_train_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
+                    ctx: ShardCtx = NULL_CTX, accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return api.loss(params, cfg, batch, ctx=ctx, remat=run.remat)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # gradient accumulation over leading microbatch splits
+        def micro(carry, mb):
+            acc, tot = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, tot + l), None
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+        (g, tot), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+        scale = 1.0 / accum_steps
+        g = jax.tree_util.tree_map(lambda x: x * scale, g)
+        return tot * scale, g
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        lr = warmup_cosine(state.step, peak_lr=run.learning_rate,
+                           warmup_steps=run.warmup_steps,
+                           total_steps=run.steps)
+        new_params, new_opt = adamw.update(
+            grads, state.opt, state.params, lr,
+            weight_decay=run.weight_decay)
+        new_state = TrainState(new_params, new_opt, state.step + 1,
+                               state.error_fb)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_dp_compressed_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
+                            mesh, axis: str = "data"):
+    """Pure-DP training with the paper's sketched gradient all-reduce.
+
+    Batch is sharded over ``axis``; params/opt replicated.  Inside the
+    shard_map body each worker computes grads on its local shard, then the
+    cross-replica reduction is the compressed exchange (Omega regenerated
+    per (leaf, step) — zero communication for the random operand).
+    """
+    from repro.parallel.grad_compress import local_fb, stack_fb
+
+    def body(state: TrainState, batch):
+        def loss_fn(params):
+            return api.loss(params, cfg, batch, ctx=NULL_CTX,
+                            remat=run.remat)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        loss = jax.lax.pmean(loss, axis)
+        # error-feedback buffers are PER-WORKER (sharded over the DP axis)
+        grads, fb = compress_and_allreduce(
+            grads, local_fb(state.error_fb), step=state.step,
+            rank=run.grad_compress_rank,
+            min_dim=run.grad_compress_min_dim, axis_name=axis)
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        lr = warmup_cosine(state.step, peak_lr=run.learning_rate,
+                           warmup_steps=run.warmup_steps,
+                           total_steps=run.steps)
+        new_params, new_opt = adamw.update(
+            grads, state.opt, state.params, lr,
+            weight_decay=run.weight_decay)
+        new_state = TrainState(new_params, new_opt, state.step + 1,
+                               stack_fb(fb))
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    def step(state, batch):
+        fb_spec = jax.tree_util.tree_map(lambda _: P(axis), state.error_fb)
+        in_specs = (
+            TrainState(
+                params=jax.tree_util.tree_map(lambda _: P(), state.params),
+                opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
+                step=P(), error_fb=fb_spec),
+            jax.tree_util.tree_map(lambda _: P(axis), batch),
+        )
+        out_specs = (
+            TrainState(
+                params=jax.tree_util.tree_map(lambda _: P(), state.params),
+                opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
+                step=P(), error_fb=fb_spec),
+            {"loss": P(), "grad_norm": P(), "lr": P()},
+        )
+        fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        return fn(state, batch)
+
+    return step

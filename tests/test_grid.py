@@ -1,0 +1,105 @@
+"""Grid selection optimality: Alg. 1 cost == Theorem 2 bound in all regimes
+(the paper's tightness claim, §4.3), and the §5.3 Nyström grid trade-offs."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import (
+    alg1_bandwidth_words,
+    alg2_bandwidth_words,
+    factorizations_3d,
+    select_matmul_grid,
+    select_nystrom_grids,
+)
+from repro.core.lower_bounds import (
+    matmul_lower_bound,
+    nystrom_lower_bound,
+)
+
+
+def test_alg1_cost_matches_bound_case1():
+    n1, n2, r, P = 64, 256, 16, 32        # P <= n1
+    g = select_matmul_grid(n1, n2, r, P)
+    assert g.shape == (32, 1, 1)
+    assert g.bandwidth_words == 0.0
+    assert matmul_lower_bound(n1, n2, r, P) == 0.0
+
+
+def test_alg1_cost_matches_bound_case2():
+    n1, n2, r, P = 16, 1024, 8, 64        # n1 < P <= n1n2/r
+    g = select_matmul_grid(n1, n2, r, P)
+    assert g.shape == (16, 4, 1)
+    assert math.isclose(g.bandwidth_words, matmul_lower_bound(n1, n2, r, P))
+
+
+def test_alg1_cost_matches_bound_case3():
+    n1, n2, r, P = 4, 64, 16, 256         # P > n1n2/r = 16
+    g = select_matmul_grid(n1, n2, r, P)
+    # ideal: p1=4, p2=sqrt(256*64/(16*4))=16, p3=sqrt(256*16/(4*64))=4
+    assert g.shape == (4, 16, 4)
+    assert math.isclose(g.bandwidth_words, matmul_lower_bound(n1, n2, r, P))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n1e=st.integers(0, 6), n2e=st.integers(2, 8),
+    re_=st.integers(0, 5), Pe=st.integers(0, 9),
+)
+def test_alg1_grid_never_beats_bound_and_close_when_divisible(n1e, n2e, re_, Pe):
+    """The algorithm's cost can never be below the lower bound; with
+    power-of-two dims (always divisible) the best grid should be within a
+    small factor of it."""
+    n1, n2, r, P = 2 ** n1e, 2 ** n2e, 2 ** re_, 2 ** Pe
+    if r >= n2:
+        return
+    if P > n1 * n2 * r:
+        return  # more processors than iteration points: no load-balanced grid
+    g = select_matmul_grid(n1, n2, r, P)
+    lb = matmul_lower_bound(n1, n2, r, P)
+    assert g.bandwidth_words >= lb - 1e-9
+    # all dims are powers of two -> exact optimal grid exists
+    best = min(
+        alg1_bandwidth_words(n1, n2, r, a, b, c)
+        for (a, b, c) in factorizations_3d(P)
+        if a <= n1 and b <= n2 and c <= r
+    ) if any(a <= n1 and b <= n2 and c <= r
+             for (a, b, c) in factorizations_3d(P)) else None
+    if best is not None:
+        assert g.bandwidth_words <= best + 1e-9
+
+
+def test_nystrom_variant_crossover():
+    """Redist comm O(nr/P) vs No-Redist O(r^2): crossover at P ~ n/r."""
+    n, r = 50000, 5000
+    small = select_nystrom_grids(n, r, 4, variant="auto")
+    large = select_nystrom_grids(n, r, 64, variant="auto")
+    assert small.variant == "no_redist"
+    assert large.variant == "redist"
+
+
+def test_nystrom_costs_close_to_bound():
+    n, r = 4096, 256
+    for P in [2, 8, 64, 512, 4096]:
+        lb = nystrom_lower_bound(n, r, P)
+        gr = select_nystrom_grids(n, r, P, variant="bound_driven")
+        # paper §5.3: cost is within nr/P (cases 1-2), r (case 3) or
+        # sqrt(nr(n+r)/P) (case 4) of the bound
+        slack = max(n * r / P, r, math.sqrt(n * r * (n + r) / P))
+        own = (n * n + 2 * n * r + r * r) / P
+        assert gr.bandwidth_words <= lb + own + slack + 1e-6
+
+
+def test_no_redist_cost_is_r_squared_like():
+    n, r, P = 4096, 64, 16
+    g = select_nystrom_grids(n, r, P, variant="no_redist")
+    expect = (1 - 1 / P) * r * r
+    assert math.isclose(g.bandwidth_words, expect, rel_tol=1e-9)
+    assert not g.redistributes_B
+
+
+def test_redist_cost_scales_with_P():
+    n, r = 8192, 128
+    c = [select_nystrom_grids(n, r, P, variant="redist").bandwidth_words
+         for P in (8, 16, 32)]
+    assert c[0] > c[1] > c[2]   # shrinks with P (O(nr/P) dominates)

@@ -1,0 +1,178 @@
+"""Model-level consistency: step-by-step decode must reproduce the
+teacher-forced forward logits (validates KV caches, ring buffers, SSM state
+carry, shared-block caches, cross-attention caches)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import get_api
+from repro.models.common import NULL_CTX
+from repro.models import transformer, whisper as whisper_mod
+
+B, S = 2, 16
+
+
+def _full_logits_dense(params, cfg, tokens):
+    h, _ = transformer.lm_hidden(params, cfg, tokens, remat=False)
+    W = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, W)
+    from repro.models.common import softcap
+    return softcap(logits, cfg.final_softcap)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma2-2b",
+                                  "granite-moe-1b-a400m"])
+def test_decode_matches_forward_dense(arch):
+    overrides = {}
+    if arch == "granite-moe-1b-a400m":
+        overrides["capacity_factor"] = 8.0   # avoid token drops in the test
+    cfg = get_config(arch).reduced(**overrides)
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+
+    ref = _full_logits_dense(params, cfg, tokens)
+
+    cache = api.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(logits)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_windowed_ring_cache_matches_forward():
+    """danube (SWA): window smaller than the sequence -> ring buffer path."""
+    cfg = get_config("h2o-danube-3-4b").reduced(window=6)
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ref = _full_logits_dense(params, cfg, tokens)
+    cache = api.init_cache(cfg, B, S)          # ring length = window
+    assert cache[0]["k"].shape[1] == 6
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(logits)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_then_decode_matches_forward():
+    cfg = get_config("llama3-8b").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ref = _full_logits_dense(params, cfg, tokens)
+
+    half = S // 2
+    logits_p, cache = transformer.prefill(params, cfg, tokens[:, :half],
+                                          remat=False, max_len=S)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0], np.float32),
+                               np.asarray(ref[:, half - 1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    for t in range(half, S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                                   np.asarray(ref[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_ring_handoff_windowed():
+    """Prefill a windowed model then decode — ring slot arithmetic must
+    line up across the handoff, including S % window != 0."""
+    cfg = get_config("h2o-danube-3-4b").reduced(window=6)
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ref = _full_logits_dense(params, cfg, tokens)
+    half = 9                                    # 9 % 6 != 0
+    _, cache = transformer.prefill(params, cfg, tokens[:, :half],
+                                   remat=False, max_len=S)
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    for t in range(half, S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                                   np.asarray(ref[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-1.2b"])
+def test_decode_matches_forward_ssm_hybrid(arch):
+    cfg = get_config(arch).reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+
+    if arch == "falcon-mamba-7b":
+        from repro.models.mamba_lm import mamba_lm_hidden
+        h = mamba_lm_hidden(params, cfg, tokens, remat=False)
+    else:
+        from repro.models.zamba import hybrid_hidden
+        h = hybrid_hidden(params, cfg, tokens, remat=False)
+    ref = jnp.einsum("bsd,vd->bsv", h, params["lm_head"])
+
+    cache = api.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(logits)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_whisper_decode_matches_teacher_forced():
+    cfg = get_config("whisper-tiny").reduced()
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    frames = jax.random.normal(jax.random.key(2), (B, cfg.enc_seq, cfg.d_model))
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+
+    enc = whisper_mod.encode(params, cfg, frames, remat=False)
+    h = whisper_mod.decode_hidden(params, cfg, tokens, enc, remat=False)
+    ref = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+
+    cache = api.init_cache(cfg, B, S)
+    ck, cv = whisper_mod.encdec_prepare_cross(params, cfg, enc)
+    cache = dict(cache, cross_k=ck, cross_v=cv)
+    step = jax.jit(lambda p, t, c, pos: api.decode_step(p, cfg, t, c, pos))
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(logits)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_nystrom_attention_approximates_exact():
+    """Landmark attention should beat a trivial baseline at approximating
+    exact softmax attention on smooth inputs."""
+    from repro.models.attention import attn_init, attention, nystrom_attention
+    d, H, Hk, D = 32, 4, 4, 8
+    S = 64
+    params = attn_init(jax.random.key(0), d, H, Hk, D, jnp.float32)
+    t = jnp.linspace(0, 4, S)
+    x = jnp.stack([jnp.sin(t * (i + 1) / 4) for i in range(d)], -1)[None]
+    exact = attention(params, x, n_heads=H, n_kv_heads=Hk, head_dim=D,
+                      causal=False, use_rope=False)
+    approx = nystrom_attention(params, x, n_heads=H, n_kv_heads=Hk,
+                               head_dim=D, n_landmarks=16, use_rope=False)
+    err = float(jnp.linalg.norm(exact - approx) / jnp.linalg.norm(exact))
+    assert err < 0.35, err
+    assert not bool(jnp.any(jnp.isnan(approx)))

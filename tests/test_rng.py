@@ -1,0 +1,134 @@
+"""Philox-4x32 correctness + the tile-decomposition-invariance property that
+makes regeneration communication-free."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+# ---------------------------------------------------------------------------
+# 16-bit-limb mulhilo vs native 64-bit reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+def test_mulhilo32_matches_uint64_reference(a, b):
+    hi, lo = rng._mulhilo32(jnp.uint32(a), jnp.uint32(b))
+    prod = (a * b) & 0xFFFFFFFFFFFFFFFF
+    assert int(lo) == prod & 0xFFFFFFFF
+    assert int(hi) == prod >> 32
+
+
+def test_mulhilo32_vectorized():
+    an = np.arange(0, 2**32 - 1, 104729, dtype=np.uint64)
+    bn = np.arange(1, 2**32, 99991, dtype=np.uint64)[: an.shape[0]]
+    hi, lo = rng._mulhilo32(jnp.asarray(an.astype(np.uint32)),
+                            jnp.asarray(bn.astype(np.uint32)))
+    prod = an * bn
+    np.testing.assert_array_equal(
+        np.asarray(lo).astype(np.uint64), prod & np.uint64(0xFFFFFFFF))
+    np.testing.assert_array_equal(
+        np.asarray(hi).astype(np.uint64), prod >> np.uint64(32))
+
+
+# ---------------------------------------------------------------------------
+# Philox known-answer test (Random123 reference vectors)
+# ---------------------------------------------------------------------------
+
+def test_philox_4x32_10_known_answer():
+    """Reference vectors from the Random123 distribution (kat_vectors):
+    philox4x32-10 with counter=0, key=0 and all-ones inputs."""
+    out = rng.philox_4x32(
+        (jnp.uint32(0), jnp.uint32(0), jnp.uint32(0), jnp.uint32(0)),
+        (jnp.uint32(0), jnp.uint32(0)))
+    got = [int(x) for x in out]
+    assert got == [0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8]
+
+    out = rng.philox_4x32(
+        tuple(jnp.uint32(0xFFFFFFFF) for _ in range(4)),
+        (jnp.uint32(0xFFFFFFFF), jnp.uint32(0xFFFFFFFF)))
+    got = [int(x) for x in out]
+    assert got == [0x408F276D, 0x41C83B0E, 0xA20BC7C6, 0x6D5451FD]
+
+    out = rng.philox_4x32(
+        (jnp.uint32(0x243F6A88), jnp.uint32(0x85A308D3),
+         jnp.uint32(0x13198A2E), jnp.uint32(0x03707344)),
+        (jnp.uint32(0xA4093822), jnp.uint32(0x299F31D0)))
+    got = [int(x) for x in out]
+    assert got == [0xD16CFE09, 0x94FDCCEB, 0x5001E420, 0x24126EA1]
+
+
+# ---------------------------------------------------------------------------
+# Tile-decomposition invariance: the regenerate-don't-communicate invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(2, 48), cols=st.integers(2, 48),
+    r0=st.integers(0, 1000), c0=st.integers(0, 1000),
+    seed=st.integers(0, 2**63 - 1),
+)
+def test_tile_decomposition_invariance(rows, cols, r0, c0, seed):
+    k0 = jnp.uint32(seed & 0xFFFFFFFF)
+    k1 = jnp.uint32(seed >> 32)
+    full = rng.philox_normal_grid(k0, k1, jnp.uint32(r0), jnp.uint32(c0),
+                                  rows, cols)
+    # split into 4 quadrants generated independently
+    rh, ch = rows // 2, cols // 2
+    q00 = rng.philox_normal_grid(k0, k1, jnp.uint32(r0), jnp.uint32(c0), rh, ch)
+    q01 = rng.philox_normal_grid(k0, k1, jnp.uint32(r0), jnp.uint32(c0 + ch),
+                                 rh, cols - ch)
+    q10 = rng.philox_normal_grid(k0, k1, jnp.uint32(r0 + rh), jnp.uint32(c0),
+                                 rows - rh, ch)
+    q11 = rng.philox_normal_grid(k0, k1, jnp.uint32(r0 + rh),
+                                 jnp.uint32(c0 + ch), rows - rh, cols - ch)
+    reassembled = jnp.block([[q00, q01], [q10, q11]])
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(reassembled))
+
+
+def test_uniform_range_and_moments():
+    u = rng.philox_uniform_grid(jnp.uint32(1), jnp.uint32(2),
+                                jnp.uint32(0), jnp.uint32(0), 512, 512)
+    u = np.asarray(u)
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 5e-3
+    assert abs(u.var() - 1 / 12) < 5e-3
+
+
+def test_normal_moments_and_independence_across_salt():
+    g1 = np.asarray(rng.philox_normal_grid(jnp.uint32(1), jnp.uint32(2),
+                                           jnp.uint32(0), jnp.uint32(0),
+                                           512, 512, salt=0))
+    g2 = np.asarray(rng.philox_normal_grid(jnp.uint32(1), jnp.uint32(2),
+                                           jnp.uint32(0), jnp.uint32(0),
+                                           512, 512, salt=1))
+    assert abs(g1.mean()) < 5e-3
+    assert abs(g1.std() - 1.0) < 5e-3
+    corr = np.corrcoef(g1.ravel(), g2.ravel())[0, 1]
+    assert abs(corr) < 5e-3
+    assert not np.array_equal(g1, g2)
+
+
+def test_block_omega_matches_omega_full():
+    key = jax.random.key(42)
+    n2, r, p2, p3 = 24, 8, 3, 2
+    full = rng.omega_full(key, n2, r, p2, p3)
+    br, bc = n2 // p2, r // p3
+    for j in range(p2):
+        for k in range(p3):
+            blk = rng.block_omega(key, j, k, br, bc, p3)
+            np.testing.assert_array_equal(
+                np.asarray(full[j * br:(j + 1) * br, k * bc:(k + 1) * bc]),
+                np.asarray(blk))
+
+
+def test_philox_omega_full_deterministic():
+    a = rng.philox_omega_full(123, 32, 8)
+    b = rng.philox_omega_full(123, 32, 8)
+    c = rng.philox_omega_full(124, 32, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
