@@ -1,0 +1,19 @@
+# Tier-1 verification and benchmarks — the commands CI runs, documented
+# here so they are reproducible locally.
+#
+#   make test    — the tier-1 suite (single CPU device in the main process;
+#                  distributed tests spawn subprocesses with 8 fake devices
+#                  via tests/dist_helper.py)
+#   make bench   — the benchmark driver (CSV to stdout)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: test bench
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run

@@ -8,6 +8,7 @@ from .common import run_with_devices
 _SNIPPET = r"""
 import time, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.compat import shard_map
 from repro.parallel.grad_compress import (compress_and_allreduce,
     init_error_fb, local_fb, stack_fb, comm_words_exact,
     comm_words_compressed)
@@ -26,10 +27,10 @@ def comp_step(g, fb):
 def exact_step(g):
     return jax.lax.pmean(g, "data")
 
-cfn = jax.jit(jax.shard_map(comp_step, mesh=mesh,
+cfn = jax.jit(shard_map(comp_step, mesh=mesh,
               in_specs=(P(), P("data")), out_specs=(P(), P("data")),
               check_vma=False))
-efn = jax.jit(jax.shard_map(exact_step, mesh=mesh, in_specs=P(),
+efn = jax.jit(shard_map(exact_step, mesh=mesh, in_specs=P(),
               out_specs=P(), check_vma=False))
 
 g = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), shapes)

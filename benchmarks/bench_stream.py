@@ -1,0 +1,127 @@
+"""Streaming-sketch benchmarks: update throughput + one-pass accuracy.
+
+Columns:
+  stream_rowblock_k{K}     — local row-block ingest at chunk height K;
+                             derived: rows/s and whether the result is
+                             bitwise-equal to the one-shot reference at
+                             this chunk height (informational: tiny chunks
+                             against a large contraction can drop to
+                             reduction-order tolerance — see
+                             docs/ARCHITECTURE.md invariant 2).
+  stream_vs_oneshot        — full-matrix streamed in chunks vs a single
+                             one-shot sketch call (amortized overhead).
+  stream_recon_error       — one-pass reconstruction error vs the one-shot
+                             low-rank baseline on a noisy low-rank matrix.
+  stream_dist_update_P8    — distributed additive update on a (8,1,1) grid;
+                             derived: per-device collective bytes (must be
+                             zero — the regenerate-don't-communicate claim
+                             carried over to streaming).
+"""
+from __future__ import annotations
+
+import time
+
+from .common import emit, run_with_devices, time_us
+
+
+def _local():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sketch_reference
+    from repro.stream import (StreamConfig, StreamingSketch, SketchService,
+                              reconstruction_error)
+
+    n1, n2, r, seed = 2048, 1024, 64, 7
+    A = jax.random.normal(jax.random.key(0), (n1, n2))
+
+    # row-block ingest throughput at several chunk heights (service path:
+    # one compiled executable per height, traced offsets)
+    for k in (64, 256, 1024):
+        svc = SketchService()
+        cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed, corange=False)
+        warm = svc.open(cfg)                # throwaway stream: compile only
+        svc.update(warm, A[:k], row0=0)
+        svc.close(warm)
+        sid = svc.open(cfg)                 # shares the compiled update
+        t0 = time.perf_counter()
+        nup = 0
+        for i in range(0, n1, k):
+            svc.update(sid, A[i:i + k], row0=i)
+            nup += 1
+        jax.block_until_ready(svc.sketch(sid))
+        dt = time.perf_counter() - t0
+        rows_per_s = n1 / dt
+        bitwise = np.array_equal(np.asarray(svc.sketch(sid)),
+                                 np.asarray(sketch_reference(A, seed, r)))
+        emit(f"stream_rowblock_k{k}", dt / nup * 1e6,
+             f"rows_per_s={rows_per_s:.3g};bitwise={bitwise}")
+
+    # streamed (16 chunks) vs one-shot: same result, amortized cost
+    st = StreamingSketch(StreamConfig(n1=n1, n2=n2, r=r, seed=seed,
+                                      corange=False), backend="xla")
+    k = n1 // 16
+
+    def run_stream():
+        st.Y = jnp.zeros_like(st.Y)
+        for i in range(0, n1, k):
+            st.update_rows(i, A[i:i + k])
+        return st.Y
+
+    us_stream = time_us(run_stream)
+    us_oneshot = time_us(lambda: sketch_reference(A, seed, r))
+    bitwise = np.array_equal(np.asarray(run_stream()),
+                             np.asarray(sketch_reference(A, seed, r)))
+    emit("stream_vs_oneshot", us_stream,
+         f"oneshot_us={us_oneshot:.1f};bitwise={bitwise}")
+
+    # one-pass reconstruction error on low-rank + noise
+    rank = 16
+    M = (jax.random.normal(jax.random.key(1), (n1, rank))
+         @ jax.random.normal(jax.random.key(2), (rank, n2))
+         + 1e-3 * jax.random.normal(jax.random.key(3), (n1, n2)))
+    sr = StreamingSketch(StreamConfig(n1=n1, n2=n2, r=4 * rank, seed=5))
+    for i in range(0, n1, 256):
+        sr.update_rows(i, M[i:i + 256])
+    t0 = time.perf_counter()
+    err = float(reconstruction_error(M, sr.reconstruct(rank=rank)))
+    us = (time.perf_counter() - t0) * 1e6
+    emit("stream_recon_error", us, f"rel_err={err:.3e}")
+
+
+_DIST_SNIPPET = r"""
+import time, jax, jax.numpy as jnp
+from repro.core import make_grid_mesh
+from repro.core.sketch import input_sharding
+from repro.roofline.hlo import collective_bytes_of
+from repro.stream import StreamConfig, ShardedStreamingSketch
+
+n, r = 2048, 64
+mesh = make_grid_mesh(8, 1, 1)
+cfg = StreamConfig(n1=n, n2=n, r=r, seed=7, corange=False)
+st = ShardedStreamingSketch(cfg, mesh)
+H = jax.device_put(jax.random.normal(jax.random.key(0), (n, n)),
+                   input_sharding(mesh))
+st.update(H)                                    # compile + warm
+t0 = time.perf_counter()
+for _ in range(5):
+    st.update(H)
+jax.block_until_ready(st.sketch)
+us = (time.perf_counter() - t0) / 5 * 1e6
+cb = collective_bytes_of(st._upd.lower(st.Y, st.W, H).compile().as_text())
+print(f"RESULT stream_dist_update_P8,{us:.1f},coll_bytes={cb.total:.0f}")
+assert cb.total == 0, cb
+"""
+
+
+def main():
+    _local()
+    out = run_with_devices(_DIST_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+
+
+if __name__ == "__main__":
+    main()

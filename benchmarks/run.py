@@ -13,7 +13,7 @@ import traceback
 
 from . import (bench_bounds, bench_comm_vs_gen, bench_error,
                bench_grad_compress, bench_kernels, bench_nystrom,
-               bench_sketch)
+               bench_sketch, bench_stream)
 
 SUITES = {
     "thm_bounds": bench_bounds.main,        # Thm 2/3 tables
@@ -23,6 +23,7 @@ SUITES = {
     "tab2_error": bench_error.main,
     "kernels": bench_kernels.main,
     "grad_compress": bench_grad_compress.main,
+    "stream": bench_stream.main,
 }
 
 

@@ -13,9 +13,10 @@ from .grid import (  # noqa: F401
 )
 from .sketch import (  # noqa: F401
     rand_matmul, rand_matmul_auto, rand_matmul_communicating,
-    sketch_reference, omega_tile, make_grid_mesh,
+    sketch_reference, omega_tile, seed_keys, make_grid_mesh,
 )
 from .nystrom import (  # noqa: F401
     nystrom_reference, nystrom_no_redist, nystrom_redist, nystrom_general,
-    nystrom_auto, reconstruct, relative_error,
+    nystrom_auto, nystrom_second_stage_no_redist, nystrom_second_stage_redist,
+    reconstruct, relative_error,
 )

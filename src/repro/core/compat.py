@@ -1,0 +1,34 @@
+"""Version compatibility shims for the JAX APIs the core algorithms need.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` into the top-level
+``jax`` namespace around jax 0.5, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way; this repo must run on both (the
+pinned CI environment ships 0.4.x).  Everything in ``core/``, ``stream/``,
+and ``train/`` imports ``shard_map`` from here instead of reaching into
+``jax`` directly.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                                   # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:                                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg translated to
+    whatever name the installed jax understands."""
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+__all__ = ["shard_map"]

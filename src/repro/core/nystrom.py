@@ -19,9 +19,16 @@ Plus the general two-grid form (``nystrom_general``) that runs Alg. 1 on an
 arbitrary (p1,p2,p3) grid and the second multiply on an arbitrary
 (q1,q2,q3) grid, with XLA inserting the B redistribution (§5.2's
 ``Redistribute``) via a sharding constraint.
+
+The second stages are factored out (``nystrom_second_stage_no_redist`` /
+``nystrom_second_stage_redist``) so they can consume any row-sharded B —
+the one-shot variants above produce B with the zero-communication first
+stage, and the streaming subsystem (``repro.stream``) feeds its accumulated
+Y straight into the same code at finalize time.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -29,7 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .sketch import omega_tile, rand_matmul, make_grid_mesh, DEFAULT_AXES
+from .compat import shard_map
+from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, make_grid_mesh,
+                     omega_tile, rand_matmul, seed_keys)
 
 X_AXIS = "x"
 
@@ -78,10 +87,121 @@ def relative_error(A, B, C, rcond: Optional[float] = None):
 
 
 # ---------------------------------------------------------------------------
+# First stage (shared): B_i = A_i·Omega on a 1-D row-sharded layout
+# ---------------------------------------------------------------------------
+
+def _sketch_rows_1d(A, seed, r: int, mesh: Mesh, axis: str, kind: str):
+    """B = A·Omega with A row-sharded; every rank regenerates the full Omega
+    (zero communication — the Case-1 grid p=(P,1,1) of Alg. 1)."""
+    keys = jnp.stack(seed_keys(seed))
+    return _sketch_rows_1d_prog(r, mesh, axis, kind)(A, keys)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _sketch_rows_1d_prog(r: int, mesh: Mesh, axis: str, kind: str):
+    def impl(A, keys):
+        n2 = A.shape[1]
+
+        def body(a_i):                            # a_i: (n/P, n2)
+            om = omega_tile(keys, 0, 0, n2, r, kind, a_i.dtype)
+            return a_i @ om                       # (n/P, r) — no comm
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=P(axis, None), out_specs=P(axis, None))(A)
+
+    return jax.jit(impl)
+
+
+# ---------------------------------------------------------------------------
+# Second stages (shared with the streaming subsystem, repro.stream):
+# C = Omega^T·B from a row-sharded B.  The streaming accumulator finalizes
+# its Nyström pair by feeding the accumulated Y (= B) straight into these.
+# ---------------------------------------------------------------------------
+
+def nystrom_second_stage_no_redist(B, seed, r: int, mesh: Mesh,
+                                   axis: str = X_AXIS, kind: str = "normal",
+                                   salt: int = 0):
+    """No-Redist second stage: C = Omega^T·B with B row-sharded (§5.3).
+
+    Each rank forms the partial product Omega_i^T·B_i against its local row
+    block and one Reduce-Scatter of r^2 words produces C row-sharded —
+    B never moves.  Omega_i is regenerated from global coordinates, so this
+    composes bitwise with any producer of B (one-shot or streamed).
+    """
+    Pn = mesh.shape[axis]
+    n = B.shape[0]
+    if n % Pn or r % Pn:
+        raise ValueError(f"n={n}, r={r} must divide P={Pn}")
+    keys = jnp.stack(seed_keys(seed))
+    return _second_stage_no_redist_prog(r, mesh, axis, kind, salt)(B, keys)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _second_stage_no_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
+                                 salt: int):
+    Pn = mesh.shape[axis]
+
+    def impl(B, keys):
+        rows = B.shape[0] // Pn
+
+        def body(b_i):                            # b_i: (n/P, r2)
+            i = jax.lax.axis_index(axis)
+            om_i = omega_tile(keys, i * rows, 0, rows, r, kind, b_i.dtype,
+                              salt=salt)
+            c_part = om_i.T @ b_i                 # (r, r2) partial sum
+            return jax.lax.psum_scatter(c_part, axis, scatter_dimension=0,
+                                        tiled=True)   # (r/P, r2)
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=P(axis, None), out_specs=P(axis, None))(B)
+
+    return jax.jit(impl)
+
+
+def nystrom_second_stage_redist(B, seed, r: int, mesh: Mesh,
+                                axis: str = X_AXIS, kind: str = "normal",
+                                salt: int = 0):
+    """Redist second stage: re-lay out B and finish locally (§5.3).
+
+    One All-to-All moves nr/P words per processor (row-shard -> column-shard
+    re-layout of B); the product C = Omega^T·B is then entirely local.
+    Returns (B column-sharded, C column-sharded).
+    """
+    Pn = mesh.shape[axis]
+    n = B.shape[0]
+    if n % Pn or r % Pn:
+        raise ValueError(f"n={n}, r={r} must divide P={Pn}")
+    keys = jnp.stack(seed_keys(seed))
+    return _second_stage_redist_prog(r, mesh, axis, kind, salt)(B, keys)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _second_stage_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
+                              salt: int):
+    def impl(B, keys):
+        n = B.shape[0]
+
+        def body(b_i):                            # b_i: (n/P, r)
+            # Redistribute B: rows-sharded -> cols-sharded (All-to-All).
+            b_k = jax.lax.all_to_all(b_i, axis, split_axis=1, concat_axis=0,
+                                     tiled=True)  # (n, r/P)
+            om = omega_tile(keys, 0, 0, n, r, kind, b_k.dtype,
+                            salt=salt)                       # full Omega
+            c_k = om.T @ b_k                      # (r, r/P) — local
+            return b_k, c_k
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=P(axis, None),
+                         out_specs=(P(None, axis), P(None, axis)))(B)
+
+    return jax.jit(impl)
+
+
+# ---------------------------------------------------------------------------
 # 1-D No-Redist  (p = q = (P,1,1))
 # ---------------------------------------------------------------------------
 
-def nystrom_no_redist(A, seed: int, r: int, mesh: Mesh,
+def nystrom_no_redist(A, seed, r: int, mesh: Mesh,
                       axis: str = X_AXIS, kind: str = "normal"):
     """Paper's No-Redist variant.
 
@@ -93,29 +213,16 @@ def nystrom_no_redist(A, seed: int, r: int, mesh: Mesh,
     n = A.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
-    rows = n // Pn
-
-    def body(a_i):                                # a_i: (n/P, n)
-        i = jax.lax.axis_index(axis)
-        om = omega_tile(seed, 0, 0, n, r, kind, a_i.dtype)   # full Omega
-        b_i = a_i @ om                            # (n/P, r) — no comm
-        om_i = jax.lax.dynamic_slice(om, (i * rows, 0), (rows, r))
-        c_part = om_i.T @ b_i                     # (r, r) partial sum
-        c_i = jax.lax.psum_scatter(c_part, axis, scatter_dimension=0,
-                                   tiled=True)    # (r/P, r)
-        return b_i, c_i
-
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=P(axis, None),
-                       out_specs=(P(axis, None), P(axis, None)))
-    return fn(A)
+    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind)
+    C = nystrom_second_stage_no_redist(B, seed, r, mesh, axis, kind)
+    return B, C
 
 
 # ---------------------------------------------------------------------------
 # 1-D Redist  (p = (P,1,1), q = (1,1,P))
 # ---------------------------------------------------------------------------
 
-def nystrom_redist(A, seed: int, r: int, mesh: Mesh,
+def nystrom_redist(A, seed, r: int, mesh: Mesh,
                    axis: str = X_AXIS, kind: str = "normal"):
     """Paper's Redist variant.
 
@@ -128,20 +235,8 @@ def nystrom_redist(A, seed: int, r: int, mesh: Mesh,
     n = A.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
-
-    def body(a_i):                                # a_i: (n/P, n)
-        om = omega_tile(seed, 0, 0, n, r, kind, a_i.dtype)   # full Omega
-        b_i = a_i @ om                            # (n/P, r) — no comm
-        # Redistribute B: rows-sharded -> cols-sharded (paper's All-to-All).
-        b_k = jax.lax.all_to_all(b_i, axis, split_axis=1, concat_axis=0,
-                                 tiled=True)      # (n, r/P)
-        c_k = om.T @ b_k                          # (r, r/P) — local
-        return b_k, c_k
-
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=P(axis, None),
-                       out_specs=(P(None, axis), P(None, axis)))
-    return fn(A)
+    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind)
+    return nystrom_second_stage_redist(B, seed, r, mesh, axis, kind)
 
 
 # ---------------------------------------------------------------------------
@@ -161,41 +256,53 @@ def nystrom_general(A, seed: int, r: int, mesh: Mesh,
     shifted: all-gather B over q2, generate Omega_{i'j'}, local GEMM,
     reduce-scatter C over q1.
     """
-    q_axes = q_axes or p_axes
-    a1, a2, a3 = q_axes
+    q_axes = tuple(q_axes or p_axes)
+    p_axes = tuple(p_axes)
     q1, q2, q3 = (mesh.shape[a] for a in q_axes)
     n = A.shape[0]
-
-    B = rand_matmul(A, seed, r, mesh, axes=p_axes, kind=kind)
-
-    # Redistribute B into the stage-2 layout: rows over q1, cols over
-    # (q3, q2) — each block B_{i'k'} split column-wise across the q2 fiber.
-    B = jax.lax.with_sharding_constraint(
-        B, NamedSharding(mesh, P(a1, (a3, a2))))
-
     if n % q1 or r % (q2 * q3) or r % q2 or r % q3:
         raise ValueError(f"(n={n}, r={r}) not divisible by q-grid "
                          f"({q1},{q2},{q3})")
-    om_rows = n // q1
-    om_cols = r // q2
+    keys = jnp.stack(seed_keys(seed))
+    return _nystrom_general_prog(r, mesh, p_axes, q_axes, kind)(A, keys)
 
-    def stage2(b_blk):                            # (n/q1, r/(q3 q2))
-        i = jax.lax.axis_index(a1)
-        j = jax.lax.axis_index(a2)
-        b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
-        om = omega_tile(seed, i * om_rows, j * om_cols,
-                        om_rows, om_cols, kind, b_ik.dtype)
-        c_part = om.T @ b_ik                      # (r/q2, r/q3) partial
-        if q1 == 1:
-            return c_part
-        return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
-                                    tiled=True)
 
-    fn = jax.shard_map(stage2, mesh=mesh,
-                       in_specs=P(a1, (a3, a2)),
-                       out_specs=P((a2, a1), a3))
-    C = fn(B)
-    return B, C
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _nystrom_general_prog(r: int, mesh: Mesh,
+                          p_axes: Tuple[str, str, str],
+                          q_axes: Tuple[str, str, str], kind: str):
+    a1, a2, a3 = q_axes
+    q1, q2, q3 = (mesh.shape[a] for a in q_axes)
+
+    def impl(A, keys):
+        n = A.shape[0]
+        B = rand_matmul(A, keys, r, mesh, axes=p_axes, kind=kind)
+
+        # Redistribute B into the stage-2 layout: rows over q1, cols over
+        # (q3, q2) — each block B_{i'k'} split column-wise across q2.
+        B = jax.lax.with_sharding_constraint(
+            B, NamedSharding(mesh, P(a1, (a3, a2))))
+        om_rows = n // q1
+        om_cols = r // q2
+
+        def stage2(b_blk):                        # (n/q1, r/(q3 q2))
+            i = jax.lax.axis_index(a1)
+            j = jax.lax.axis_index(a2)
+            b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
+            om = omega_tile(keys, i * om_rows, j * om_cols,
+                            om_rows, om_cols, kind, b_ik.dtype)
+            c_part = om.T @ b_ik                  # (r/q2, r/q3) partial
+            if q1 == 1:
+                return c_part
+            return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
+                                        tiled=True)
+
+        C = shard_map(stage2, mesh=mesh,
+                      in_specs=P(a1, (a3, a2)),
+                      out_specs=P((a2, a1), a3))(B)
+        return B, C
+
+    return jax.jit(impl)
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,34 @@ def _uniform_from_u32(bits):
     return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
+# ---------------------------------------------------------------------------
+# Bit-exact normal generation (Irwin-Hall / CLT-12).
+#
+# Why not Box-Muller: jnp.log / jnp.cos lower to backend libm or SIMD
+# approximations whose rounding differs between vector widths — the same
+# input value can yield different low bits depending on the *shape* of the
+# array it sits in (vector body vs. scalar remainder lane).  And any
+# hand-rolled polynomial replacement is context-dependent instead: inside a
+# jit fusion XLA's CPU backend contracts mul+add chains into FMAs, so even
+# plain `a*b + c` rounds differently eager vs. jitted.  Either way the tile
+# shape or the consumer's compilation context leaks into Omega's bits,
+# breaking the regenerate-don't-communicate determinism contract.
+#
+# The Irwin-Hall transform has NO roundable float arithmetic at all:
+#
+#     z = (sum of 12 uniform 24-bit integers - 6*2^24) * 2^-24
+#
+# Integer adds are exact; the int->float convert is correctly rounded by
+# IEEE on every backend; the final scale is a power of two (exponent shift,
+# exact).  The entry bits therefore depend on nothing but (seed, salt,
+# global coordinate) — invariant to tiling, fusion, vectorization, and
+# backend.  Statistically: mean 0, variance 12 * (1/12) = 1, support
+# [-6, 6] (subgaussian), which preserves every sketching guarantee used
+# here (JL-type embeddings need only subgaussian entries).  Costs 3 Philox
+# invocations per entry (12 lanes) instead of Box-Muller's 1.
+# ---------------------------------------------------------------------------
+
+
 def philox_uniform_grid(key0: jnp.ndarray, key1: jnp.ndarray,
                         row0: jnp.ndarray, col0: jnp.ndarray,
                         rows: int, cols: int,
@@ -129,25 +157,27 @@ def philox_normal_grid(key0: jnp.ndarray, key1: jnp.ndarray,
                        row0: jnp.ndarray, col0: jnp.ndarray,
                        rows: int, cols: int,
                        salt: int = 0) -> jnp.ndarray:
-    """A (rows, cols) float32 N(0,1) tile via Box-Muller on two Philox lanes.
+    """A (rows, cols) float32 ~N(0,1) tile, bit-exact on every backend.
 
-    Uses output lanes r0/r1 of a single Philox call per element, so the cost
-    equals one generator invocation per entry (as in the paper's MKL/cuRAND
-    usage).
+    Irwin-Hall: the sum of 12 uniform 24-bit lanes, centered and scaled —
+    see the block comment above for why this beats Box-Muller here (zero
+    roundable float ops => entry bits depend only on seed/salt/global
+    coordinate, never on tile shape or fusion context).  Three Philox
+    invocations per entry; the sub-counter lives in counter lane c3
+    (offset by 1 so the normal stream never aliases the uniform stream's
+    c3 = 0 block).
     """
     gi = row0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
     gj = col0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
-    r0, r1, r2, r3 = philox_4x32(
-        (gi, gj, _u32(salt) + jnp.zeros_like(gi), jnp.zeros_like(gi)),
-        (key0, key1))
-    del r2, r3
-    u1 = _uniform_from_u32(r0)
-    u2 = _uniform_from_u32(r1)
-    # Box-Muller; clamp u1 away from 0 to keep log finite.
-    u1 = jnp.maximum(u1, jnp.float32(1e-7))
-    radius = jnp.sqrt(-2.0 * jnp.log(u1))
-    theta = jnp.float32(2.0 * np.pi) * u2
-    return radius * jnp.cos(theta)
+    salt_c = _u32(salt) + jnp.zeros_like(gi)
+    total = jnp.zeros_like(gi)                         # uint32; max 12*2^24
+    for sub in range(3):
+        r0, r1, r2, r3 = philox_4x32(
+            (gi, gj, salt_c, _u32(sub + 1) + jnp.zeros_like(gi)),
+            (key0, key1))
+        total = total + (r0 >> 8) + (r1 >> 8) + (r2 >> 8) + (r3 >> 8)
+    d = total.astype(jnp.int32) - jnp.int32(6 * (1 << 24))   # exact
+    return d.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
 # ---------------------------------------------------------------------------

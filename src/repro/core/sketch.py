@@ -28,6 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import rng
+from .compat import shard_map
 from .grid import MatmulGrid, select_matmul_grid
 
 DEFAULT_AXES = ("p1", "p2", "p3")
@@ -37,15 +38,38 @@ DEFAULT_AXES = ("p1", "p2", "p3")
 # Omega tile generation (shared by local + distributed paths)
 # ---------------------------------------------------------------------------
 
-def omega_tile(seed: int, row0, col0, rows: int, cols: int,
+def seed_keys(seed):
+    """The Philox (key0, key1) pair for a seed.
+
+    ``seed`` may be a Python int (split into two uint32 halves, as the
+    one-shot APIs have always done) or a JAX value — a scalar or a shape-(2,)
+    uint32 array — so the streaming sketch service can trace the seed and
+    share one compiled update executable across every concurrent stream.
+    A Python int < 2**32 and the equivalent traced uint32 scalar produce
+    bitwise-identical Omega entries.
+    """
+    if isinstance(seed, (int, np.integer)):
+        seed = int(seed)
+        return (jnp.uint32(seed & 0xFFFFFFFF),
+                jnp.uint32((seed >> 32) & 0xFFFFFFFF))
+    seed = jnp.asarray(seed)
+    if seed.shape == (2,):
+        return seed[0].astype(jnp.uint32), seed[1].astype(jnp.uint32)
+    if seed.shape == ():
+        return seed.astype(jnp.uint32), jnp.zeros((), jnp.uint32)
+    raise ValueError(f"seed must be an int, a scalar, or a (2,) key pair; "
+                     f"got shape {seed.shape}")
+
+
+def omega_tile(seed, row0, col0, rows: int, cols: int,
                kind: str = "normal", dtype=jnp.float32, salt: int = 0):
     """Tile [row0:row0+rows, col0:col0+cols] of the global Omega.
 
     Entry values depend only on global coordinates + seed, never on the
     tiling, so this is safe to call from any shard with traced offsets.
+    ``seed`` may be traced (see :func:`seed_keys`).
     """
-    key0 = jnp.uint32(seed & 0xFFFFFFFF)
-    key1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+    key0, key1 = seed_keys(seed)
     row0 = jnp.asarray(row0, jnp.uint32)
     col0 = jnp.asarray(col0, jnp.uint32)
     if kind == "normal":
@@ -60,7 +84,7 @@ def omega_tile(seed: int, row0, col0, rows: int, cols: int,
     return t.astype(dtype)
 
 
-def sketch_reference(A, seed: int, r: int, kind: str = "normal",
+def sketch_reference(A, seed, r: int, kind: str = "normal",
                      scale: Optional[float] = None):
     """Single-device oracle: B = A @ Omega with the full Omega materialized."""
     n2 = A.shape[-1]
@@ -102,55 +126,80 @@ def output_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
 # Algorithm 1
 # ---------------------------------------------------------------------------
 
-def rand_matmul(A, seed: int, r: int, mesh: Mesh,
+def rand_matmul(A, seed, r: int, mesh: Mesh,
                 axes: Tuple[str, str, str] = DEFAULT_AXES,
                 kind: str = "normal",
                 scale: Optional[float] = None,
-                precision=None):
+                precision=None, salt: int = 0):
     """B = A @ Omega on the (p1, p2, p3) grid ``mesh`` (paper Alg. 1).
 
     A must be shardable as P(p1, (p2, p3)); the result is sharded
     P((p1, p2), p3).  Communication: one tiled All-Gather over p3 and one
     tiled Reduce-Scatter over p2 — matching the paper's optimal bandwidth
     ``(1-1/p3)·n1n2/(p1p2) + (1-1/p2)·n1r/(p1p3)`` exactly.
+
+    The compiled program is cached per (r, mesh, axes, kind, scale,
+    precision) with the seed *traced* as a Philox key pair, so repeated
+    calls — any seed, any A of the same shape — reuse one executable.
+    (Eager ``shard_map`` would otherwise pay a per-primitive SPMD dispatch
+    on every call, which is minutes for the Philox graph.)
     """
     ax1, ax2, ax3 = axes
-    p1 = mesh.shape[ax1]
-    p2 = mesh.shape[ax2]
-    p3 = mesh.shape[ax3]
+    p1, p2, p3 = (mesh.shape[a] for a in axes)
     n1, n2 = A.shape
     if n1 % p1 or n2 % (p2 * p3) or n2 % p2 or r % p3:
         raise ValueError(f"shape ({n1},{n2},r={r}) not divisible by grid "
                          f"({p1},{p2},{p3})")
+    keys = jnp.stack(seed_keys(seed))
+    fn = _rand_matmul_prog(r, mesh, tuple(axes), kind,
+                           None if scale is None else float(scale),
+                           precision, salt)
+    return fn(A, keys)
 
-    blk_rows = n2 // p2   # Omega block rows  (contraction dim)
-    blk_cols = r // p3    # Omega block cols
 
-    def body(a_blk):
-        j = jax.lax.axis_index(ax2)
-        k = jax.lax.axis_index(ax3)
-        # All-Gather A_ij over the p3 fiber (tiled along columns).
-        if p3 == 1:
-            a_ij = a_blk                      # regime-1 grids: no collective
-        else:
-            a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
-        # Regenerate Omega_jk locally — zero communication.
-        om = omega_tile(seed, j * blk_rows, k * blk_cols,
-                        blk_rows, blk_cols, kind, a_ij.dtype)
-        if scale is not None:
-            om = om * jnp.asarray(scale, a_ij.dtype)
-        b_partial = jnp.matmul(a_ij, om, precision=precision)
-        # Reduce-Scatter B_ik over the p2 fiber (tiled along rows).
-        if p2 == 1:
-            return b_partial
-        return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
-                                    tiled=True)
+# Bounded caches: a long-lived serving process may construct meshes
+# dynamically; evicting a program merely costs a recompile on next use.
+_PROG_CACHE_SIZE = 64
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=P(ax1, (ax2, ax3)),
-        out_specs=P((ax1, ax2), ax3))
-    return fn(A)
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _rand_matmul_prog(r: int, mesh: Mesh, axes: Tuple[str, str, str],
+                      kind: str, scale, precision, salt: int):
+    ax1, ax2, ax3 = axes
+    p2 = mesh.shape[ax2]
+    p3 = mesh.shape[ax3]
+
+    def impl(A, keys):
+        n2 = A.shape[1]
+        blk_rows = n2 // p2   # Omega block rows  (contraction dim)
+        blk_cols = r // p3    # Omega block cols
+
+        def body(a_blk):
+            j = jax.lax.axis_index(ax2)
+            k = jax.lax.axis_index(ax3)
+            # All-Gather A_ij over the p3 fiber (tiled along columns).
+            if p3 == 1:
+                a_ij = a_blk                  # regime-1 grids: no collective
+            else:
+                a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
+            # Regenerate Omega_jk locally — zero communication.
+            om = omega_tile(keys, j * blk_rows, k * blk_cols,
+                            blk_rows, blk_cols, kind, a_ij.dtype, salt=salt)
+            if scale is not None:
+                om = om * jnp.asarray(scale, a_ij.dtype)
+            b_partial = jnp.matmul(a_ij, om, precision=precision)
+            # Reduce-Scatter B_ik over the p2 fiber (tiled along rows).
+            if p2 == 1:
+                return b_partial
+            return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
+                                        tiled=True)
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=P(ax1, (ax2, ax3)),
+            out_specs=P((ax1, ax2), ax3))(A)
+
+    return jax.jit(impl)
 
 
 def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
@@ -171,7 +220,7 @@ def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
 # receives it via All-Gather over (p2, p3) fibers.
 # ---------------------------------------------------------------------------
 
-def rand_matmul_communicating(A, seed: int, r: int, mesh: Mesh,
+def rand_matmul_communicating(A, seed, r: int, mesh: Mesh,
                               axes: Tuple[str, str, str] = DEFAULT_AXES,
                               kind: str = "normal"):
     """Baseline that COMMUNICATES Omega (paper Fig. 3's losing strategy).
@@ -180,35 +229,45 @@ def rand_matmul_communicating(A, seed: int, r: int, mesh: Mesh,
     is all-gathered by every processor before the local GEMM.  Same result,
     strictly more communication; used by benchmarks/bench_comm_vs_gen.py.
     """
+    keys = jnp.stack(seed_keys(seed))
+    return _rand_matmul_communicating_prog(r, mesh, tuple(axes), kind)(A, keys)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _rand_matmul_communicating_prog(r: int, mesh: Mesh,
+                                    axes: Tuple[str, str, str], kind: str):
     ax1, ax2, ax3 = axes
-    p1, p2, p3 = (mesh.shape[a] for a in axes)
-    n1, n2 = A.shape
+    p2 = mesh.shape[ax2]
+    p3 = mesh.shape[ax3]
 
-    # Build Omega once, sharded across the whole mesh (the "one copy").
-    om_global = omega_tile(seed, 0, 0, n2, r, kind, A.dtype)
-    om_sharding = NamedSharding(mesh, P((ax1, ax2, ax3), None))
-    om_global = jax.device_put(om_global, om_sharding)
+    def impl(A, keys):
+        n2 = A.shape[1]
+        # Build Omega once, sharded across the whole mesh (the "one copy").
+        om_global = omega_tile(keys, 0, 0, n2, r, kind, A.dtype)
+        om_sharding = NamedSharding(mesh, P((ax1, ax2, ax3), None))
+        om_global = jax.lax.with_sharding_constraint(om_global, om_sharding)
 
-    blk_rows = n2 // p2
-    blk_cols = r // p3
+        blk_rows = n2 // p2
+        blk_cols = r // p3
 
-    def body(a_blk, om_blk):
-        j = jax.lax.axis_index(ax2)
-        k = jax.lax.axis_index(ax3)
-        a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
-        # Omega arrives over the network instead of being regenerated:
-        om_full = jax.lax.all_gather(om_blk, (ax1, ax2, ax3), axis=0,
-                                     tiled=True)
-        om = jax.lax.dynamic_slice(
-            om_full, (j * blk_rows, k * blk_cols), (blk_rows, blk_cols))
-        b_partial = a_ij @ om
-        if p2 == 1:
-            return b_partial
-        return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
-                                    tiled=True)
+        def body(a_blk, om_blk):
+            j = jax.lax.axis_index(ax2)
+            k = jax.lax.axis_index(ax3)
+            a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
+            # Omega arrives over the network instead of being regenerated:
+            om_full = jax.lax.all_gather(om_blk, (ax1, ax2, ax3), axis=0,
+                                         tiled=True)
+            om = jax.lax.dynamic_slice(
+                om_full, (j * blk_rows, k * blk_cols), (blk_rows, blk_cols))
+            b_partial = a_ij @ om
+            if p2 == 1:
+                return b_partial
+            return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
+                                        tiled=True)
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(ax1, (ax2, ax3)), P((ax1, ax2, ax3), None)),
-        out_specs=P((ax1, ax2), ax3))
-    return fn(A, om_global)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(ax1, (ax2, ax3)), P((ax1, ax2, ax3), None)),
+            out_specs=P((ax1, ax2), ax3))(A, om_global)
+
+    return jax.jit(impl)

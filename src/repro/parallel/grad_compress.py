@@ -15,10 +15,12 @@ rank-r compression):
         E'     = G + E - G_hat                     # error feedback
 
 Communication per matrix drops from m·n to r·(m+n) words — the same
-regenerate-don't-communicate arithmetic as the paper's Alg. 1 (the sketch
-operand moves, Omega never does).  Error feedback keeps SGD convergence
-(Vogels et al., PowerSGD, NeurIPS'19); the sketch itself is the paper's
-B = A·Omega with A = the gradient.
+regenerate-don't-communicate arithmetic as the paper's Alg. 1 (§4.2: the
+sketch operand moves, Omega never does — the §6.3 counter-based
+regeneration claim applied to the DP axis).  Error feedback keeps SGD
+convergence (Vogels et al., PowerSGD, NeurIPS'19); the sketch itself is the
+paper's B = A·Omega with A = the gradient, and the r·(m+n) vs m·n saving
+is the Theorem-2 regime-1 argument at the granularity of one all-reduce.
 """
 from __future__ import annotations
 

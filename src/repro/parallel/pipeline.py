@@ -9,6 +9,13 @@ jax's autodiff through the scan (remat-friendly).
 
 This composes with TP/SP inside each stage (the stage fn is ordinary GSPMD
 code over the remaining mesh axes) and with DP by vmapping microbatches.
+
+Relation to the paper (PAPER.md): pipeline traffic is point-to-point
+activations — none of it is random state, so it sits outside the
+Theorem-2/3 bounds; the paper's model (§3) counts it as ordinary input
+movement.  The collective-byte accounting in ``roofline/hlo.py`` measures
+ppermute traffic alongside the sketching collectives so the two are
+comparable on one roofline.
 """
 from __future__ import annotations
 

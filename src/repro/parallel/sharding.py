@@ -4,6 +4,15 @@ Rules are (leaf-name -> dim-from-end to shard over the model axis); anything
 unmatched or non-divisible replicates.  Works for both stacked (leading L)
 and unstacked params.  Experts shard over the model axis (EP); dense FFN and
 attention projections shard TP; embeddings shard over vocab.
+
+Relation to the paper (PAPER.md): these shardings define the "data layout"
+side of the communication model of §3 — who owns which block of each
+operand.  The sketching-specific layouts (the Alg.-1 §4.2 contract for A/B
+and the streaming Y/W state) live in ``core/sketch.py`` and
+``stream/distributed.py`` respectively; this module covers the surrounding
+LM training/serving stack, where the same principle applies: pick layouts
+so collectives land where operands already live (see
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 

@@ -7,6 +7,14 @@
 HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device SPMD
 program — multiplied by chip count for the global figures), collective bytes
 from the HLO-text parser in :mod:`repro.roofline.hlo`.
+
+Relation to the paper (PAPER.md): the collective term is the W of the
+paper's α-β model (§3) measured on real compiled programs; the tests use it
+to assert Alg. 1 (§4.2) moves exactly its modeled bytes and zero in the
+Theorem-2 regime-1 range, and that streaming updates (repro.stream) add no
+Omega/Psi traffic.  The memory term plays the same role for the Pallas
+kernel path: ``kernels/sketch_matmul.py`` removes the n2·r Omega stream
+from HBM exactly as §6.3's regeneration removes it from the network.
 """
 from __future__ import annotations
 

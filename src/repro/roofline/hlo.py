@@ -10,6 +10,12 @@ forms).  The HLO is the per-device SPMD program, so sums here are
 XLA prints collective operands by %name only (no inline shapes), so parsing
 is two-pass: build a symbol table of instruction result shapes, then resolve
 each collective's operand names against it.
+
+Relation to the paper (PAPER.md): this parser is how the repo turns the
+paper's bandwidth cost W (§3, Theorems 2/3) from a model into an
+*assertion* — tests compile Alg. 1/2 (§4.2, §5.3) and the streaming update
+step (repro.stream) and check the summed collective operand bytes equal the
+closed forms in ``core/grid.py`` exactly (zero in regime 1).
 """
 from __future__ import annotations
 

@@ -1,5 +1,9 @@
 """Trip-count-aware HLO cost analysis.
 
+Feeds the roofline terms of :mod:`repro.roofline.analysis` (the paper's §3
+cost model measured on compiled programs; see that module's docstring for
+the paper mapping).
+
 ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
 undercounts scan-over-layers models by ~L× (verified empirically; see
 EXPERIMENTS.md §Methodology).  This module re-derives per-device cost from

@@ -1,1 +1,4 @@
-from .engine import BatchedServer, Request, serve_decode_step, serve_prefill  # noqa: F401
+from .engine import (  # noqa: F401
+    BatchedServer, Request, SketchService, make_sketch_service,
+    serve_decode_step, serve_prefill,
+)

@@ -1,6 +1,14 @@
-"""Serving engine: family-uniform prefill / decode entry points + a simple
-batched request scheduler (continuous-batching-lite) used by examples and
-the serve driver.
+"""Serving engine: the repo's two request-serving workloads behind one door.
+
+1. LM serving — family-uniform prefill / decode entry points + a simple
+   batched request scheduler (continuous-batching-lite) used by examples
+   and the serve driver (``launch/serve.py``).
+2. Sketch serving — ``make_sketch_service`` builds a
+   :class:`repro.stream.SketchService`: many concurrent streaming-sketch
+   clients multiplexed onto one processor grid, each update running the
+   paper's communication-optimal Alg. 1 (§4.2) with Omega regenerated, never
+   communicated (§6.3).  Streams sharing a shape signature share one
+   compiled update executable, so stream fan-in scales without recompiles.
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.models import get_api
 from repro.models.common import NULL_CTX, ShardCtx, matmul
 from repro.models import mamba_lm, transformer, whisper as whisper_mod, zamba
+from repro.stream.service import SketchService
 
 
 # ---------------------------------------------------------------------------
@@ -145,3 +154,27 @@ class BatchedServer:
         for _ in range(max_ticks):
             if not self.step():
                 break
+
+
+# ---------------------------------------------------------------------------
+# batched sketch service (streaming workload entry point)
+# ---------------------------------------------------------------------------
+
+def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
+                        devices=None) -> SketchService:
+    """The streaming-sketch serving entry point: one mesh, many streams.
+
+    grid:
+      * ``None``      — local mode: streams live on the default device and
+                        support row-block ingest (bitwise vs. the one-shot
+                        reference).
+      * ``(p1,p2,p3)``— distributed mode: every stream's (Y, W) state is
+                        sharded per the Alg.-1 layout contract and updates
+                        run ``rand_matmul`` on that grid.  Pick the grid
+                        with ``core.grid.select_matmul_grid`` for the
+                        dominant stream shape.
+    """
+    if grid is None:
+        return SketchService()
+    from repro.core.sketch import make_grid_mesh
+    return SketchService(mesh=make_grid_mesh(*grid, devices=devices))

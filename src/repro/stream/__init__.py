@@ -1,0 +1,20 @@
+"""Streaming one-pass sketches: linear updates A <- A + H folded into
+(Y = A·Omega, W = Psi·A) with Omega/Psi regenerated, never communicated.
+
+  state.py        — StreamConfig + the single-device StreamingSketch
+  distributed.py  — ShardedStreamingSketch on the (p1, p2, p3) grid
+  reconstruct.py  — one-pass fixed-rank A ~= Q·(Psi Q)†·W (Tropp et al.)
+  service.py      — SketchService: many concurrent streams, one mesh
+"""
+from .state import (  # noqa: F401
+    OMEGA_SALT, PSI_SALT, StreamConfig, StreamingSketch,
+    omega_matrix, psi_cols, psi_matrix,
+)
+from .distributed import (  # noqa: F401
+    ShardedStreamingSketch, corange_sharding, corange_update,
+    nystrom_finalize,
+)
+from .reconstruct import (  # noqa: F401
+    LowRank, one_pass_reconstruct, reconstruction_error,
+)
+from .service import SketchService  # noqa: F401

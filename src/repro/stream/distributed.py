@@ -1,0 +1,176 @@
+"""Mesh-sharded streaming sketch state (paper Alg. 1 applied per update).
+
+State layout on the (p1, p2, p3) grid — the streaming extension of the
+Alg.-1 contract (see docs/ARCHITECTURE.md):
+
+  Y (n1 x r)  : sharded P((p1, p2), p3)   — the Alg.-1 *output* layout, so
+                every update's Reduce-Scatter lands exactly on the resident
+                shard; accumulation is local adds, zero extra movement.
+  W (l  x n2) : sharded P(None, (p2, p3)) — column-split like A's blocks,
+                replicated over p1; each update psums the per-p1 partial
+                Psi_i^T·H_i over the p1 fiber.
+
+Per additive update A <- A + H the communication is exactly the Alg.-1 cost
+of sketching H (All-Gather over p3 + Reduce-Scatter over p2; zero in the
+regime-1 grids p2 = p3 = 1) plus, when the co-range sketch is enabled, one
+All-Reduce of l·n2/(p2·p3) words over p1.  No Omega or Psi entries are ever
+communicated — both are regenerated per update from the stream seed.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compat import shard_map
+from repro.core.nystrom import (
+    nystrom_second_stage_no_redist,
+    nystrom_second_stage_redist,
+)
+from repro.core.sketch import (
+    DEFAULT_AXES,
+    input_sharding,
+    omega_tile,
+    output_sharding,
+    rand_matmul,
+)
+
+from .state import StreamConfig, psi_cols
+
+
+def corange_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
+    """Sharding of W per the streaming state layout."""
+    return NamedSharding(mesh, P(None, (axes[1], axes[2])))
+
+
+def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
+                     axes: Tuple[str, str, str] = DEFAULT_AXES,
+                     variant: str = "auto"):
+    """(B, C) of a symmetric stream from its accumulated Y, reusing the
+    Alg.-2 second stages.
+
+    Needs a 1-D (P, 1, 1) grid so Y is row-sharded — exactly the layout the
+    paper's Redist / No-Redist second stages consume.  ``auto`` follows the
+    paper's crossover: redist iff P > n/r (Fig. 7).
+    """
+    ax1, ax2, ax3 = axes
+    if cfg.n1 != cfg.n2:
+        raise ValueError("Nyström needs a square (symmetric) stream")
+    if mesh.shape[ax2] != 1 or mesh.shape[ax3] != 1:
+        raise ValueError("streaming Nyström finalize needs a (P,1,1) grid; "
+                         f"have {tuple(mesh.shape.values())}")
+    Pn = mesh.shape[ax1]
+    if variant == "auto":
+        variant = ("redist" if Pn > max(1, cfg.n1 // max(cfg.r, 1))
+                   else "no_redist")
+    Y = jax.device_put(Y, NamedSharding(mesh, P(ax1, None)))
+    if variant == "no_redist":
+        C = nystrom_second_stage_no_redist(Y, cfg.seed, cfg.r, mesh,
+                                           axis=ax1, kind=cfg.kind,
+                                           salt=cfg.omega_salt)
+        return Y, C
+    if variant == "redist":
+        return nystrom_second_stage_redist(Y, cfg.seed, cfg.r, mesh,
+                                           axis=ax1, kind=cfg.kind,
+                                           salt=cfg.omega_salt)
+    raise ValueError(variant)
+
+
+def corange_update(W, H, cfg: StreamConfig, mesh: Mesh,
+                   axes: Tuple[str, str, str] = DEFAULT_AXES, seed=None):
+    """W + Psi·H with H in the Alg.-1 input layout and W in the streaming
+    co-range layout.  Psi columns are regenerated per p1 block — the only
+    traffic is the psum of the data-derived partial products."""
+    ax1, ax2, ax3 = axes
+    br = cfg.n1 // mesh.shape[ax1]
+
+    def body(w_blk, h_blk):              # (l, n2/(p2p3)), (n1/p1, n2/(p2p3))
+        i = jax.lax.axis_index(ax1)
+        psi_c = psi_cols(cfg, i * br, br, seed=seed)       # (br, l)
+        part = psi_c.T.astype(h_blk.dtype) @ h_blk
+        return w_blk + jax.lax.psum(part, ax1)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(None, (ax2, ax3)), P(ax1, (ax2, ax3))),
+                   out_specs=P(None, (ax2, ax3)))
+    return fn(W, H)
+
+
+class ShardedStreamingSketch:
+    """Streaming (Y, W) accumulator over a (p1, p2, p3) processor grid.
+
+    Updates are full-shape additive deltas H (zero rows/columns where
+    nothing changed); each is sketched with the communication-optimal
+    ``rand_matmul`` and added into the resident sketch state.  Row-disjoint
+    updates reproduce the one-shot distributed sketch bitwise (untouched
+    rows accumulate exact zeros).
+    """
+
+    def __init__(self, cfg: StreamConfig, mesh: Mesh,
+                 axes: Tuple[str, str, str] = DEFAULT_AXES):
+        cfg.validate()
+        ax1, ax2, ax3 = axes
+        p1, p2, p3 = (mesh.shape[a] for a in axes)
+        if cfg.n1 % p1 or cfg.n2 % (p2 * p3) or cfg.n2 % p2 or cfg.r % p3:
+            raise ValueError(f"stream shape ({cfg.n1},{cfg.n2},r={cfg.r}) "
+                             f"not divisible by grid ({p1},{p2},{p3})")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = axes
+        self.Y = jax.device_put(jnp.zeros((cfg.n1, cfg.r), cfg.dtype),
+                                output_sharding(mesh, axes))
+        self.W = (jax.device_put(
+                      jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype),
+                      corange_sharding(mesh, axes))
+                  if cfg.corange else None)
+        self.num_updates = 0
+        self._upd = jax.jit(self._make_update())
+
+    def _make_update(self):
+        cfg, mesh, axes = self.cfg, self.mesh, self.axes
+
+        def upd(Y, W, H):
+            Y = Y + rand_matmul(H, cfg.seed, cfg.r, mesh, axes=axes,
+                                kind=cfg.kind, salt=cfg.omega_salt)
+            if W is not None:
+                W = corange_update(W, H, cfg, mesh, axes)
+            return Y, W
+
+        return upd
+
+    def update(self, H):
+        """A <- A + H; H must be the full (n1, n2) shape (sharded or host)."""
+        if H.shape != (self.cfg.n1, self.cfg.n2):
+            raise ValueError(f"update shape {H.shape} != "
+                             f"({self.cfg.n1}, {self.cfg.n2})")
+        H = jax.device_put(jnp.asarray(H, self.cfg.dtype),
+                           input_sharding(self.mesh, self.axes))
+        self.Y, self.W = self._upd(self.Y, self.W, H)
+        self.num_updates += 1
+        return self
+
+    # -- finalization ------------------------------------------------------
+
+    @property
+    def sketch(self):
+        """Y = A·Omega in the Alg.-1 output layout P((p1, p2), p3)."""
+        return self.Y
+
+    @property
+    def corange_sketch(self):
+        return self.W
+
+    def nystrom(self, variant: str = "auto"):
+        """(B, C) of a symmetric stream — see :func:`nystrom_finalize`."""
+        return nystrom_finalize(self.Y, self.cfg, self.mesh, self.axes,
+                                variant)
+
+    def reconstruct(self, rank: Optional[int] = None, rcond=None):
+        """One-pass low-rank reconstruction (gathers the small factors)."""
+        from .reconstruct import one_pass_reconstruct
+        if self.W is None:
+            raise ValueError("reconstruction needs corange=True")
+        return one_pass_reconstruct(self.Y, self.W, self.cfg, rank=rank,
+                                    rcond=rcond)

@@ -1,0 +1,55 @@
+"""One-pass low-rank reconstruction from (Y, W) sketch state.
+
+Tropp et al. 2017, Algorithms 4/7: given the range sketch Y = A·Omega and
+the co-range sketch W = Psi·A,
+
+    Q, _  = qr(Y)                       # orthonormal range basis (n1 x r)
+    X     = (Psi·Q)† · W                # least-squares fit      (r  x n2)
+    A_hat = Q · X
+
+with an optional fixed-rank truncation (SVD of the small X factor).  Psi is
+regenerated from the stream seed — the reconstruction consumes no state
+beyond the sketches themselves.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .state import StreamConfig, psi_matrix
+
+
+class LowRank(NamedTuple):
+    """A_hat = Q @ X with Q (n1, k) orthonormal and X (k, n2)."""
+    Q: jax.Array
+    X: jax.Array
+
+    @property
+    def rank(self) -> int:
+        return self.Q.shape[1]
+
+    def matrix(self):
+        return self.Q @ self.X
+
+
+def one_pass_reconstruct(Y, W, cfg: StreamConfig,
+                         rank: Optional[int] = None,
+                         rcond: Optional[float] = None) -> LowRank:
+    """A ~= Q·(Psi Q)†·W, optionally truncated to ``rank``."""
+    Q, _ = jnp.linalg.qr(jnp.asarray(Y))
+    PsiQ = psi_matrix(cfg) @ Q                       # (l, r)
+    X, *_ = jnp.linalg.lstsq(PsiQ, jnp.asarray(W), rcond=rcond)
+    if rank is not None and rank < X.shape[0]:
+        # Fixed-rank: SVD of the small factor only (r x n2), never of A_hat.
+        U, s, Vt = jnp.linalg.svd(X, full_matrices=False)
+        Q = Q @ U[:, :rank]
+        X = s[:rank, None] * Vt[:rank]
+    return LowRank(Q, X)
+
+
+def reconstruction_error(A, approx: LowRank) -> jax.Array:
+    """|| A - Q X ||_F / || A ||_F."""
+    A = jnp.asarray(A)
+    return jnp.linalg.norm(A - approx.matrix()) / jnp.linalg.norm(A)

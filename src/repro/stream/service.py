@@ -1,0 +1,216 @@
+"""Batched sketch service: many concurrent streams, one mesh (ROADMAP's
+"heavy traffic" serving story applied to sketching).
+
+Each client stream owns only its (Y, W) accumulator plus a Philox key pair.
+All streams with the same shape signature — (n1, n2, r, l, kind, corange,
+dtype, update-chunk shape) — share ONE compiled update executable: the
+per-stream seed enters the computation *traced* (as a uint32 key pair, see
+``core.sketch.seed_keys``), and for local row-block ingest the row offset is
+traced too.  Opening stream number 1000 therefore costs a dict insert, not
+an XLA compile, which is what makes high stream fan-in viable.
+
+Two placement modes:
+
+  * ``mesh=None`` — local mode.  Streams live on the default device; updates
+    are row-block or full-shape additive.  Row-partitioned ingest is
+    bitwise-equal to the one-shot ``sketch_reference``.
+  * ``mesh=Mesh(p1, p2, p3)`` — distributed mode.  Every stream's state is
+    sharded per the Alg.-1 layout and each update runs the
+    communication-optimal ``rand_matmul`` (plus the co-range psum); see
+    ``distributed.py`` for the exact cost.
+
+The service is the entry point wired into ``serve/engine.py``
+(``make_sketch_service``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.sketch import (
+    DEFAULT_AXES,
+    input_sharding,
+    output_sharding,
+    rand_matmul,
+    seed_keys,
+)
+
+from .distributed import corange_sharding, corange_update
+from .state import (StreamConfig, _local_sig, local_rowblock_prog,
+                    nystrom_local, validate_row_block)
+
+
+@dataclasses.dataclass
+class _Stream:
+    cfg: StreamConfig
+    keys: jax.Array            # (2,) uint32 Philox key pair, traced into updates
+    Y: jax.Array
+    W: Optional[jax.Array]
+    num_updates: int = 0
+
+
+def _stream_sig(cfg: StreamConfig) -> Tuple:
+    """Everything that forces a distinct executable — note: NOT the seed."""
+    return (cfg.n1, cfg.n2, cfg.r, cfg.sketch_l, cfg.kind, cfg.corange,
+            jnp.dtype(cfg.dtype).name, cfg.omega_salt, cfg.psi_salt)
+
+
+class SketchService:
+    """One mesh, many concurrent sketch streams.
+
+    >>> svc = SketchService()
+    >>> sid = svc.open(StreamConfig(n1=256, n2=512, r=32, seed=7))
+    >>> svc.update(sid, H, row0=0)          # rows arrive
+    >>> svc.sketch(sid)                     # the live Y = A·Omega
+    >>> svc.reconstruct(sid, rank=16)       # one-pass low-rank estimate
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 axes: Tuple[str, str, str] = DEFAULT_AXES):
+        self.mesh = mesh
+        self.axes = axes
+        self._streams: Dict[int, _Stream] = {}
+        self._fns: Dict[Tuple, any] = {}
+        self._sid = itertools.count()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def open(self, cfg: StreamConfig) -> int:
+        cfg.validate()
+        if self.mesh is not None:
+            ax1, ax2, ax3 = self.axes
+            p1, p2, p3 = (self.mesh.shape[a] for a in self.axes)
+            if cfg.n1 % p1 or cfg.n2 % (p2 * p3) or cfg.n2 % p2 or cfg.r % p3:
+                raise ValueError(f"stream {cfg} not divisible by grid "
+                                 f"({p1},{p2},{p3})")
+            Y = jax.device_put(jnp.zeros((cfg.n1, cfg.r), cfg.dtype),
+                               output_sharding(self.mesh, self.axes))
+            W = (jax.device_put(jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype),
+                                corange_sharding(self.mesh, self.axes))
+                 if cfg.corange else None)
+        else:
+            Y = jnp.zeros((cfg.n1, cfg.r), cfg.dtype)
+            W = (jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype)
+                 if cfg.corange else None)
+        k0, k1 = seed_keys(cfg.seed)
+        sid = next(self._sid)
+        self._streams[sid] = _Stream(cfg, jnp.stack([k0, k1]), Y, W)
+        return sid
+
+    def close(self, sid: int):
+        """Finalize: returns the stream's final (Y, W) state — W is None
+        for corange=False streams — and frees the slot."""
+        st = self._streams.pop(sid)
+        return st.Y, st.W
+
+    # -- compiled-update cache ---------------------------------------------
+
+    def _get_update_fn(self, cfg: StreamConfig, chunk_rows: int):
+        key = (_stream_sig(cfg), chunk_rows,
+               None if self.mesh is None else self.mesh)
+        fn = self._fns.get(key)
+        if fn is None:
+            # local mode resolves through the module-level program cache,
+            # so the executable is shared with StreamingSketch instances
+            # and other services too; self._fns just tracks what this
+            # service references (num_compiled).
+            fn = (self._build_dist_update(cfg)
+                  if self.mesh is not None
+                  else local_rowblock_prog(_local_sig(cfg), chunk_rows))
+            self._fns[key] = fn
+        return fn
+
+    def _build_dist_update(self, cfg: StreamConfig):
+        mesh, axes = self.mesh, self.axes
+
+        def upd(Y, W, H, keys, row0):
+            del row0                      # distributed mode is additive-only
+            Y = Y + rand_matmul(H, keys, cfg.r, mesh, axes=axes,
+                                kind=cfg.kind, salt=cfg.omega_salt)
+            if W is not None:
+                W = corange_update(W, H, cfg, mesh, axes, seed=keys)
+            return Y, W
+
+        return jax.jit(upd)
+
+    # -- ingest ------------------------------------------------------------
+
+    def update(self, sid: int, H, row0: Optional[int] = None):
+        """Apply one update to stream ``sid``.
+
+        Local mode: ``row0`` selects a row-block update (H is (k, n2));
+        ``row0=None`` means a full-shape additive delta.  Distributed mode
+        accepts full-shape additive deltas only.
+        """
+        st = self._streams[sid]
+        cfg = st.cfg
+        H = jnp.asarray(H, cfg.dtype)
+        if self.mesh is not None:
+            if row0 is not None:
+                raise ValueError("distributed streams take full-shape "
+                                 "additive updates (row0 must be None)")
+            if H.shape != (cfg.n1, cfg.n2):
+                raise ValueError(f"{H.shape} != ({cfg.n1}, {cfg.n2})")
+            H = jax.device_put(H, input_sharding(self.mesh, self.axes))
+            fn = self._get_update_fn(cfg, -1)
+            st.Y, st.W = fn(st.Y, st.W, H, st.keys, 0)
+        else:
+            if row0 is None:
+                if H.shape != (cfg.n1, cfg.n2):
+                    raise ValueError(f"{H.shape} != ({cfg.n1}, {cfg.n2})")
+                row0 = 0
+            validate_row_block(cfg, row0, H.shape)
+            fn = self._get_update_fn(cfg, H.shape[0])
+            st.Y, st.W = fn(st.Y, st.W, H, st.keys, jnp.int32(row0))
+        st.num_updates += 1
+        return self
+
+    # -- queries -----------------------------------------------------------
+
+    def sketch(self, sid: int):
+        return self._streams[sid].Y
+
+    def corange(self, sid: int):
+        return self._streams[sid].W
+
+    def reconstruct(self, sid: int, rank: Optional[int] = None, rcond=None):
+        from .reconstruct import one_pass_reconstruct
+        st = self._streams[sid]
+        if st.W is None:
+            raise ValueError("reconstruction needs corange=True")
+        return one_pass_reconstruct(st.Y, st.W, st.cfg, rank=rank,
+                                    rcond=rcond)
+
+    def nystrom(self, sid: int, variant: str = "auto"):
+        """(B, C) for a symmetric stream (local mode: computed in place;
+        distributed mode: via the Alg.-2 second stages on a (P,1,1) grid —
+        see :func:`repro.stream.distributed.nystrom_finalize`)."""
+        st = self._streams[sid]
+        cfg = st.cfg
+        if cfg.n1 != cfg.n2:
+            raise ValueError("Nyström needs a square stream")
+        if self.mesh is None:
+            return nystrom_local(st.Y, cfg)
+        from .distributed import nystrom_finalize
+        return nystrom_finalize(st.Y, cfg, self.mesh, self.axes, variant)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def num_streams(self) -> int:
+        return len(self._streams)
+
+    @property
+    def num_compiled(self) -> int:
+        """Distinct compiled update executables currently cached."""
+        return len(self._fns)
+
+    def stats(self) -> Dict[str, int]:
+        return {"streams": self.num_streams,
+                "compiled_updates": self.num_compiled,
+                "updates": sum(s.num_updates for s in self._streams.values())}

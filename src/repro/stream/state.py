@@ -1,0 +1,283 @@
+"""One-pass streaming sketch state (Tropp et al. 2017; paper §4.2 + §6.3).
+
+The sketches the paper parallelizes are *linear* in A, so they support the
+one-pass streaming model of Tropp et al., *Practical sketching algorithms
+for low-rank matrix approximation* (see PAPERS.md): for any additive update
+
+    A  <-  A + H      =>      Y  <-  Y + H·Omega ,   W  <-  W + Psi·H
+
+where Y = A·Omega (n1 x r) is the range sketch and W = Psi·A (l x n2) the
+co-range sketch.  A never has to be resident; only the O((n1 + n2)·r) sketch
+state is stored.  Because Omega and Psi are regenerated from a counter-based
+seed (the source paper's central claim, §6.3), streaming updates inherit the
+zero-communication property for free: no processor ever sends or receives a
+byte of Omega or Psi, no matter how many updates arrive.
+
+Update granularities:
+
+  * ``update_rows(row0, H)`` — a block of rows arrives (the classic
+    streaming model).  Each row of Y is produced by one full-contraction
+    GEMM, so a row-partitioned stream reproduces the one-shot
+    ``core.sketch.sketch_reference`` **bitwise**, for any chunking and any
+    arrival order.
+  * ``update_cols(col0, H)`` — a block of columns arrives; Y accumulates
+    partial contractions (equal to one-shot up to FP summation order).
+  * ``update(H)`` — general additive update of the full matrix.
+
+Determinism contract: Omega/Psi entries are bitwise-invariant to tiling and
+compilation context by construction (see ``core/rng.py``), and each Y row is
+written by exactly one row-block update (0 + x == x in IEEE-754), so a given
+row chunking produces identical bits in ANY arrival order.  Equality with
+the one-shot ``sketch_reference`` is additionally bitwise whenever the
+backend computes a dot's rows identically across GEMM heights — true at
+small/moderate contraction sizes (pinned by tests/test_stream.py), but CPU
+BLAS may switch blocking for very short chunks against a large contraction
+(e.g. 64-row chunks at n2=1024), where agreement drops to reduction-order
+tolerance (~1e-5).  W and overlapping/column updates accumulate in arrival
+order, so they match one-shot results to FP tolerance, not bitwise.
+
+The local accumulator here runs on one device; ``distributed.py`` holds the
+mesh-sharded version and ``service.py`` the many-streams serving front end.
+On TPU the local GEMM can run through the fused Pallas kernel
+(``kernels/sketch_matmul.py``), which also keeps Omega out of HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import omega_tile, seed_keys
+
+OMEGA_SALT = 0   # salt stream for Omega (range sketch)
+PSI_SALT = 1     # salt stream for Psi (co-range sketch); must differ
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Shape/seed contract of one stream.
+
+    n1, n2 : global shape of the streamed matrix A
+    r      : range-sketch size (columns of Omega)
+    l      : co-range-sketch size (rows of Psi); default 2r+1 per Tropp
+             et al.'s l >= 2k+1 guidance, clipped to n1
+    seed   : Philox seed; Omega and Psi come from the same seed under
+             different salts, so one uint32 pair keys the whole stream
+    kind   : entry distribution ("normal" | "uniform" | "rademacher")
+    corange: track W = Psi·A (needed for general low-rank reconstruction;
+             unnecessary for sketch-only and Nyström workloads)
+    """
+    n1: int
+    n2: int
+    r: int
+    l: Optional[int] = None
+    seed: int = 0
+    kind: str = "normal"
+    dtype: Any = jnp.float32
+    corange: bool = True
+    omega_salt: int = OMEGA_SALT
+    psi_salt: int = PSI_SALT
+
+    @property
+    def sketch_l(self) -> int:
+        return self.l if self.l is not None else min(2 * self.r + 1, self.n1)
+
+    def validate(self):
+        if self.r <= 0 or self.n1 <= 0 or self.n2 <= 0:
+            raise ValueError(f"bad stream shape {self}")
+        if self.omega_salt == self.psi_salt and self.corange:
+            raise ValueError("omega_salt and psi_salt must differ")
+
+
+def omega_matrix(cfg: StreamConfig, seed=None):
+    """The full (n2, r) Omega of a stream (reference/inspection path)."""
+    return omega_tile(cfg.seed if seed is None else seed, 0, 0,
+                      cfg.n2, cfg.r, cfg.kind, cfg.dtype, salt=cfg.omega_salt)
+
+
+def psi_matrix(cfg: StreamConfig, seed=None):
+    """The full (l, n1) Psi.  Generated as the transpose of an (n1, l) tile
+    so column slices Psi[:, i0:i1] share global row coordinates with the
+    row-block updates that consume them (tile-decomposition invariance)."""
+    return omega_tile(cfg.seed if seed is None else seed, 0, 0,
+                      cfg.n1, cfg.sketch_l, cfg.kind, cfg.dtype,
+                      salt=cfg.psi_salt).T
+
+
+def psi_cols(cfg: StreamConfig, row0, rows: int, seed=None):
+    """Psi[:, row0:row0+rows] as an (rows, l) tile (pre-transpose layout);
+    row0 may be traced."""
+    return omega_tile(cfg.seed if seed is None else seed, row0, 0,
+                      rows, cfg.sketch_l, cfg.kind, cfg.dtype,
+                      salt=cfg.psi_salt)
+
+
+def validate_row_block(cfg: StreamConfig, row0: int, shape: Tuple[int, int]):
+    """Bounds check shared by the accumulator and the service."""
+    k, n2 = shape
+    if n2 != cfg.n2 or row0 < 0 or row0 + k > cfg.n1:
+        raise ValueError(f"row block ({row0}, {shape}) outside "
+                         f"({cfg.n1}, {cfg.n2})")
+
+
+def nystrom_local(Y, cfg: StreamConfig):
+    """(B, C) of a symmetric stream on one device: C = Omega^T·Y needs no
+    second pass over A — it is computable from the sketch alone."""
+    om = omega_tile(cfg.seed, 0, 0, cfg.n2, cfg.r, cfg.kind, Y.dtype,
+                    salt=cfg.omega_salt)
+    return Y, om.T @ Y
+
+
+def _local_sig(cfg: StreamConfig) -> Tuple:
+    """Executable signature of the local row-block update — NOT the seed."""
+    return (cfg.n1, cfg.n2, cfg.r, cfg.sketch_l if cfg.corange else None,
+            cfg.kind, jnp.dtype(cfg.dtype).name, cfg.corange,
+            cfg.omega_salt, cfg.psi_salt)
+
+
+@functools.lru_cache(maxsize=256)
+def local_rowblock_prog(sig: Tuple, k: int):
+    """Compiled local row-block update, shared by every StreamingSketch and
+    SketchService stream with the same shape signature: the seed enters as
+    a traced uint32 key pair and the row offset as a traced int32, so one
+    executable serves all seeds and offsets at chunk height ``k``.
+
+    (Eager per-update dispatch of the Philox graph costs orders of
+    magnitude more than this cached program — see core/sketch.py.)
+    """
+    n1, n2, r, l, kind, dtype_name, corange, omega_salt, psi_salt = sig
+    dtype = jnp.dtype(dtype_name)
+
+    def upd(Y, W, H, keys, row0):
+        om = omega_tile(keys, 0, 0, n2, r, kind, dtype, salt=omega_salt)
+        dY = H @ om                                   # full contraction
+        Yk = jax.lax.dynamic_slice(Y, (row0, 0), (k, r))
+        Y = jax.lax.dynamic_update_slice(Y, Yk + dY, (row0, 0))
+        if corange:
+            psi_c = omega_tile(keys, row0, 0, k, l, kind, dtype,
+                               salt=psi_salt)         # (k, l)
+            W = W + psi_c.T @ H
+        return Y, W
+
+    return jax.jit(upd)
+
+
+class StreamingSketch:
+    """Single-device streaming accumulator for (Y, W).
+
+    backend:
+      * ``"xla"``     — plain jnp GEMM against a regenerated Omega tile
+                        (bitwise-stable vs. ``sketch_reference``).
+      * ``"pallas"``  — the fused TPU kernel (Omega generated in VMEM,
+                        never materialized in HBM).  Numerically equal to
+                        within f32-accumulation tolerance, not bitwise.
+      * ``"interpret"`` — the Pallas kernel in interpret mode (CPU tests).
+      * ``"auto"``    — "pallas" on TPU, else "xla".
+    """
+
+    def __init__(self, cfg: StreamConfig, backend: str = "auto"):
+        cfg.validate()
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if backend not in ("xla", "pallas", "interpret"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.cfg = cfg
+        self.backend = backend
+        self.Y = jnp.zeros((cfg.n1, cfg.r), cfg.dtype)
+        self.W = (jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype)
+                  if cfg.corange else None)
+        self._keys = jnp.stack(seed_keys(cfg.seed))
+        self.num_updates = 0
+
+    # -- sketch kernels ----------------------------------------------------
+
+    def _range_delta(self, H):
+        """H @ Omega over the full contraction (H: (k, n2))."""
+        cfg = self.cfg
+        if self.backend == "xla":
+            om = omega_tile(cfg.seed, 0, 0, cfg.n2, cfg.r, cfg.kind,
+                            H.dtype, salt=cfg.omega_salt)
+            return H @ om
+        from repro.kernels.ops import sketch_matmul
+        return sketch_matmul(H, seed=cfg.seed, r=cfg.r, kind=cfg.kind,
+                             salt=cfg.omega_salt,
+                             interpret=(self.backend == "interpret"))
+
+    # -- updates -----------------------------------------------------------
+
+    def update_rows(self, row0: int, H):
+        """Rows [row0, row0+k) arrive (additively).  Bitwise-reproduces the
+        one-shot sketch for row-partitioned streams."""
+        cfg = self.cfg
+        validate_row_block(cfg, row0, H.shape)
+        H = jnp.asarray(H, cfg.dtype)
+        if self.backend == "xla":
+            fn = local_rowblock_prog(_local_sig(cfg), H.shape[0])
+            self.Y, self.W = fn(self.Y, self.W, H, self._keys,
+                                jnp.int32(row0))
+        else:
+            k = H.shape[0]
+            self.Y = self.Y.at[row0:row0 + k, :].add(self._range_delta(H))
+            if self.W is not None:
+                self.W = self.W + psi_cols(cfg, row0, k).T @ H
+        self.num_updates += 1
+        return self
+
+    def update_cols(self, col0: int, H):
+        """Columns [col0, col0+k) arrive (additively)."""
+        cfg = self.cfg
+        n1, k = H.shape
+        if n1 != cfg.n1 or col0 < 0 or col0 + k > cfg.n2:
+            raise ValueError(f"col block ({col0}, {H.shape}) outside "
+                             f"({cfg.n1}, {cfg.n2})")
+        H = jnp.asarray(H, cfg.dtype)
+        om_rows = omega_tile(cfg.seed, col0, 0, k, cfg.r, cfg.kind,
+                             H.dtype, salt=cfg.omega_salt)   # Omega[col0:,:]
+        self.Y = self.Y + H @ om_rows
+        if self.W is not None:
+            self.W = self.W.at[:, col0:col0 + k].add(psi_matrix(cfg) @ H)
+        self.num_updates += 1
+        return self
+
+    def update(self, H):
+        """General additive update A <- A + H with H of full shape."""
+        if H.shape != (self.cfg.n1, self.cfg.n2):
+            raise ValueError(f"update shape {H.shape} != "
+                             f"({self.cfg.n1}, {self.cfg.n2})")
+        return self.update_rows(0, H)
+
+    # -- finalization ------------------------------------------------------
+
+    @property
+    def sketch(self):
+        """The accumulated range sketch Y = A·Omega (the Alg.-1 output B)."""
+        return self.Y
+
+    @property
+    def corange_sketch(self):
+        return self.W
+
+    def nystrom(self):
+        """(B, C) Nyström pair of a symmetric stream — C from the sketch
+        alone, no second pass over A (see :func:`nystrom_local`)."""
+        cfg = self.cfg
+        if cfg.n1 != cfg.n2:
+            raise ValueError("Nyström needs a square (symmetric) stream")
+        if self.backend in ("pallas", "interpret"):
+            from repro.kernels.ops import sketch_t_matmul
+            C = sketch_t_matmul(self.Y, seed=cfg.seed, r=cfg.r,
+                                kind=cfg.kind, salt=cfg.omega_salt,
+                                interpret=(self.backend == "interpret"))
+            return self.Y, C
+        return nystrom_local(self.Y, cfg)
+
+    def reconstruct(self, rank: Optional[int] = None, rcond=None):
+        """One-pass fixed-rank approximation A ~= Q·(Psi Q)†·W."""
+        from .reconstruct import one_pass_reconstruct
+        if self.W is None:
+            raise ValueError("reconstruction needs corange=True")
+        return one_pass_reconstruct(self.Y, self.W, self.cfg, rank=rank,
+                                    rcond=rcond)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core.compat import shard_map
 from repro.models.api import ModelAPI
 from repro.models.common import NULL_CTX, ShardCtx
 from repro.optim import adamw
@@ -128,8 +129,8 @@ def make_dp_compressed_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
                 step=P(), error_fb=fb_spec),
             {"loss": P(), "grad_norm": P(), "lr": P()},
         )
-        fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
         return fn(state, batch)
 
     return step

@@ -1,0 +1,68 @@
+"""Use the real ``hypothesis`` when installed; otherwise a deterministic
+pure-pytest fallback so the property tests still *execute* on minimal
+environments instead of failing at collection.
+
+The fallback draws ``max_examples`` example tuples from a per-test seeded
+``random.Random`` (seeded by the test name, so runs are reproducible and
+order-independent) and loops the test body over them inside a single pytest
+test.  It implements exactly the strategy surface this repo uses:
+``st.integers``, ``st.floats``, ``st.sampled_from``.
+
+This is NOT a hypothesis replacement — no shrinking, no adaptive search, no
+database.  Install ``hypothesis`` (see requirements-dev.txt) for the real
+thing; CI does.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mimics `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    def settings(max_examples: int = 20, **_ignored):
+        """Records max_examples on the (already ``given``-wrapped) test."""
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            # pytest must see a zero-arg test, not the wrapped signature
+            # (else the drawn parameters look like missing fixtures).
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -2,7 +2,7 @@
 pure-jnp oracle, bitwise Omega parity, and padding correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

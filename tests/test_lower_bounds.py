@@ -7,7 +7,7 @@ optimum of Lemma 5 / Lemma 6 and sit below the classical GEMM bound.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lower_bounds import (
     gemm_lower_bound,

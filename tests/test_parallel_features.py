@@ -8,7 +8,9 @@ from dist_helper import run_distributed
 
 def test_grad_compression_reduces_comm_and_converges():
     run_distributed(r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.parallel.grad_compress import (compress_and_allreduce,
     init_error_fb, comm_words_exact, comm_words_compressed)
@@ -38,7 +40,7 @@ def step(params, fb, x, t):
     params = jax.tree_util.tree_map(lambda p, gg: p - 20.0 * gg, params, g)
     return params, stack_fb(fb_l)
 
-sfn = jax.shard_map(step, mesh=mesh,
+sfn = shard_map(step, mesh=mesh,
                     in_specs=(P(), P("data"), P("data"), P()),
                     out_specs=(P(), P("data")), check_vma=False)
 sfn = jax.jit(sfn)
@@ -52,7 +54,7 @@ def step_exact(params, x):
     g = jax.grad(loss_fn)(params, x)
     g = jax.lax.pmean(g, "data")
     return jax.tree_util.tree_map(lambda p, gg: p - 20.0 * gg, params, g)
-exact = jax.jit(jax.shard_map(step_exact, mesh=mesh,
+exact = jax.jit(shard_map(step_exact, mesh=mesh,
                 in_specs=(P(), P("data")), out_specs=P(),
                 check_vma=False))
 ebytes = collective_bytes_of(exact.lower(params, x0).compile().as_text()).total
@@ -82,7 +84,9 @@ def test_compressed_equals_exact_at_full_rank():
     """With rank >= min(m, n), PowerSGD reconstructs the exact mean
     gradient (orthonormal basis spans the full row space)."""
     run_distributed(r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel.grad_compress import compress_and_allreduce, init_error_fb
 
@@ -97,7 +101,7 @@ def body(g_local):
     exact = jax.lax.pmean(g_local, "data")
     return out["w"], exact
 
-fn = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+fn = shard_map(body, mesh=mesh, in_specs=P("data"),
                    out_specs=(P(), P()), check_vma=False)
 approx, exact = fn(grads["w"].reshape(8, m, n).reshape(8 * m, n))
 err = float(jnp.abs(approx - exact).max())
@@ -108,7 +112,9 @@ print("OK", err)
 
 def test_pipeline_matches_sequential():
     run_distributed(r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.parallel.pipeline import pipeline
 
@@ -124,7 +130,7 @@ def run_pipe(ws_local, xq):
     return pipeline(stage_fn, ws_local[0], xq, axis="pod",
                     n_stages=n_stages)
 
-fn = jax.shard_map(run_pipe, mesh=mesh,
+fn = shard_map(run_pipe, mesh=mesh,
                    in_specs=(P("pod"), P()), out_specs=P(),
                    check_vma=False)
 out = fn(Ws, x)
@@ -145,7 +151,9 @@ print("OK", err)
 
 def test_param_shardings_rules():
     run_distributed(r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.compat import shard_map
 from repro.configs import get_config
 from repro.models import get_api
 from repro.parallel.sharding import param_shardings
@@ -189,7 +197,9 @@ print("OK")
 
 def test_elastic_restore_across_meshes(tmp_path):
     run_distributed(r"""
-import jax, jax.numpy as jnp, numpy as np, tempfile, os
+import jax, jax.numpy as jnp
+import numpy as np
+import tempfile, os
 from repro.configs import get_config
 from repro.configs.base import RunConfig
 from repro.models import get_api
