@@ -1,0 +1,96 @@
+"""Planner benchmark: predicted vs. measured cost + autotune cache behavior.
+
+Validates the planner's reason for existing on the running machine:
+  * per shape, the analytic estimate next to the measured wall time;
+  * across shapes, whether the predicted ordering matches the measured one
+    (the planner only needs to *rank* correctly — see plan/model.py);
+  * the autotune cache: first invocation measures and persists, the second
+    is a pure hit;
+  * a multi-device (8 fake devices) Alg.-1 grid sweep: the paper-optimal
+    grid's predicted words vs. measured time against rival factorizations.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from .common import emit, run_with_devices, time_us
+
+SHAPES = [(256, 512, 32), (512, 512, 64), (1024, 256, 16), (2048, 1024, 64)]
+
+_GRID_SNIPPET = r"""
+import time, jax, jax.numpy as jnp
+from repro.plan import plan_sketch, PRESETS
+from repro.core import rand_matmul, make_grid_mesh
+from repro.core.sketch import input_sharding
+from repro.plan.model import alg1_cost
+
+n1, n2, r = 64, 1024, 32
+P = 8
+plan = plan_sketch(n1, n2, r, P=P, machine=PRESETS["cpu"])
+A = jax.random.normal(jax.random.key(0), (n1, n2))
+grids = [plan.grid, (2, 2, 2), (1, 8, 1), (2, 4, 1)]
+seen = []
+for g in grids:
+    if g in seen:
+        continue
+    seen.append(g)
+    mesh = make_grid_mesh(*g)
+    Ag = jax.device_put(A, input_sharding(mesh))
+    fn = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
+    jax.block_until_ready(fn(Ag))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(fn(Ag))
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    words = alg1_cost(n1, n2, r, g).words
+    tag = "chosen" if g == plan.grid else "rival"
+    print(f"RESULT plan_grid_{g[0]}x{g[1]}x{g[2]},{us:.1f},"
+          f"{tag};pred_words={words:.0f}")
+"""
+
+
+def main():
+    import jax
+    from repro.plan import AutotuneCache, autotune, plan_sketch
+
+    # -- predicted vs measured, local dispatch, >= 3 shapes -----------------
+    rows = []
+    for (n1, n2, r) in SHAPES:
+        plan = plan_sketch(n1, n2, r, P=1)
+        A = jax.random.normal(jax.random.key(0), (n1, n2))
+        us = time_us(lambda: plan.execute(A, seed=1))
+        emit(f"plan_sketch_{n1}x{n2}x{r}", us,
+             f"variant={plan.variant};pred_us={plan.predicted_seconds*1e6:.1f}"
+             f";pred_words={plan.predicted_words:.0f}"
+             f";bound_words={plan.lower_bound_words:.0f}")
+        rows.append((plan.predicted_seconds, us))
+    pred_rank = sorted(range(len(rows)), key=lambda i: rows[i][0])
+    meas_rank = sorted(range(len(rows)), key=lambda i: rows[i][1])
+    emit("plan_pred_vs_measured_ordering", 0.0,
+         f"agree={pred_rank == meas_rank};pred={pred_rank};meas={meas_rank}")
+
+    # -- autotune: miss -> persist -> hit -----------------------------------
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_tune_"), "tune.json")
+    plan = plan_sketch(*SHAPES[0], P=1)
+    c1 = AutotuneCache(path)
+    tuned = autotune(plan, cache=c1)
+    c2 = AutotuneCache(path)
+    tuned2 = autotune(plan, cache=c2)
+    assert c1.misses == 1 and c2.hits == 1, (c1.misses, c2.hits)
+    assert tuned2.variant == tuned.variant
+    emit("plan_autotune_first", (tuned.measured_seconds or 0) * 1e6,
+         f"variant={tuned.variant};cache_miss={c1.misses == 1}"
+         f";persisted={os.path.exists(path)}")
+    emit("plan_autotune_second", (tuned2.measured_seconds or 0) * 1e6,
+         f"variant={tuned2.variant};cache_hit={c2.hits == 1}")
+
+    # -- multi-device grid sweep (8 fake devices, subprocess) ---------------
+    out = run_with_devices(_GRID_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ import traceback
 
 from . import (bench_bounds, bench_comm_vs_gen, bench_error,
                bench_grad_compress, bench_kernels, bench_nystrom,
-               bench_sketch, bench_stream)
+               bench_plan, bench_sketch, bench_stream)
 
 SUITES = {
     "thm_bounds": bench_bounds.main,        # Thm 2/3 tables
@@ -24,6 +24,7 @@ SUITES = {
     "kernels": bench_kernels.main,
     "grad_compress": bench_grad_compress.main,
     "stream": bench_stream.main,
+    "plan": bench_plan.main,                # predicted vs measured + autotune
 }
 
 

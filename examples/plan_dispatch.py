@@ -1,0 +1,65 @@
+"""Planner walkthrough: from the paper's cost model to an executed sketch.
+
+    PYTHONPATH=src python examples/plan_dispatch.py
+
+Shows the three layers of repro.plan on one device:
+  1. plan_sketch / plan_nystrom — analytic dispatch with a bound audit;
+  2. regime_sweep — the chosen variant/grid across processor counts
+     (the planner's view of the paper's regimes and the Fig.-7 crossover);
+  3. autotune — measured refinement with the on-disk cache.
+Multi-device planning works the same way (P > 1 plans execute on a mesh of
+fake XLA devices; see tests/test_plan.py for that path).
+"""
+import os
+import tempfile
+
+import jax
+
+from repro.core import sketch_reference
+from repro.plan import (
+    PRESETS,
+    autotune,
+    explain,
+    plan_nystrom,
+    plan_sketch,
+    plan_stream,
+    regime_sweep,
+)
+
+# --- 1. analytic plans, audited against Theorems 2/3 -----------------------
+print(explain(plan_sketch(4096, 4096, 256, P=64, machine=PRESETS["tpu_v5e"])))
+print()
+print(explain(plan_nystrom(49152, 4096, P=64, machine=PRESETS["cpu"])))
+print()
+
+# --- 2. the regime picture the planner sees --------------------------------
+print("plan_sketch across P (paper regimes 1 -> 3):")
+print(regime_sweep(plan_sketch, (4096, 4096, 256),
+                   [1, 64, 4096, 262144], machine=PRESETS["tpu_v5e"]))
+print()
+print("plan_nystrom across P (Fig.-7 crossover at P ~ n/r = 12):")
+print(regime_sweep(plan_nystrom, (49152, 4096),
+                   [4, 8, 16, 64], machine=PRESETS["cpu"]))
+print()
+
+# --- 3. execute + autotune on this machine ---------------------------------
+A = jax.random.normal(jax.random.key(0), (512, 768))
+plan = plan_sketch(512, 768, 64, P=1)
+B = plan.execute(A, seed=7)
+print(f"executed {plan.variant}: max |B - reference| = "
+      f"{float(abs(B - sketch_reference(A, 7, 64)).max()):.1e}")
+
+cache = os.path.join(tempfile.mkdtemp(), "tune.json")
+tuned = autotune(plan, cache=cache)
+print(f"autotuned -> {tuned.variant} "
+      f"(measured {tuned.measured_seconds * 1e6:.0f} us, cached at "
+      f"{os.path.basename(cache)})")
+tuned2 = autotune(plan, cache=cache)   # second call: pure cache hit
+print(f"second call hit the cache: {tuned2.measured_seconds == tuned.measured_seconds}")
+
+# streaming plans dispatch to the accumulator subsystem
+splan = plan_stream(512, 768, 64, P=1, chunk_rows=128)
+acc = splan.execute(A, seed=7)
+print(f"stream plan ({splan.variant}, chunk_rows={splan.chunk_rows}): "
+      f"{acc.num_updates} updates, sketch bitwise = "
+      f"{bool((acc.sketch == B).all()) if plan.variant == 'local_xla' else 'n/a'}")

@@ -82,6 +82,20 @@ def _gc(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
+def load_extra(directory: str,
+               step: Optional[int] = None) -> Tuple[Dict, int]:
+    """Read a checkpoint's ``extra`` dict (and resolved step) without
+    loading arrays — consumers that must build ``tree_like`` from stored
+    config (e.g. stream restore) read this first, then call ``restore``."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    return manifest.get("extra", {}), step
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

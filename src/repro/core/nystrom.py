@@ -310,11 +310,39 @@ def _nystrom_general_prog(r: int, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
-                 kind: str = "normal"):
-    """Run the paper-preferred variant on a 1-D mesh over all devices."""
+                 kind: str = "normal", plan=None):
+    """Run the paper-preferred variant on a 1-D mesh over all devices.
+
+    variant:
+      * ``"auto"``   — the paper's empirical rule (redist iff P > n/r);
+      * ``"plan"``   — cost-model dispatch via :mod:`repro.plan` (prices the
+        redist all-to-all against the no_redist reduce-scatter on the
+        machine model, so latency-dominated small problems may legitimately
+        deviate from the bandwidth-only rule);
+      * ``"redist"`` / ``"no_redist"`` — explicit.
+    plan: a precomputed :class:`repro.plan.Plan` (wins over ``variant``).
+    """
     devices = devices if devices is not None else jax.devices()
     Pn = len(devices)
     n = A.shape[0]
+    if plan is not None or variant == "plan":
+        if plan is None:
+            from repro.plan import plan_nystrom
+            plan = plan_nystrom(n, r, P=Pn, kind=kind)
+        if not plan.executable:
+            raise ValueError(
+                f"plan {plan.variant!r} for dims={plan.dims}, "
+                f"P={plan.n_procs} is analytic-only (P must divide n and "
+                f"r for the 1-D variants)")
+        variant = {"alg2_no_redist": "no_redist", "alg2_redist": "redist",
+                   "local_xla": "no_redist"}.get(plan.variant)
+        if variant is None:
+            # pallas_fused is a kernel variant (non-bitwise vs the XLA
+            # path), not a 1-D mesh program — dispatch it via the plan.
+            raise ValueError(f"plan variant {plan.variant!r} has no 1-D "
+                             f"mesh execution here; call plan.execute "
+                             f"instead (or pass variant='auto' to force "
+                             f"the mesh path)")
     if variant == "auto":
         variant = "redist" if Pn > max(1, n // max(r, 1)) else "no_redist"
     mesh = Mesh(np.asarray(devices), (X_AXIS,))

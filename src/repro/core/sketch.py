@@ -147,7 +147,10 @@ def rand_matmul(A, seed, r: int, mesh: Mesh,
     ax1, ax2, ax3 = axes
     p1, p2, p3 = (mesh.shape[a] for a in axes)
     n1, n2 = A.shape
-    if n1 % p1 or n2 % (p2 * p3) or n2 % p2 or r % p3:
+    # n1 % (p1*p2): the output layout P((p1, p2), p3) reduce-scatters each
+    # n1/p1 row block p2 ways (previously surfaced as an opaque XLA
+    # reduce_scatter divisibility error).
+    if n1 % (p1 * p2) or n2 % (p2 * p3) or n2 % p2 or r % p3:
         raise ValueError(f"shape ({n1},{n2},r={r}) not divisible by grid "
                          f"({p1},{p2},{p3})")
     keys = jnp.stack(seed_keys(seed))
@@ -203,12 +206,65 @@ def _rand_matmul_prog(r: int, mesh: Mesh, axes: Tuple[str, str, str],
 
 
 def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
-                     kind: str = "normal", devices=None):
-    """Alg. 1 with the paper's §4.3 optimal grid chosen automatically."""
+                     kind: str = "normal", devices=None, grid="auto",
+                     plan=None):
+    """Alg. 1 with the grid chosen automatically.
+
+    grid:
+      * ``"auto"`` — the paper's §4.3 optimal grid (``select_matmul_grid``),
+        snapped to an executable factorization by the planner when the ideal
+        grid does not divide the shape;
+      * ``"plan"`` — full cost-model dispatch via :mod:`repro.plan`
+        (equivalent to passing ``plan=plan_sketch(...)``);
+      * an explicit ``(p1, p2, p3)`` tuple.
+    plan: a precomputed :class:`repro.plan.Plan` (wins over ``grid``).
+
+    Returns (B, MatmulGrid, mesh).
+    """
+    from .grid import alg1_bandwidth_words, alg1_latency_hops
+    from .lower_bounds import matmul_regime
     devices = devices if devices is not None else jax.devices()
     P_procs = P_procs or len(devices)
     n1, n2 = A.shape
-    g: MatmulGrid = select_matmul_grid(n1, n2, r, P_procs)
+    if plan is not None or grid == "plan":
+        if plan is None:
+            from repro.plan import plan_sketch
+            plan = plan_sketch(n1, n2, r, P=P_procs, kind=kind)
+        if not plan.executable:
+            raise ValueError(
+                f"plan {plan.variant!r} for dims={plan.dims}, "
+                f"P={plan.n_procs} is analytic-only (no executable grid "
+                f"divides the shape)")
+        if plan.variant == "alg1" and plan.grid is not None:
+            grid = plan.grid
+        elif plan.variant == "local_xla":
+            grid = (1, 1, 1)          # degenerate Alg.-1 grid, same GEMM
+        else:
+            # kernel variants (pallas_fused) are not mesh programs and are
+            # documented as non-bitwise vs the XLA GEMM — don't silently
+            # substitute one for the other.
+            raise ValueError(f"plan variant {plan.variant!r} is not an "
+                             f"Alg.-1 grid plan; call plan.execute instead")
+    if grid == "auto":
+        g: MatmulGrid = select_matmul_grid(n1, n2, r, P_procs)
+        if n1 % (g.p1 * g.p2) or n2 % (g.p2 * g.p3) or n2 % g.p2 or r % g.p3:
+            # the §4.3 grid satisfies p_i <= dim_i but not necessarily the
+            # entry point's divisibility contract — snap to the cheapest
+            # executable factorization (same fallback the planner uses)
+            from repro.plan.planner import _best_executable_alg1_grid
+            shape = _best_executable_alg1_grid(n1, n2, r, P_procs)
+            if shape is None:
+                raise ValueError(
+                    f"no factorization of P={P_procs} divides "
+                    f"({n1}, {n2}, r={r}); pad the shape or change P")
+            g = MatmulGrid(*shape, g.regime,
+                           alg1_bandwidth_words(n1, n2, r, *shape),
+                           alg1_latency_hops(shape[1], shape[2]))
+    else:
+        p1, p2, p3 = grid
+        g = MatmulGrid(p1, p2, p3, matmul_regime(n1, n2, r, P_procs),
+                       alg1_bandwidth_words(n1, n2, r, p1, p2, p3),
+                       alg1_latency_hops(p2, p3))
     mesh = make_grid_mesh(g.p1, g.p2, g.p3, devices=devices)
     A = jax.device_put(A, input_sharding(mesh))
     return rand_matmul(A, seed, r, mesh, kind=kind), g, mesh

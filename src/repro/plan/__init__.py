@@ -1,0 +1,28 @@
+"""repro.plan — cost-model-driven execution planner + measured autotuner.
+
+Turns the paper's closed-form communication model (Theorems 2/3, §4.3/§5.3)
+into an executable dispatch layer: ``plan_sketch`` / ``plan_nystrom`` /
+``plan_stream`` score every variant the repo can run (Alg. 1 grids, Alg. 2
+redist/no_redist, the fused Pallas kernel, streaming ingest) on a
+:class:`MachineModel`, audit the winner against the lower bounds, and return
+a :class:`Plan` whose ``execute`` dispatches to the existing entry points.
+``autotune`` refines the analytic ranking with measured timings persisted in
+a versioned on-disk cache; ``explain`` renders the decision.
+
+  model.py    — machine presets + analytic per-variant costs
+  planner.py  — candidate enumeration, Plan, dispatch
+  autotune.py — measured refinement + JSON result cache
+  explain.py  — reports (regimes, crossovers, bound gaps)
+"""
+from .model import (  # noqa: F401
+    Cost, MachineModel, PRESETS, device_kind_tag, probe_machine,
+)
+from .planner import (  # noqa: F401
+    Candidate, Plan, plan_nystrom, plan_sketch, plan_stream,
+)
+from .autotune import (  # noqa: F401
+    AutotuneCache, autotune, cache_key, default_timer, shape_bucket,
+)
+from .explain import (  # noqa: F401
+    explain, nystrom_crossover_P, regime_sweep, sketch_zero_comm_limit,
+)

@@ -1,0 +1,315 @@
+"""Measured refinement of analytic plans + a versioned on-disk result cache.
+
+The analytic model (``plan.model``) ranks candidates from vendor peaks; real
+machines disagree (BLAS blocking, fake-device loopback, compiler fusion), so
+``autotune`` times the top-k analytic candidates on synthetic inputs and
+returns the plan rebuilt around the measured winner — the approach of the
+autotuned sketching libraries surveyed in Yang–Meng–Mahoney (1502.03032).
+
+Results persist in a JSON cache keyed by
+``(device kind, task, shape bucket, dtype, P)`` where the shape bucket
+rounds every dim up to a power of two — one tuning run serves the whole
+bucket.  The cache is versioned (schema bumps invalidate stale files) and
+written atomically (tmp + rename), so concurrent processes at worst re-tune.
+
+The timer is injectable (``timer=lambda fn: seconds``) so tests can tune
+deterministically without a clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+import time
+from typing import Callable, Dict, List, Optional
+
+from . import model as M
+from .planner import Candidate, Plan, _alg1_executable, _itemsize
+
+CACHE_VERSION = 1
+
+# Pallas block-size sweep for the fused kernels (filtered by VMEM fit).
+BLOCK_SWEEP = (
+    {"bm": 128, "bn": 128, "bk": 256},
+    {"bm": 256, "bn": 128, "bk": 512},
+    {"bm": 512, "bn": 128, "bk": 512},
+    {"bm": 256, "bn": 256, "bk": 512},
+)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+class AutotuneCache:
+    """Versioned JSON cache of tuning decisions; counts hits and misses."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.hits = 0
+        self.misses = 0
+        self._entries: Dict[str, dict] = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+                if data.get("version") == CACHE_VERSION:
+                    self._entries = data.get("entries", {})
+            except (OSError, ValueError):
+                pass  # unreadable/stale cache == empty cache
+
+    def get(self, key: str) -> Optional[dict]:
+        hit = self._entries.get(key)
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return hit
+
+    def put(self, key: str, value: dict):
+        self._entries[key] = value
+        self._flush()
+
+    def _flush(self):
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_tune_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"version": CACHE_VERSION,
+                           "entries": self._entries}, f, indent=1)
+            os.replace(tmp, self.path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __len__(self):
+        return len(self._entries)
+
+
+def shape_bucket(x: int) -> int:
+    """Round up to the next power of two (>= 1)."""
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def cache_key(plan: Plan, device_kind: Optional[str] = None) -> str:
+    kind = device_kind or M.device_kind_tag()
+    dims = "x".join(str(shape_bucket(d)) for d in plan.dims)
+    return f"{kind}/{plan.task}/{dims}/{plan.dtype}/P{plan.n_procs}"
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def default_timer(fn: Callable[[], object], warmup: int = 1,
+                  iters: int = 3) -> float:
+    """Median wall seconds of ``fn()`` with block_until_ready."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _synthetic_input(plan: Plan):
+    import jax
+    import jax.numpy as jnp
+    if plan.task == "nystrom":
+        n, _ = plan.dims
+        shape = (n, n)
+    else:
+        shape = (plan.dims[0], plan.dims[1])
+    # normal data, not zeros: sparse-zero fast paths must not skew timings
+    x = jax.random.normal(jax.random.key(0), shape)
+    return x.astype(jnp.dtype(plan.dtype))
+
+
+# ---------------------------------------------------------------------------
+# candidate expansion (what a measured pass actually sweeps)
+# ---------------------------------------------------------------------------
+
+def _measurable_candidates(plan: Plan, machine: M.MachineModel,
+                           top_k: int) -> List[Plan]:
+    """Concrete plan variants to time: the top-k executable analytic
+    candidates, with a grid sweep for Alg. 1/2 and a block-size sweep for
+    the fused Pallas kernels."""
+    isz = _itemsize(plan.dtype)
+    out: List[Plan] = []
+
+    def add(variant, grid=None, q_grid=None, blocks=None, chunk_rows=None):
+        out.append(dataclasses.replace(
+            plan, variant=variant, grid=grid, q_grid=q_grid, blocks=blocks,
+            chunk_rows=chunk_rows if chunk_rows else plan.chunk_rows,
+            executable=True))
+
+    if plan.task == "sketch" and plan.n_procs > 1:
+        n1, n2, r = plan.dims
+        from repro.core.grid import factorizations_3d
+        scored = []
+        for g in factorizations_3d(plan.n_procs):
+            if _alg1_executable(n1, n2, r, g):
+                c = M.alg1_cost(n1, n2, r, g)
+                scored.append((c.seconds(machine, isz), g))
+        scored.sort(key=lambda t: t[0])
+        for _, g in scored[:top_k]:
+            add("alg1", grid=g)
+        return out
+
+    if plan.task == "stream":
+        k0 = plan.chunk_rows or plan.dims[0]
+        for k in sorted({max(1, k0 // 2), k0, min(plan.dims[0], k0 * 2)}):
+            for cand in plan.candidates:
+                if cand.executable:
+                    add(cand.variant, grid=cand.grid, chunk_rows=k)
+        return out[: max(top_k * 2, 3)]
+
+    # P == 1 sketch/nystrom, or distributed nystrom
+    for cand in [c for c in plan.candidates if c.executable][:top_k]:
+        if cand.variant == "pallas_fused":
+            for blocks in BLOCK_SWEEP:
+                fit = 4 * (blocks["bm"] * blocks["bk"]
+                           + blocks["bk"] * blocks["bn"]
+                           + 2 * blocks["bm"] * blocks["bn"])
+                if fit <= machine.vmem_bytes:
+                    add(cand.variant, blocks=blocks)
+        else:
+            add(cand.variant, grid=cand.grid, q_grid=cand.q_grid)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+def autotune(plan: Plan, *,
+             cache: Optional[object] = None,
+             timer: Optional[Callable[[Callable[[], object]], float]] = None,
+             top_k: int = 3, seed: int = 0, devices=None,
+             machine: Optional[M.MachineModel] = None,
+             device_kind: Optional[str] = None) -> Plan:
+    """Return ``plan`` refined by measurement.
+
+    cache : an :class:`AutotuneCache`, a path (str) to create one at, or
+            ``None`` for no persistence.
+    timer : callable mapping a nullary executable closure to seconds
+            (default: wall clock, median of 3 after warmup).
+
+    A cache hit skips all measurement and rebuilds the plan from the stored
+    decision; a miss measures the candidate sweep, stores the winner, and
+    returns it with ``measured_seconds`` set.
+    """
+    if isinstance(cache, str):
+        cache = AutotuneCache(cache)
+    timer = timer or default_timer
+    machine = machine or M.probe_machine()
+
+    key = cache_key(plan, device_kind)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            restored = _plan_from_entry(plan, hit)
+            # the key buckets shapes to powers of two, so a stored decision
+            # may not divide THIS plan's exact dims — re-validate, and fall
+            # through to measuring when it doesn't.
+            if restored is not None:
+                return _rescore(restored, machine)
+
+    candidates = _measurable_candidates(plan, machine, top_k)
+    if not candidates:
+        return plan
+
+    A = _synthetic_input(plan)
+    best = None
+    for cand in candidates:
+        secs = timer(lambda c=cand: c.execute(A, seed=seed, devices=devices))
+        if best is None or secs < best[0]:
+            best = (secs, cand)
+    secs, winner = best
+    tuned = _rescore(dataclasses.replace(winner, measured_seconds=secs),
+                     machine)
+
+    if cache is not None:
+        cache.put(key, _entry_from_plan(tuned))
+    return tuned
+
+
+def _rescore(plan: Plan, machine: M.MachineModel) -> Plan:
+    """Recompute the analytic cost fields for the plan's (possibly tuned)
+    variant/grid, so the bound audit and ``explain`` describe the variant
+    that was actually chosen, not the pre-tune analytic favorite."""
+    if plan.task == "sketch":
+        n1, n2, r = plan.dims
+        if plan.variant == "alg1" and plan.grid:
+            c = M.alg1_cost(n1, n2, r, plan.grid)
+        elif plan.variant == "pallas_fused":
+            c = M.pallas_fused_cost(n1, n2, r)
+        else:
+            c = M.local_cost(n1, n2, r)
+    elif plan.task == "nystrom":
+        n, r = plan.dims
+        if plan.variant in ("alg2_no_redist", "alg2_redist") and plan.grid:
+            c = M.alg2_cost(n, r, plan.grid, plan.q_grid or plan.grid)
+        else:
+            c = M.nystrom_local_cost(n, r,
+                                     fused=(plan.variant == "pallas_fused"))
+    else:  # stream
+        n1, n2, r = plan.dims
+        k = plan.chunk_rows or n1
+        l = plan.sketch_l if plan.sketch_l is not None \
+            else min(2 * r + 1, n1)
+        grid = plan.grid if plan.variant == "stream_sharded" else (1, 1, 1)
+        per = M.stream_update_cost(k, n2, r, l, grid, plan.corange)
+        n_upd = math.ceil(n1 / k)
+        c = M.Cost(words=per.words * n_upd, messages=per.messages * n_upd,
+                   flops=per.flops * n_upd, hbm_words=per.hbm_words * n_upd)
+    return dataclasses.replace(
+        plan, predicted_words=c.words, predicted_flops=c.flops,
+        predicted_hbm_words=c.hbm_words,
+        predicted_seconds=c.seconds(machine, _itemsize(plan.dtype)))
+
+
+def _entry_from_plan(plan: Plan) -> dict:
+    return {"variant": plan.variant,
+            "grid": list(plan.grid) if plan.grid else None,
+            "q_grid": list(plan.q_grid) if plan.q_grid else None,
+            "blocks": dict(plan.blocks) if plan.blocks else None,
+            "chunk_rows": plan.chunk_rows,
+            "seconds": plan.measured_seconds}
+
+
+def _plan_from_entry(plan: Plan, entry: dict) -> Optional[Plan]:
+    """Rebuild a plan from a cache entry; None if the stored decision does
+    not apply to this plan's exact dims (pow2 bucket collision)."""
+    grid = tuple(entry["grid"]) if entry.get("grid") else None
+    variant = entry["variant"]
+    if plan.task in ("sketch", "stream"):
+        n1, n2, r = plan.dims
+        if variant in ("alg1", "stream_sharded"):
+            if grid is None or not _alg1_executable(n1, n2, r, grid):
+                return None
+    elif plan.task == "nystrom":
+        n, r = plan.dims
+        if variant.startswith("alg2"):
+            P = plan.n_procs
+            if n % P or r % P or P > n:
+                return None
+    return dataclasses.replace(
+        plan,
+        variant=variant,
+        grid=grid,
+        q_grid=tuple(entry["q_grid"]) if entry.get("q_grid") else None,
+        blocks=dict(entry["blocks"]) if entry.get("blocks") else None,
+        chunk_rows=entry.get("chunk_rows"),
+        measured_seconds=entry.get("seconds"),
+        executable=True)

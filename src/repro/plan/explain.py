@@ -1,0 +1,116 @@
+"""Human-readable plan reports: chosen regime, crossovers, bound gaps.
+
+``explain(plan)`` renders one plan; ``regime_sweep`` tabulates the chosen
+variant across a range of P (the planner's view of the paper's Fig. 7
+crossover).  Reuses :class:`repro.core.lower_bounds.BoundReport` for the
+"what would a non-random GEMM pay" comparison.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List
+
+from repro.core.lower_bounds import (
+    BoundReport,
+    report_matmul,
+    report_nystrom,
+)
+
+from .planner import Plan
+
+
+def sketch_zero_comm_limit(n1: int) -> int:
+    """Largest P with a zero-communication sketch plan (Thm. 2 regime 1)."""
+    return n1
+
+
+def nystrom_crossover_P(n: int, r: int) -> int:
+    """Smallest P where the redist all-to-all (nr/P words) beats the
+    no_redist reduce-scatter ((1-1/P)·r² words): P > n/r + 1."""
+    return int(math.floor(n / max(r, 1))) + 2
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if abs(x) >= 1e4 or 0 < abs(x) < 1e-3:
+        return f"{x:.3e}"
+    return f"{x:.4g}"
+
+
+def bound_report(plan: Plan) -> BoundReport:
+    if plan.task == "nystrom":
+        n, r = plan.dims
+        return report_nystrom(n, r, plan.n_procs)
+    n1, n2, r = plan.dims
+    return report_matmul(n1, n2, r, plan.n_procs)
+
+
+def explain(plan: Plan) -> str:
+    """Multi-line report for one plan."""
+    rep = bound_report(plan)
+    thm = "Theorem 3" if plan.task == "nystrom" else "Theorem 2"
+    lines: List[str] = []
+    lines.append(f"Plan[{plan.task}] dims={plan.dims} P={plan.n_procs} "
+                 f"dtype={plan.dtype} kind={plan.kind} "
+                 f"machine={plan.machine}")
+    lines.append(f"  {thm} regime {plan.regime}: lower bound "
+                 f"{_fmt(plan.lower_bound_words)} words/proc "
+                 f"(non-random GEMM would need {_fmt(rep.gemm_words)}; "
+                 f"savings {_fmt(rep.savings_vs_gemm)}x)")
+    grid = f" grid={plan.grid}" if plan.grid else ""
+    qg = f" q={plan.q_grid}" if plan.q_grid else ""
+    blocks = f" blocks={plan.blocks}" if plan.blocks else ""
+    chunk = f" chunk_rows={plan.chunk_rows}" if plan.chunk_rows else ""
+    lines.append(f"  chosen: {plan.variant}{grid}{qg}{blocks}{chunk}")
+    lines.append(f"          predicted {_fmt(plan.predicted_words)} words/proc"
+                 f" (gap over bound {_fmt(plan.bound_gap_words)}, "
+                 f"ratio {_fmt(plan.bound_ratio)})")
+    lines.append(f"          {_fmt(plan.predicted_flops)} FLOPs/proc, "
+                 f"{_fmt(plan.predicted_hbm_words)} HBM words/proc, "
+                 f"est {_fmt(plan.predicted_seconds)} s")
+    if plan.measured_seconds is not None:
+        lines.append(f"          measured {_fmt(plan.measured_seconds)} s "
+                     f"(autotuned)")
+    if plan.task in ("sketch", "stream"):
+        n1 = plan.dims[0]
+        lines.append(f"  zero-communication regime up to P <= n1 = {n1}"
+                     f" (regenerate-don't-communicate, paper §4.3 case 1)")
+    else:
+        n, r = plan.dims
+        lines.append(f"  redist/no_redist crossover at P ~ n/r = "
+                     f"{nystrom_crossover_P(n, r)} (paper Fig. 7)")
+    if not plan.executable:
+        lines.append("  NOTE: analytic-only plan — no executable grid "
+                     "divides this shape")
+    lines.append("  candidates (best first; * = chosen):")
+    for c in plan.candidates:
+        mark = "*" if (c.variant == plan.variant and c.executable
+                       and c.grid == plan.grid) else " "
+        where = f" grid={c.grid}" if c.grid else ""
+        whereq = f" q={c.q_grid}" if c.q_grid else ""
+        tail = f"  [{c.note}]" if c.note else ""
+        exe = "" if c.executable else "  (analytic-only)"
+        lines.append(f"   {mark} {c.variant:<20}{where}{whereq}"
+                     f"  {_fmt(c.cost.words):>10} words"
+                     f"  {_fmt(c.seconds):>10} s{exe}{tail}")
+    return "\n".join(lines)
+
+
+def regime_sweep(plan_fn, dims: tuple, Ps: Iterable[int], **kw) -> str:
+    """Table of chosen variant/grid/words vs P (e.g. the Fig.-7 view):
+
+        regime_sweep(plan_sketch, (4096, 4096, 256), [1, 8, 64, 512])
+    """
+    rows = []
+    for P in Ps:
+        p = plan_fn(*dims, P=P, **kw)
+        rows.append((P, p.regime, p.variant,
+                     str(p.grid or "-"), _fmt(p.predicted_words),
+                     _fmt(p.lower_bound_words)))
+    head = ("P", "regime", "variant", "grid", "pred words", "bound words")
+    widths = [max(len(head[i]), *(len(str(r[i])) for r in rows))
+              for i in range(len(head))]
+    fmt_row = lambda r: " | ".join(str(v).ljust(w) for v, w in zip(r, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([fmt_row(head), sep] + [fmt_row(r) for r in rows])

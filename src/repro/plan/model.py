@@ -1,0 +1,261 @@
+"""Machine model + analytic costs for every executable sketch/Nyström variant.
+
+The paper's cost model (§3) counts *words moved per processor* in the
+alpha-beta model; the repo's entry points add two more resources a real
+dispatcher must price: local FLOPs and HBM traffic (the fused Pallas kernel
+trades HBM words for in-VMEM regeneration the same way Alg. 1 trades network
+words for it).  This module turns all of that into one comparable unit —
+predicted seconds on a :class:`MachineModel` — while keeping the raw words /
+flops / bytes visible so tests can assert the paper's closed forms exactly.
+
+Per-variant analytic costs:
+
+  * ``alg1_cost``        — Alg. 1 on a (p1, p2, p3) grid: words are exactly
+                           ``core.grid.alg1_bandwidth_words``.
+  * ``alg2_cost``        — Alg. 2 on (p, q) grids: words are exactly
+                           ``core.grid.alg2_bandwidth_words``.
+  * ``local_cost``       — single-device GEMM with Omega materialized in HBM.
+  * ``pallas_fused_cost``— the fused kernel: Omega never touches HBM, so the
+                           memory term drops by n2·r words (the §6.3 claim
+                           applied to the memory hierarchy).
+  * ``stream_update_cost``— one row-slab ingest step of the streaming
+                           subsystem (local or sharded).
+
+Machine presets are deliberately coarse (vendor peaks); the measured
+autotuner (``plan.autotune``) exists precisely because these numbers are
+only good enough to *rank* candidates, not to predict wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.core.grid import (
+    alg1_bandwidth_words,
+    alg1_latency_hops,
+    alg2_bandwidth_words,
+)
+from repro.roofline.analysis import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+# ---------------------------------------------------------------------------
+# Machine model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Alpha-beta-gamma machine: network latency/bandwidth + compute/memory.
+
+    alpha      : per-message latency (seconds)
+    byte_bw    : interconnect bandwidth per device (bytes/s) — 1/beta
+    flop_rate  : peak FLOP/s per device
+    hbm_bw     : HBM bandwidth per device (bytes/s)
+    vmem_bytes : per-core fast scratch (VMEM) capacity
+    hbm_bytes  : per-device main memory capacity
+    supports_pallas : whether the fused Mosaic/Pallas kernels can run
+                      natively (TPU); elsewhere they only run in interpret
+                      mode, which is a correctness tool, not a fast path.
+    """
+    name: str
+    alpha: float
+    byte_bw: float
+    flop_rate: float
+    hbm_bw: float
+    vmem_bytes: int
+    hbm_bytes: int
+    supports_pallas: bool = False
+
+
+# Per-chip vendor peaks; the v5e numbers are the roofline module's
+# constants, so the planner and the measured roofline agree by construction.
+PRESETS = {
+    "tpu_v5e": MachineModel(
+        name="tpu_v5e", alpha=1e-6, byte_bw=ICI_LINK_BW,
+        flop_rate=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+        vmem_bytes=128 * 2 ** 20, hbm_bytes=16 * 2 ** 30,
+        supports_pallas=True),
+    "tpu_v4": MachineModel(
+        name="tpu_v4", alpha=1e-6, byte_bw=100e9, flop_rate=275e12,
+        hbm_bw=1200e9, vmem_bytes=128 * 2 ** 20, hbm_bytes=32 * 2 ** 30,
+        supports_pallas=True),
+    # Host CPU (also XLA's fake multi-device backend): "network" is shared
+    # memory, flops a few-core GEMM rate.  Order-of-magnitude is all the
+    # planner needs — candidates are re-ranked by the autotuner anyway.
+    "cpu": MachineModel(
+        name="cpu", alpha=5e-6, byte_bw=10e9, flop_rate=5e10,
+        hbm_bw=20e9, vmem_bytes=32 * 2 ** 20, hbm_bytes=8 * 2 ** 30,
+        supports_pallas=False),
+}
+
+
+def probe_machine(device=None) -> MachineModel:
+    """Best-effort preset from ``jax.devices()[0]`` (overridable everywhere).
+
+    Never raises: unknown accelerators fall back to the v5e preset, unknown
+    hosts to the cpu preset, and an uninitialized backend to cpu.
+    """
+    if device is None:
+        try:
+            import jax
+            device = jax.devices()[0]
+        except Exception:
+            return PRESETS["cpu"]
+    platform = getattr(device, "platform", "cpu")
+    kind = (getattr(device, "device_kind", "") or "").lower()
+    if platform == "tpu":
+        if "v4" in kind:
+            return PRESETS["tpu_v4"]
+        return PRESETS["tpu_v5e"]
+    if platform == "cpu":
+        return PRESETS["cpu"]
+    # gpu / unknown accelerator: v5e-class roofline is the closest preset
+    return dataclasses.replace(PRESETS["tpu_v5e"], name=platform,
+                               supports_pallas=False)
+
+
+def device_kind_tag(device=None) -> str:
+    """Stable string identifying the device kind (autotune cache key)."""
+    if device is None:
+        try:
+            import jax
+            device = jax.devices()[0]
+        except Exception:
+            return "unknown"
+    kind = getattr(device, "device_kind", "") or getattr(device, "platform",
+                                                         "unknown")
+    return str(kind).replace(" ", "_")
+
+
+# ---------------------------------------------------------------------------
+# Cost breakdown
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Per-processor resource counts for one variant (paper units: words)."""
+    words: float          # interconnect words moved (the paper's W)
+    messages: float       # latency hops on the critical path
+    flops: float          # local FLOPs
+    hbm_words: float      # local HBM words touched (reads + writes)
+
+    def seconds(self, machine: MachineModel, itemsize: int = 4) -> float:
+        """Execution estimate: local work overlaps compute with memory
+        (max of terms), but the shard_map programs serialize collectives
+        with the local GEMM, so network time and latency are added — which
+        also keeps variants with identical FLOPs (e.g. redist/no_redist)
+        ranked by their word counts rather than by latency noise."""
+        t_net = self.words * itemsize / machine.byte_bw
+        t_flop = self.flops / machine.flop_rate
+        t_mem = self.hbm_words * itemsize / machine.hbm_bw
+        return max(t_flop, t_mem) + t_net + self.messages * machine.alpha
+
+    def bottleneck(self, machine: MachineModel, itemsize: int = 4) -> str:
+        terms = {
+            "network": self.words * itemsize / machine.byte_bw,
+            "compute": self.flops / machine.flop_rate,
+            "memory": self.hbm_words * itemsize / machine.hbm_bw,
+        }
+        return max(terms, key=terms.get)
+
+
+# ---------------------------------------------------------------------------
+# Variant costs — sketch  B = A·Omega  (n1 x n2  @  n2 x r)
+# ---------------------------------------------------------------------------
+
+def alg1_cost(n1: int, n2: int, r: int,
+              grid: Tuple[int, int, int]) -> Cost:
+    """Alg. 1 on (p1, p2, p3): words is the paper's closed form exactly."""
+    p1, p2, p3 = grid
+    P = p1 * p2 * p3
+    words = alg1_bandwidth_words(n1, n2, r, p1, p2, p3)
+    # per device: read the gathered A panel + regenerated Omega block
+    # (write+read through VMEM), write the B shard.
+    hbm = (n1 * n2 / (p1 * p2) + n2 * r / (p2 * p3) + n1 * r / P)
+    return Cost(words=words, messages=alg1_latency_hops(p2, p3),
+                flops=2.0 * n1 * n2 * r / P, hbm_words=hbm)
+
+
+def alg1_communicating_cost(n1: int, n2: int, r: int,
+                            grid: Tuple[int, int, int]) -> Cost:
+    """The Fig.-3 anti-pattern: Omega all-gathered instead of regenerated.
+    Never chosen; kept in candidate lists so reports can show the margin."""
+    base = alg1_cost(n1, n2, r, grid)
+    P = grid[0] * grid[1] * grid[2]
+    omega_words = (1.0 - 1.0 / P) * n2 * r  # receive the rest of Omega
+    return dataclasses.replace(
+        base, words=base.words + omega_words,
+        messages=base.messages + math.log2(max(P, 1)))
+
+
+def local_cost(n1: int, n2: int, r: int) -> Cost:
+    """Single-device GEMM with Omega materialized in HBM."""
+    return Cost(words=0.0, messages=0.0, flops=2.0 * n1 * n2 * r,
+                hbm_words=float(n1 * n2 + n2 * r + n1 * r))
+
+
+def pallas_fused_cost(n1: int, n2: int, r: int) -> Cost:
+    """Fused kernel: the n2·r Omega stream never touches HBM (§6.3 applied
+    to the memory hierarchy — see kernels/sketch_matmul.py)."""
+    return Cost(words=0.0, messages=0.0, flops=2.0 * n1 * n2 * r,
+                hbm_words=float(n1 * n2 + n1 * r))
+
+
+# ---------------------------------------------------------------------------
+# Variant costs — Nyström  (B = A·Omega ; C = Omega^T·B)
+# ---------------------------------------------------------------------------
+
+def alg2_cost(n: int, r: int, p: Tuple[int, int, int],
+              q: Tuple[int, int, int]) -> Cost:
+    """Alg. 2 on grids (p, q): words is ``alg2_bandwidth_words`` exactly."""
+    p1, p2, p3 = p
+    P = p1 * p2 * p3
+    words = alg2_bandwidth_words(n, r, p, q)
+    hbm = (n * n / (p1 * p2)          # A panel
+           + 2.0 * n * r / P          # Omega regen (stage 1 + stage 2)
+           + 2.0 * n * r / P          # B write + B re-read
+           + r * r / P)               # C shard
+    msgs = alg1_latency_hops(p2, p3) + math.log2(max(p1, 1))
+    if tuple(p) != tuple(q):
+        msgs += math.log2(max(P, 1))  # the all-to-all redistribution
+    return Cost(words=words, messages=msgs,
+                flops=(2.0 * n * n * r + 2.0 * n * r * r) / P, hbm_words=hbm)
+
+
+def nystrom_local_cost(n: int, r: int, fused: bool = False) -> Cost:
+    """Single-device Nyström pair; ``fused`` drops both Omega HBM streams."""
+    omega_words = 0.0 if fused else 2.0 * n * r
+    return Cost(words=0.0, messages=0.0,
+                flops=2.0 * n * n * r + 2.0 * n * r * r,
+                hbm_words=float(n * n + omega_words + 2 * n * r + r * r))
+
+
+# ---------------------------------------------------------------------------
+# Variant costs — streaming ingest (one row-slab update of k rows)
+# ---------------------------------------------------------------------------
+
+def stream_update_cost(k: int, n2: int, r: int, l: int,
+                       grid: Tuple[int, int, int] = (1, 1, 1),
+                       corange: bool = True) -> Cost:
+    """One ``update_rows`` step folding a (k, n2) slab.
+
+    Local grid (1,1,1): zero network words.  Sharded: the slab (replicated
+    over p1, column-sharded over (p2, p3)) pays one All-Gather over p3 and
+    one All-Reduce of the dY partial over p2, plus nothing for W (replicated
+    over p1, update fully local) — see stream/distributed.py:update_rows.
+    """
+    p1, p2, p3 = grid
+    words = 0.0
+    msgs = 0.0
+    if p3 > 1:
+        words += (1.0 - 1.0 / p3) * k * n2 / p2
+        msgs += math.log2(p3)
+    if p2 > 1:
+        words += 2.0 * (1.0 - 1.0 / p2) * k * r / p3   # all-reduce of dY
+        msgs += 2.0 * math.log2(p2)
+    flops = 2.0 * k * n2 * r / (p2 * p3)
+    hbm = k * n2 / (p2 * p3) + n2 * r / (p2 * p3) + k * r / p3
+    if corange:
+        flops += 2.0 * k * n2 * l / (p2 * p3)
+        hbm += k * l + l * n2 / (p2 * p3)
+    return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)

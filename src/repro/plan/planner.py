@@ -1,0 +1,431 @@
+"""Cost-model-driven execution planner for sketch / Nyström / stream dispatch.
+
+``plan_sketch`` / ``plan_nystrom`` / ``plan_stream`` enumerate every variant
+the repo can actually execute for the given (shape, P, dtype), score each
+with the analytic costs in :mod:`repro.plan.model`, compare the winner
+against the paper's lower bound (Theorems 2/3), and return a :class:`Plan`
+whose ``execute`` dispatches to the existing entry points — bitwise
+identical to calling them directly, because it *is* the same call.
+
+Planner invariants (pinned by tests/test_plan.py):
+
+  * predicted words are never below the Theorem 2/3 lower bound;
+  * when a shard_map variant wins, its words equal the closed forms
+    ``alg1_bandwidth_words`` / ``alg2_bandwidth_words`` exactly;
+  * in the Theorem-2 regime 1 (P <= n1) the planner picks the
+    zero-communication local-regenerate grid (P, 1, 1);
+  * the Alg.-1 grid agrees with ``core.grid.select_matmul_grid`` whenever
+    that grid is executable (divisibility), and otherwise falls back to the
+    cheapest executable factorization of P.
+
+The analytic ranking is refined by measured timings in ``plan.autotune``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.grid import (
+    MatmulGrid,
+    factorizations_3d,
+    select_matmul_grid,
+    select_nystrom_grids,
+)
+from repro.core.lower_bounds import (
+    matmul_lower_bound,
+    matmul_regime,
+    nystrom_lower_bound,
+    nystrom_regime,
+)
+
+from . import model as M
+
+# Default Pallas block sizes (MXU-aligned; kernels/sketch_matmul.py).
+DEFAULT_BLOCKS = {"bm": 256, "bn": 128, "bk": 512}
+
+
+def _dtype_name(dtype) -> str:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).name
+
+
+def _itemsize(dtype_name: str) -> int:
+    import numpy as np
+    return int(np.dtype(dtype_name).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Candidates and the Plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One scored dispatch option; ``executable=False`` entries are kept in
+    the report (e.g. the Omega-communicating baseline, infeasible ideal
+    grids) but never chosen."""
+    variant: str
+    cost: M.Cost
+    seconds: float
+    grid: Optional[Tuple[int, int, int]] = None
+    q_grid: Optional[Tuple[int, int, int]] = None
+    blocks: Optional[Tuple[Tuple[str, int], ...]] = None
+    executable: bool = True
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An executable dispatch decision plus everything needed to audit it."""
+    task: str                       # "sketch" | "nystrom" | "stream"
+    variant: str
+    dims: Tuple[int, ...]           # sketch: (n1, n2, r); nystrom: (n, r)
+    n_procs: int
+    dtype: str
+    kind: str                       # Omega entry distribution
+    grid: Optional[Tuple[int, int, int]]
+    q_grid: Optional[Tuple[int, int, int]]
+    blocks: Optional[Dict[str, int]]
+    predicted_words: float          # per-processor interconnect words
+    predicted_flops: float
+    predicted_hbm_words: float
+    predicted_seconds: float
+    lower_bound_words: float
+    regime: int
+    candidates: Tuple[Candidate, ...]
+    machine: str
+    executable: bool = True
+    chunk_rows: Optional[int] = None
+    corange: bool = False                      # stream plans only
+    sketch_l: Optional[int] = None             # stream plans only
+    measured_seconds: Optional[float] = None   # set by plan.autotune
+
+    # -- audit helpers ------------------------------------------------------
+
+    @property
+    def bound_gap_words(self) -> float:
+        """Predicted words above the Theorem 2/3 floor (>= 0 by tightness)."""
+        return self.predicted_words - self.lower_bound_words
+
+    @property
+    def bound_ratio(self) -> float:
+        if self.lower_bound_words == 0.0:
+            return 1.0 if self.predicted_words == 0.0 else math.inf
+        return self.predicted_words / self.lower_bound_words
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, A, seed=0, devices=None):
+        """Dispatch to the underlying entry point.
+
+        sketch : returns B = A·Omega (layout per the chosen variant)
+        nystrom: returns (B, C)
+        stream : builds an accumulator, ingests A in ``chunk_rows`` slabs,
+                 and returns the accumulator (call .nystrom()/.reconstruct()
+                 on it to finalize)
+
+        Bitwise contract: for every variant this performs exactly the same
+        call a user would make against core/kernels/stream directly.
+        """
+        if not self.executable:
+            raise ValueError(
+                f"plan {self.variant} for dims={self.dims}, P={self.n_procs} "
+                f"is analytic-only (no executable grid divides the shape); "
+                f"pad the shape or change P")
+        if self.task == "sketch":
+            return self._execute_sketch(A, seed, devices)
+        if self.task == "nystrom":
+            return self._execute_nystrom(A, seed, devices)
+        if self.task == "stream":
+            return self._execute_stream(A, seed, devices)
+        raise ValueError(self.task)
+
+    def _mesh_1d(self, devices):
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        devices = devices if devices is not None else jax.devices()
+        if len(devices) < self.n_procs:
+            raise ValueError(f"plan needs {self.n_procs} devices, "
+                             f"have {len(devices)}")
+        return Mesh(np.asarray(devices[: self.n_procs]), ("x",))
+
+    def _execute_sketch(self, A, seed, devices):
+        import jax
+        n1, n2, r = self.dims
+        if self.variant == "alg1":
+            from repro.core.sketch import (input_sharding, make_grid_mesh,
+                                           rand_matmul)
+            mesh = make_grid_mesh(*self.grid, devices=devices)
+            A = jax.device_put(A, input_sharding(mesh))
+            return rand_matmul(A, seed, r, mesh, kind=self.kind)
+        if self.variant == "local_xla":
+            from repro.core.sketch import sketch_reference
+            return sketch_reference(A, seed, r, kind=self.kind)
+        if self.variant == "pallas_fused":
+            from repro.kernels.ops import sketch_matmul
+            interpret = jax.default_backend() != "tpu"
+            return sketch_matmul(A, seed=seed, r=r, kind=self.kind,
+                                 interpret=interpret, **(self.blocks or {}))
+        raise ValueError(self.variant)
+
+    def _execute_nystrom(self, A, seed, devices):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        n, r = self.dims
+        if self.variant in ("alg2_no_redist", "alg2_redist"):
+            from repro.core.nystrom import nystrom_no_redist, nystrom_redist
+            mesh = self._mesh_1d(devices)
+            A = jax.device_put(A, NamedSharding(mesh, P("x", None)))
+            fn = (nystrom_no_redist if self.variant == "alg2_no_redist"
+                  else nystrom_redist)
+            return fn(A, seed, r, mesh, axis="x", kind=self.kind)
+        if self.variant == "local_xla":
+            from repro.core.nystrom import nystrom_reference
+            return nystrom_reference(A, seed, r, kind=self.kind)
+        if self.variant == "pallas_fused":
+            from repro.kernels.ops import nystrom_fused
+            interpret = jax.default_backend() != "tpu"
+            return nystrom_fused(A, seed=seed, r=r, kind=self.kind,
+                                 interpret=interpret, **(self.blocks or {}))
+        raise ValueError(self.variant)
+
+    def _execute_stream(self, A, seed, devices):
+        from repro.stream.state import StreamConfig
+        n1, n2, r = self.dims
+        cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed, kind=self.kind,
+                           corange=self.corange, l=self.sketch_l)
+        k = self.chunk_rows or n1
+        if self.variant == "stream_local":
+            from repro.stream.state import StreamingSketch
+            st = StreamingSketch(cfg, backend="xla")
+        elif self.variant == "stream_sharded":
+            from repro.core.sketch import make_grid_mesh
+            from repro.stream.distributed import ShardedStreamingSketch
+            mesh = make_grid_mesh(*self.grid, devices=devices)
+            st = ShardedStreamingSketch(cfg, mesh)
+        else:
+            raise ValueError(self.variant)
+        for row0 in range(0, n1, k):
+            st.update_rows(row0, A[row0: row0 + k])
+        return st
+
+
+# ---------------------------------------------------------------------------
+# plan_sketch
+# ---------------------------------------------------------------------------
+
+def _alg1_executable(n1: int, n2: int, r: int,
+                     grid: Tuple[int, int, int]) -> bool:
+    # n1 % (p1*p2): B is laid out P((p1, p2), p3) — the reduce-scatter
+    # splits each n1/p1 row block p2 ways.
+    p1, p2, p3 = grid
+    return (n1 % (p1 * p2) == 0 and n2 % (p2 * p3) == 0 and n2 % p2 == 0
+            and r % p3 == 0 and p1 <= n1 and p2 <= n2 and p3 <= r)
+
+
+def _best_executable_alg1_grid(n1: int, n2: int, r: int, P: int):
+    """Paper grid if it divides the shape, else the cheapest factorization
+    of P that does (what select_matmul_grid does, restricted further to the
+    entry point's divisibility contract)."""
+    g: MatmulGrid = select_matmul_grid(n1, n2, r, P)
+    if _alg1_executable(n1, n2, r, g.shape):
+        return g.shape
+    best = None
+    for cand in factorizations_3d(P):
+        if not _alg1_executable(n1, n2, r, cand):
+            continue
+        c = M.alg1_cost(n1, n2, r, cand)
+        key = (c.words, c.messages)
+        if best is None or key < best[0]:
+            best = (key, cand)
+    return best[1] if best else None
+
+
+def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
+                dtype="float32", kind: str = "normal",
+                machine: Optional[M.MachineModel] = None,
+                allow_pallas: Optional[bool] = None) -> Plan:
+    """Plan B = A·Omega for an (n1 x n2) A on P processors.
+
+    P defaults to ``len(jax.devices())``.  ``allow_pallas`` overrides the
+    machine's capability flag (tests force the fused path on CPU, where it
+    runs in interpret mode).
+    """
+    if P is None:
+        import jax
+        P = len(jax.devices())
+    machine = machine or M.probe_machine()
+    if allow_pallas is None:
+        allow_pallas = machine.supports_pallas
+    dtype = _dtype_name(dtype)
+    isz = _itemsize(dtype)
+    lb = matmul_lower_bound(n1, n2, r, P)
+    regime = matmul_regime(n1, n2, r, P)
+
+    cands = []
+    if P == 1:
+        c = M.local_cost(n1, n2, r)
+        cands.append(Candidate("local_xla", c, c.seconds(machine, isz)))
+        cp = M.pallas_fused_cost(n1, n2, r)
+        cands.append(Candidate(
+            "pallas_fused", cp, cp.seconds(machine, isz),
+            blocks=tuple(sorted(DEFAULT_BLOCKS.items())),
+            executable=allow_pallas,
+            note="" if allow_pallas else "needs TPU (interpret-only here)"))
+    else:
+        grid = _best_executable_alg1_grid(n1, n2, r, P)
+        if grid is not None:
+            c = M.alg1_cost(n1, n2, r, grid)
+            cands.append(Candidate("alg1", c, c.seconds(machine, isz),
+                                   grid=grid))
+            cc = M.alg1_communicating_cost(n1, n2, r, grid)
+            cands.append(Candidate(
+                "alg1_communicating", cc, cc.seconds(machine, isz),
+                grid=grid, executable=False,
+                note="Fig.-3 baseline: Omega over the wire, never chosen"))
+        else:
+            ideal = select_matmul_grid(n1, n2, r, P).shape
+            c = M.alg1_cost(n1, n2, r, ideal)
+            cands.append(Candidate(
+                "alg1", c, c.seconds(machine, isz), grid=ideal,
+                executable=False,
+                note=f"no factorization of P={P} divides the shape"))
+
+    return _finish_plan("sketch", (n1, n2, r), P, dtype, kind, machine,
+                        cands, lb, regime)
+
+
+# ---------------------------------------------------------------------------
+# plan_nystrom
+# ---------------------------------------------------------------------------
+
+def plan_nystrom(n: int, r: int, P: Optional[int] = None,
+                 dtype="float32", kind: str = "normal",
+                 machine: Optional[M.MachineModel] = None,
+                 allow_pallas: Optional[bool] = None) -> Plan:
+    """Plan the Nyström pair (B, C) for a symmetric (n x n) A on P procs.
+
+    The redist / no_redist choice falls out of the cost model — redist's
+    nr/P all-to-all beats no_redist's (1-1/P)·r² reduce-scatter exactly
+    when P > ~n/r, the paper's Fig.-7 crossover.
+    """
+    if P is None:
+        import jax
+        P = len(jax.devices())
+    machine = machine or M.probe_machine()
+    if allow_pallas is None:
+        allow_pallas = machine.supports_pallas
+    dtype = _dtype_name(dtype)
+    isz = _itemsize(dtype)
+    lb = nystrom_lower_bound(n, r, P)
+    regime = nystrom_regime(n, r, P)
+
+    cands = []
+    if P == 1:
+        c = M.nystrom_local_cost(n, r, fused=False)
+        cands.append(Candidate("local_xla", c, c.seconds(machine, isz)))
+        cp = M.nystrom_local_cost(n, r, fused=True)
+        cands.append(Candidate(
+            "pallas_fused", cp, cp.seconds(machine, isz),
+            blocks=tuple(sorted(DEFAULT_BLOCKS.items())),
+            executable=allow_pallas,
+            note="" if allow_pallas else "needs TPU (interpret-only here)"))
+    else:
+        executable_1d = (n % P == 0 and r % P == 0 and P <= n)
+        note = "" if executable_1d else f"needs P | n and P | r (P={P})"
+        p = (P, 1, 1)
+        for variant, q in (("alg2_no_redist", (P, 1, 1)),
+                           ("alg2_redist", (1, 1, P))):
+            c = M.alg2_cost(n, r, p, q)
+            cands.append(Candidate(variant, c, c.seconds(machine, isz),
+                                   grid=p, q_grid=q,
+                                   executable=executable_1d, note=note))
+        # §5.3 approach 1, analytic-only: general two-grid execution of the
+        # bound-driven grids is future work (nystrom_general covers a mesh
+        # with shared axes; arbitrary (p, q) pairs are not wired up).
+        bd = select_nystrom_grids(n, r, P, variant="bound_driven")
+        cb = M.alg2_cost(n, r, bd.p, bd.q)
+        cands.append(Candidate(
+            "alg2_bound_driven", cb, cb.seconds(machine, isz),
+            grid=tuple(bd.p), q_grid=tuple(bd.q), executable=False,
+            note="analytic reference (general two-grid execution unwired)"))
+
+    return _finish_plan("nystrom", (n, r), P, dtype, kind, machine,
+                        cands, lb, regime)
+
+
+# ---------------------------------------------------------------------------
+# plan_stream
+# ---------------------------------------------------------------------------
+
+def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
+                chunk_rows: Optional[int] = None, l: Optional[int] = None,
+                corange: bool = False, dtype="float32",
+                kind: str = "normal",
+                machine: Optional[M.MachineModel] = None) -> Plan:
+    """Plan a full streaming pass over A in row slabs of ``chunk_rows``.
+
+    Scores the local accumulator against the mesh-sharded one; predicted
+    cost is the per-update cost times the number of slabs (one full pass).
+    """
+    if P is None:
+        import jax
+        P = len(jax.devices())
+    machine = machine or M.probe_machine()
+    dtype = _dtype_name(dtype)
+    isz = _itemsize(dtype)
+    chunk_rows = chunk_rows or max(1, n1 // 8)
+    n_upd = math.ceil(n1 / chunk_rows)
+    l_eff = l if l is not None else min(2 * r + 1, n1)
+    lb = matmul_lower_bound(n1, n2, r, P)
+    regime = matmul_regime(n1, n2, r, P)
+
+    def scaled(c: M.Cost) -> M.Cost:
+        return M.Cost(words=c.words * n_upd, messages=c.messages * n_upd,
+                      flops=c.flops * n_upd, hbm_words=c.hbm_words * n_upd)
+
+    cands = []
+    c_loc = scaled(M.stream_update_cost(chunk_rows, n2, r, l_eff,
+                                        (1, 1, 1), corange))
+    cands.append(Candidate("stream_local", c_loc, c_loc.seconds(machine, isz),
+                           executable=(P == 1),
+                           note="" if P == 1 else "single-device only"))
+    if P > 1:
+        grid = _best_executable_alg1_grid(n1, n2, r, P)
+        if grid is not None:
+            c = scaled(M.stream_update_cost(chunk_rows, n2, r, l_eff,
+                                            grid, corange))
+            cands.append(Candidate("stream_sharded", c,
+                                   c.seconds(machine, isz), grid=grid))
+
+    plan = _finish_plan("stream", (n1, n2, r), P, dtype, kind, machine,
+                        cands, lb, regime)
+    return dataclasses.replace(plan, chunk_rows=chunk_rows, corange=corange,
+                               sketch_l=l)
+
+
+# ---------------------------------------------------------------------------
+# shared tail
+# ---------------------------------------------------------------------------
+
+def _finish_plan(task: str, dims: Tuple[int, ...], P: int, dtype: str,
+                 kind: str, machine: M.MachineModel,
+                 cands: Sequence[Candidate], lb: float, regime: int) -> Plan:
+    cands = tuple(sorted(
+        cands, key=lambda c: (not c.executable, c.seconds,
+                              c.cost.hbm_words, c.cost.words)))
+    chosen = next((c for c in cands if c.executable), None)
+    if chosen is None:
+        chosen = cands[0]  # analytic-only plan; execute() raises
+    return Plan(
+        task=task, variant=chosen.variant, dims=tuple(dims), n_procs=P,
+        dtype=dtype, kind=kind, grid=chosen.grid, q_grid=chosen.q_grid,
+        blocks=dict(chosen.blocks) if chosen.blocks else None,
+        predicted_words=chosen.cost.words,
+        predicted_flops=chosen.cost.flops,
+        predicted_hbm_words=chosen.cost.hbm_words,
+        predicted_seconds=chosen.seconds,
+        lower_bound_words=lb, regime=regime, candidates=cands,
+        machine=machine.name,
+        executable=chosen.executable)

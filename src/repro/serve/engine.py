@@ -161,7 +161,9 @@ class BatchedServer:
 # ---------------------------------------------------------------------------
 
 def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
-                        devices=None) -> SketchService:
+                        devices=None, plan=None,
+                        shape: Optional[Tuple[int, int, int]] = None
+                        ) -> SketchService:
     """The streaming-sketch serving entry point: one mesh, many streams.
 
     grid:
@@ -170,10 +172,31 @@ def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
                         reference).
       * ``(p1,p2,p3)``— distributed mode: every stream's (Y, W) state is
                         sharded per the Alg.-1 layout contract and updates
-                        run ``rand_matmul`` on that grid.  Pick the grid
-                        with ``core.grid.select_matmul_grid`` for the
-                        dominant stream shape.
+                        run ``rand_matmul`` on that grid.
+      * ``"auto"``    — plan the grid with :mod:`repro.plan` for the
+                        dominant stream shape, which must be passed as
+                        ``shape=(n1, n2, r)``.
+    plan: a precomputed :class:`repro.plan.Plan` (e.g. from ``plan_stream``
+          or ``plan_sketch``); its grid places the service mesh.  Wins over
+          ``grid``.
     """
+    if plan is None and grid == "auto":
+        if shape is None:
+            raise ValueError('grid="auto" needs the dominant stream shape: '
+                             'shape=(n1, n2, r)')
+        import jax
+        from repro.plan import plan_sketch
+        ndev = len(devices if devices is not None else jax.devices())
+        plan = plan_sketch(*shape, P=ndev)
+    if plan is not None:
+        if not plan.executable:
+            raise ValueError(
+                f"plan {plan.variant!r} for dims={plan.dims}, "
+                f"P={plan.n_procs} is analytic-only (no executable grid "
+                f"divides the shape) — no service mesh can host it")
+        if plan.grid is None:   # single-device plan -> local mode
+            return SketchService()
+        grid = plan.grid
     if grid is None:
         return SketchService()
     from repro.core.sketch import make_grid_mesh

@@ -2,9 +2,13 @@
 (Y = A·Omega, W = Psi·A) with Omega/Psi regenerated, never communicated.
 
   state.py        — StreamConfig + the single-device StreamingSketch
+                    (row/col/additive ingest, checkpoint save/restore)
   distributed.py  — ShardedStreamingSketch on the (p1, p2, p3) grid
+                    (full-shape + row-slab ingest, checkpointing; accepts
+                    a repro.plan.Plan in place of a mesh)
   reconstruct.py  — one-pass fixed-rank A ~= Q·(Psi Q)†·W (Tropp et al.)
-  service.py      — SketchService: many concurrent streams, one mesh
+  service.py      — SketchService: many concurrent streams, one mesh,
+                    incl. fused multi-stream batched ingest (update_batch)
 """
 from .state import (  # noqa: F401
     OMEGA_SALT, PSI_SALT, StreamConfig, StreamingSketch,

@@ -18,6 +18,7 @@ communicated — both are regenerated per update from the stream seed.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -37,7 +38,7 @@ from repro.core.sketch import (
     rand_matmul,
 )
 
-from .state import StreamConfig, psi_cols
+from .state import StreamConfig, psi_cols, validate_row_block
 
 
 def corange_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
@@ -98,22 +99,136 @@ def corange_update(W, H, cfg: StreamConfig, mesh: Mesh,
     return fn(W, H)
 
 
+# ---------------------------------------------------------------------------
+# Compiled update programs — module-level lru caches so every accumulator
+# (services, autotune trials, restored checkpoints) with the same
+# (cfg, mesh, axes) shares one executable instead of re-tracing the
+# shard_map graph per instance.  cfg is a frozen dataclass and Mesh is
+# hashable, so the tuple is a valid cache key; cfg.seed is baked in
+# statically, matching the original per-instance behavior.
+# ---------------------------------------------------------------------------
+
+_PROG_CACHE = 64
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE)
+def _sharded_update_prog(cfg: StreamConfig, mesh: Mesh,
+                         axes: Tuple[str, str, str]):
+    """Full-shape additive update: Y += Alg.-1 sketch of H (+ W psum)."""
+
+    def upd(Y, W, H):
+        Y = Y + rand_matmul(H, cfg.seed, cfg.r, mesh, axes=axes,
+                            kind=cfg.kind, salt=cfg.omega_salt)
+        if W is not None:
+            W = corange_update(W, H, cfg, mesh, axes)
+        return Y, W
+
+    return jax.jit(upd)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE)
+def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
+                           axes: Tuple[str, str, str], k: int):
+    """Compiled ingest of a (k, n2) row slab at traced offset row0.
+
+    Layout: the slab is column-sharded over (p2, p3) and replicated over
+    p1 — in_specs P(None, (p2, p3)) — so the communication is one
+    All-Gather of the slab over p3 plus one All-Reduce of the (k, r/p3) dY
+    partial over p2 (both zero on regime-1 grids), and the co-range update
+    is entirely local (W is replicated over p1 and every p1 rank computes
+    the identical Psi-slab product).  Omega/Psi entries are regenerated
+    from global coordinates, never communicated.
+
+    Each Y shard adds the rows of dY that land in its resident block by
+    slicing a zero-padded dY at a traced offset: out-of-overlap shards
+    slice pure zeros, so row-disjoint slabs reproduce the full-shape
+    additive path bitwise (0 + x == x).
+    """
+    ax1, ax2, ax3 = axes
+    p1, p2, p3 = (mesh.shape[a] for a in axes)
+    y_rows = cfg.n1 // (p1 * p2)        # Y shard height, P((p1,p2), p3)
+    r_cols = cfg.r // p3
+    om_rows = cfg.n2 // p2
+
+    def body(y_blk, w_blk, h_blk, row0):
+        i = jax.lax.axis_index(ax1)
+        j = jax.lax.axis_index(ax2)
+        if p3 == 1:
+            h_cols = h_blk                       # (k, n2/p2)
+        else:
+            h_cols = jax.lax.all_gather(h_blk, ax3, axis=1, tiled=True)
+        kk = jax.lax.axis_index(ax3)
+        om = omega_tile(cfg.seed, j * om_rows, kk * r_cols,
+                        om_rows, r_cols, cfg.kind, h_cols.dtype,
+                        salt=cfg.omega_salt)
+        part = h_cols @ om                       # (k, r/p3) partial
+        dY = jax.lax.psum(part, ax2) if p2 > 1 else part
+        # fold the overlap [g0, g0 + y_rows) n [row0, row0 + k) into the
+        # resident shard: slice a zero-padded dY so that shards outside
+        # the slab add exact zeros.
+        g0 = (i * p2 + j) * y_rows
+        pad = jnp.zeros((y_rows, r_cols), dY.dtype)
+        dpad = jnp.concatenate([pad, dY, pad], axis=0)
+        # clip explicitly: lax.dynamic_slice WRAPS negative starts
+        # (Python-style) instead of clamping, which would alias the zero
+        # pad onto real dY rows for shards left of the slab.
+        start = jnp.clip(g0 - row0 + y_rows, 0, k + y_rows)
+        y_new = y_blk + jax.lax.dynamic_slice(
+            dpad, (start, jnp.int32(0)), (y_rows, r_cols))
+        if w_blk is None:
+            return y_new
+        psi_c = psi_cols(cfg, row0, k)           # (k, l), traced row0
+        w_new = w_blk + psi_c.T.astype(h_blk.dtype) @ h_blk
+        return y_new, w_new
+
+    in_h = P(None, (ax2, ax3))
+    if cfg.corange:
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P((ax1, ax2), ax3), in_h, in_h, P()),
+                       out_specs=(P((ax1, ax2), ax3), in_h))
+
+        def upd(Y, W, H, row0):
+            return fn(Y, W, H, row0)
+    else:
+        fn = shard_map(lambda y, h, row0: body(y, None, h, row0),
+                       mesh=mesh,
+                       in_specs=(P((ax1, ax2), ax3), in_h, P()),
+                       out_specs=P((ax1, ax2), ax3))
+
+        def upd(Y, W, H, row0):
+            return fn(Y, H, row0), W
+
+    return jax.jit(upd)
+
+
 class ShardedStreamingSketch:
     """Streaming (Y, W) accumulator over a (p1, p2, p3) processor grid.
 
-    Updates are full-shape additive deltas H (zero rows/columns where
-    nothing changed); each is sketched with the communication-optimal
-    ``rand_matmul`` and added into the resident sketch state.  Row-disjoint
-    updates reproduce the one-shot distributed sketch bitwise (untouched
-    rows accumulate exact zeros).
+    Updates arrive either as full-shape additive deltas H (zero
+    rows/columns where nothing changed) via :meth:`update`, or as row
+    slabs via :meth:`update_rows` — the classic streaming model, without
+    materializing the n1 x n2 zero frame.  Both are sketched with the
+    communication-optimal collectives and added into the resident sketch
+    state; row-disjoint ingest reproduces the one-shot distributed sketch
+    bitwise (untouched rows accumulate exact zeros).
+
+    ``mesh`` may also be a :class:`repro.plan.Plan` (from ``plan_stream`` /
+    ``plan_sketch``); its chosen grid places the state.
     """
 
-    def __init__(self, cfg: StreamConfig, mesh: Mesh,
+    def __init__(self, cfg: StreamConfig, mesh,
                  axes: Tuple[str, str, str] = DEFAULT_AXES):
         cfg.validate()
+        if not isinstance(mesh, Mesh):      # a repro.plan.Plan
+            from repro.core.sketch import make_grid_mesh
+            if getattr(mesh, "grid", None) is None:
+                raise ValueError(f"plan {getattr(mesh, 'variant', mesh)!r} "
+                                 f"carries no processor grid")
+            mesh = make_grid_mesh(*mesh.grid)
         ax1, ax2, ax3 = axes
         p1, p2, p3 = (mesh.shape[a] for a in axes)
-        if cfg.n1 % p1 or cfg.n2 % (p2 * p3) or cfg.n2 % p2 or cfg.r % p3:
+        if (cfg.n1 % (p1 * p2) or cfg.n2 % (p2 * p3) or cfg.n2 % p2
+                or cfg.r % p3):        # n1 % (p1*p2): Y is P((p1, p2), p3)
             raise ValueError(f"stream shape ({cfg.n1},{cfg.n2},r={cfg.r}) "
                              f"not divisible by grid ({p1},{p2},{p3})")
         self.cfg = cfg
@@ -126,19 +241,9 @@ class ShardedStreamingSketch:
                       corange_sharding(mesh, axes))
                   if cfg.corange else None)
         self.num_updates = 0
-        self._upd = jax.jit(self._make_update())
-
-    def _make_update(self):
-        cfg, mesh, axes = self.cfg, self.mesh, self.axes
-
-        def upd(Y, W, H):
-            Y = Y + rand_matmul(H, cfg.seed, cfg.r, mesh, axes=axes,
-                                kind=cfg.kind, salt=cfg.omega_salt)
-            if W is not None:
-                W = corange_update(W, H, cfg, mesh, axes)
-            return Y, W
-
-        return upd
+        # module-level lru cache: every accumulator (and every autotune
+        # trial) with the same (cfg, mesh, axes) shares one executable
+        self._upd = _sharded_update_prog(cfg, mesh, tuple(axes))
 
     def update(self, H):
         """A <- A + H; H must be the full (n1, n2) shape (sharded or host)."""
@@ -150,6 +255,68 @@ class ShardedStreamingSketch:
         self.Y, self.W = self._upd(self.Y, self.W, H)
         self.num_updates += 1
         return self
+
+    # -- row-slab ingest ---------------------------------------------------
+
+    def update_rows(self, row0: int, H):
+        """Rows [row0, row0 + k) arrive additively as a (k, n2) slab.
+
+        Bitwise-equivalent to :meth:`update` with the slab embedded in a
+        zero (n1, n2) frame, without materializing that frame.  (For W the
+        equivalence is bitwise when the slab lies within one p1 row block —
+        otherwise the full-shape path splits the Psi product across the p1
+        psum and agreement is to FP summation order.)
+        """
+        validate_row_block(self.cfg, row0, H.shape)
+        k = H.shape[0]
+        H = jax.device_put(
+            jnp.asarray(H, self.cfg.dtype),
+            NamedSharding(self.mesh, P(None, (self.axes[1], self.axes[2]))))
+        fn = _sharded_rowblock_prog(self.cfg, self.mesh, tuple(self.axes), k)
+        self.Y, self.W = fn(self.Y, self.W, H, jnp.int32(row0))
+        self.num_updates += 1
+        return self
+
+    # -- checkpointing -----------------------------------------------------
+
+    def save(self, directory: str, step: Optional[int] = None,
+             keep: int = 3) -> str:
+        """Checkpoint (Y, W, config, num_updates) via ``checkpoint.ckpt``.
+
+        Arrays are stored logically (host-gathered), so a restore may use a
+        different mesh or device count.  Returns the checkpoint path.
+        """
+        from repro.checkpoint import ckpt
+        step = self.num_updates if step is None else step
+        tree = {"Y": self.Y}
+        if self.W is not None:
+            tree["W"] = self.W
+        extra = {"config": self.cfg.to_json_dict(),
+                 "num_updates": self.num_updates,
+                 "layout": "sharded"}
+        return ckpt.save(directory, step, tree, extra=extra, keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, mesh, step: Optional[int] = None,
+                axes: Tuple[str, str, str] = DEFAULT_AXES
+                ) -> "ShardedStreamingSketch":
+        """Rebuild a stream from a checkpoint onto ``mesh`` (any grid whose
+        divisibility admits the stream shape — elastic restore)."""
+        from repro.checkpoint import ckpt
+        extra, step = ckpt.load_extra(directory, step)
+        cfg = StreamConfig.from_json_dict(extra["config"])
+        st = cls(cfg, mesh, axes=axes)
+        tree = {"Y": st.Y}
+        shardings = {"Y": output_sharding(st.mesh, axes)}
+        if st.W is not None:
+            tree["W"] = st.W
+            shardings["W"] = corange_sharding(st.mesh, axes)
+        tree, _, extra = ckpt.restore(directory, tree, step,
+                                      shardings=shardings)
+        st.Y = tree["Y"]
+        st.W = tree.get("W")
+        st.num_updates = int(extra["num_updates"])
+        return st
 
     # -- finalization ------------------------------------------------------
 

@@ -41,8 +41,8 @@ from repro.core.sketch import (
 )
 
 from .distributed import corange_sharding, corange_update
-from .state import (StreamConfig, _local_sig, local_rowblock_prog,
-                    nystrom_local, validate_row_block)
+from .state import (StreamConfig, _local_sig, local_rowblock_batch_prog,
+                    local_rowblock_prog, nystrom_local, validate_row_block)
 
 
 @dataclasses.dataclass
@@ -85,7 +85,8 @@ class SketchService:
         if self.mesh is not None:
             ax1, ax2, ax3 = self.axes
             p1, p2, p3 = (self.mesh.shape[a] for a in self.axes)
-            if cfg.n1 % p1 or cfg.n2 % (p2 * p3) or cfg.n2 % p2 or cfg.r % p3:
+            if (cfg.n1 % (p1 * p2) or cfg.n2 % (p2 * p3) or cfg.n2 % p2
+                    or cfg.r % p3):    # n1 % (p1*p2): Y is P((p1, p2), p3)
                 raise ValueError(f"stream {cfg} not divisible by grid "
                                  f"({p1},{p2},{p3})")
             Y = jax.device_put(jnp.zeros((cfg.n1, cfg.r), cfg.dtype),
@@ -168,6 +169,65 @@ class SketchService:
             fn = self._get_update_fn(cfg, H.shape[0])
             st.Y, st.W = fn(st.Y, st.W, H, st.keys, jnp.int32(row0))
         st.num_updates += 1
+        return self
+
+    def update_batch(self, sids, H, row0=0):
+        """Fused multi-stream ingest: one compiled call applies the same-
+        shape row-block update to every stream in ``sids``.
+
+        H    : (N, k, n2) — lane i is the update for stream ``sids[i]``.
+        row0 : int applied to all lanes, or a length-N sequence of
+               per-lane offsets.
+
+        The update is the single-stream program vmapped over a leading
+        stream axis with per-lane Philox key pairs, so lane i's result is
+        bitwise the result of updating stream i alone (pinned by
+        tests/test_stream.py); N streams cost one dispatch instead of N.
+        Local mode only — distributed streams batch at the mesh level
+        instead (open one service per grid).
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "update_batch is local-mode only; distributed streams "
+                "already amortize dispatch through the shared mesh program")
+        sids = list(sids)
+        if len(set(sids)) != len(sids):
+            raise ValueError("update_batch sids must be distinct (duplicate "
+                             "lanes would overwrite each other's update)")
+        sts = [self._streams[s] for s in sids]
+        if not sts:
+            raise ValueError("update_batch needs at least one stream")
+        cfg0 = sts[0].cfg
+        sig = _local_sig(cfg0)
+        for st in sts[1:]:
+            if _local_sig(st.cfg) != sig:
+                raise ValueError(
+                    f"streams must share one shape signature; "
+                    f"{_local_sig(st.cfg)} != {sig}")
+        H = jnp.asarray(H, cfg0.dtype)
+        n = len(sts)
+        if H.ndim != 3 or H.shape[0] != n:
+            raise ValueError(f"H must be (N={n}, k, n2); got {H.shape}")
+        row0s = ([int(row0)] * n if jnp.ndim(row0) == 0 else
+                 [int(x) for x in row0])
+        if len(row0s) != n:
+            raise ValueError(f"row0 needs {n} entries, got {len(row0s)}")
+        for r0 in row0s:
+            validate_row_block(cfg0, r0, H.shape[1:])
+        key = (sig, H.shape[1], n, "batch")
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = local_rowblock_batch_prog(
+                sig, H.shape[1], n)
+        Yb = jnp.stack([st.Y for st in sts])
+        Wb = (jnp.stack([st.W for st in sts]) if cfg0.corange else None)
+        keys = jnp.stack([st.keys for st in sts])
+        Yb, Wb = fn(Yb, Wb, H, keys, jnp.asarray(row0s, jnp.int32))
+        for i, st in enumerate(sts):
+            st.Y = Yb[i]
+            if cfg0.corange:
+                st.W = Wb[i]
+            st.num_updates += 1
         return self
 
     # -- queries -----------------------------------------------------------

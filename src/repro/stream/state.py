@@ -91,6 +91,19 @@ class StreamConfig:
         if self.omega_salt == self.psi_salt and self.corange:
             raise ValueError("omega_salt and psi_salt must differ")
 
+    # -- JSON round trip (checkpoint manifests) -----------------------------
+
+    def to_json_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dtype"] = jnp.dtype(self.dtype).name
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "StreamConfig":
+        d = dict(d)
+        d["dtype"] = jnp.dtype(d["dtype"])
+        return cls(**d)
+
 
 def omega_matrix(cfg: StreamConfig, seed=None):
     """The full (n2, r) Omega of a stream (reference/inspection path)."""
@@ -138,16 +151,8 @@ def _local_sig(cfg: StreamConfig) -> Tuple:
             cfg.omega_salt, cfg.psi_salt)
 
 
-@functools.lru_cache(maxsize=256)
-def local_rowblock_prog(sig: Tuple, k: int):
-    """Compiled local row-block update, shared by every StreamingSketch and
-    SketchService stream with the same shape signature: the seed enters as
-    a traced uint32 key pair and the row offset as a traced int32, so one
-    executable serves all seeds and offsets at chunk height ``k``.
-
-    (Eager per-update dispatch of the Philox graph costs orders of
-    magnitude more than this cached program — see core/sketch.py.)
-    """
+def _local_rowblock_update(sig: Tuple, k: int):
+    """The pure local row-block update (shared single-stream/batched)."""
     n1, n2, r, l, kind, dtype_name, corange, omega_salt, psi_salt = sig
     dtype = jnp.dtype(dtype_name)
 
@@ -162,7 +167,35 @@ def local_rowblock_prog(sig: Tuple, k: int):
             W = W + psi_c.T @ H
         return Y, W
 
-    return jax.jit(upd)
+    return upd
+
+
+@functools.lru_cache(maxsize=256)
+def local_rowblock_prog(sig: Tuple, k: int):
+    """Compiled local row-block update, shared by every StreamingSketch and
+    SketchService stream with the same shape signature: the seed enters as
+    a traced uint32 key pair and the row offset as a traced int32, so one
+    executable serves all seeds and offsets at chunk height ``k``.
+
+    (Eager per-update dispatch of the Philox graph costs orders of
+    magnitude more than this cached program — see core/sketch.py.)
+    """
+    return jax.jit(_local_rowblock_update(sig, k))
+
+
+@functools.lru_cache(maxsize=128)
+def local_rowblock_batch_prog(sig: Tuple, k: int, n_streams: int):
+    """Batched (vmapped) row-block update: one compiled call ingests the
+    same-shape chunk into ``n_streams`` independent streams at once, each
+    lane running under its own traced Philox key pair and row offset —
+    the generated Omega/Psi lanes are bitwise those of ``n_streams``
+    separate single-stream updates (counter-based generation depends only
+    on (keys, global coordinates), never on the batching context).
+    """
+    corange = sig[6]
+    upd = _local_rowblock_update(sig, k)
+    batched = jax.vmap(upd, in_axes=(0, 0 if corange else None, 0, 0, 0))
+    return jax.jit(batched)
 
 
 class StreamingSketch:
@@ -281,3 +314,46 @@ class StreamingSketch:
             raise ValueError("reconstruction needs corange=True")
         return one_pass_reconstruct(self.Y, self.W, self.cfg, rank=rank,
                                     rcond=rcond)
+
+    # -- checkpointing ------------------------------------------------------
+
+    def save(self, directory: str, step: Optional[int] = None,
+             keep: int = 3) -> str:
+        """Checkpoint the sketch state via ``checkpoint.ckpt`` (atomic,
+        mesh-agnostic): (Y, W) as arrays, (config, seed, num_updates) in
+        the manifest's ``extra``.  A long-running stream that restarts from
+        this checkpoint finalizes bitwise-identically to one that never
+        stopped — the sketch state plus the seed IS the whole stream.
+        """
+        from repro.checkpoint import ckpt
+        step = self.num_updates if step is None else step
+        tree = {"Y": self.Y}
+        if self.W is not None:
+            tree["W"] = self.W
+        extra = {"config": self.cfg.to_json_dict(),
+                 "num_updates": self.num_updates,
+                 "backend": self.backend,
+                 "layout": "local"}
+        return ckpt.save(directory, step, tree, extra=extra, keep=keep)
+
+    @classmethod
+    def restore(cls, directory: str, step: Optional[int] = None,
+                backend: Optional[str] = None) -> "StreamingSketch":
+        """Rebuild a stream (config + state) from a checkpoint.
+
+        The saved backend is restored by default (``backend="auto"`` would
+        otherwise re-resolve per machine and could continue a stream on a
+        non-bitwise kernel path); pass ``backend=`` explicitly to migrate.
+        """
+        from repro.checkpoint import ckpt
+        extra, step = ckpt.load_extra(directory, step)
+        cfg = StreamConfig.from_json_dict(extra["config"])
+        st = cls(cfg, backend=backend or extra.get("backend", "auto"))
+        tree = {"Y": st.Y}
+        if st.W is not None:
+            tree["W"] = st.W
+        tree, _, extra = ckpt.restore(directory, tree, step)
+        st.Y = tree["Y"]
+        st.W = tree.get("W")
+        st.num_updates = int(extra["num_updates"])
+        return st

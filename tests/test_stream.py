@@ -1,12 +1,15 @@
 """Streaming one-pass sketch subsystem (repro.stream).
 
-Three contract pillars:
+Contract pillars:
   (a) streamed row-block updates reproduce the one-shot ``sketch_reference``
-      **bitwise**, under any chunking and arrival order;
+      **bitwise**, under any chunking and arrival order — including the
+      distributed row-slab path vs. the full-shape additive path;
   (b) one-pass reconstruction matches the one-shot low-rank baseline;
   (c) updates add zero Omega/Psi communication — the compiled update step
       moves exactly the Alg.-1 collective bytes (zero on regime-1 grids),
-      plus only the data-derived co-range psum when enabled.
+      plus only the data-derived co-range psum when enabled;
+  (d) checkpoints round-trip bitwise (sketch state + seed IS the stream);
+  (e) batched multi-stream ingest is bitwise N independent streams.
 
 Distributed assertions run in a subprocess with 8 fake XLA devices (same
 isolation rule as test_sketch_distributed.py).
@@ -196,6 +199,114 @@ def test_service_reconstruct_and_validation():
 
 
 # ---------------------------------------------------------------------------
+# (d) checkpointing: save/restore round-trips bitwise
+# ---------------------------------------------------------------------------
+
+def test_streaming_checkpoint_round_trip_bitwise(tmp_path):
+    n1, n2, r, seed = 48, 64, 8, 5
+    A = jax.random.normal(jax.random.key(0), (n1, n2))
+    st = StreamingSketch(StreamConfig(n1=n1, n2=n2, r=r, seed=seed))
+    st.update_rows(0, A[:24])
+    st.update_rows(24, A[24:])
+    path = st.save(str(tmp_path))
+    assert "step_" in path
+
+    st2 = StreamingSketch.restore(str(tmp_path))
+    assert st2.cfg == st.cfg and st2.num_updates == 2
+    # the backend travels with the checkpoint ("auto" re-resolution could
+    # silently continue a stream on a non-bitwise kernel path)
+    assert st2.backend == st.backend
+    np.testing.assert_array_equal(np.asarray(st.Y), np.asarray(st2.Y))
+    np.testing.assert_array_equal(np.asarray(st.W), np.asarray(st2.W))
+
+    # bitwise-identical finalize: restored stream reconstructs the same
+    lr1, lr2 = st.reconstruct(rank=4), st2.reconstruct(rank=4)
+    np.testing.assert_array_equal(np.asarray(lr1.Q), np.asarray(lr2.Q))
+    np.testing.assert_array_equal(np.asarray(lr1.X), np.asarray(lr2.X))
+
+    # ...and further updates continue bitwise-identically to an unbroken run
+    extra = jax.random.normal(jax.random.key(9), (16, n2))
+    st.update_rows(8, extra)
+    st2.update_rows(8, extra)
+    np.testing.assert_array_equal(np.asarray(st.Y), np.asarray(st2.Y))
+
+
+def test_streaming_checkpoint_no_corange(tmp_path):
+    cfg = StreamConfig(n1=32, n2=48, r=8, seed=3, corange=False)
+    A = jax.random.normal(jax.random.key(1), (32, 48))
+    st = StreamingSketch(cfg)
+    st.update_rows(0, A)
+    st.save(str(tmp_path), step=7)
+    st2 = StreamingSketch.restore(str(tmp_path))
+    assert st2.W is None and st2.num_updates == 1
+    np.testing.assert_array_equal(np.asarray(st.Y), np.asarray(st2.Y))
+
+
+# ---------------------------------------------------------------------------
+# (e) batched multi-stream fused ingest (one compiled call, N streams)
+# ---------------------------------------------------------------------------
+
+def test_service_update_batch_bitwise_vs_independent_streams():
+    n1, n2, r, N = 48, 64, 8, 4
+    seeds = [11, 99, 7, 2 ** 40 + 3]          # incl. a >32-bit key pair
+    A = jax.random.normal(jax.random.key(0), (n1, n2))
+    chunks = [(0, 16), (16, 32), (32, 48)]   # uniform height: one program
+
+    batched = SketchService()
+    sids = [batched.open(StreamConfig(n1=n1, n2=n2, r=r, seed=s))
+            for s in seeds]
+    singles = []
+    for s in seeds:
+        st = StreamingSketch(StreamConfig(n1=n1, n2=n2, r=r, seed=s),
+                             backend="xla")
+        singles.append(st)
+    for (i0, i1) in chunks:
+        batched.update_batch(sids, jnp.stack([A[i0:i1]] * N), row0=i0)
+        for st in singles:
+            st.update_rows(i0, A[i0:i1])
+
+    for sid, st, s in zip(sids, singles, seeds):
+        np.testing.assert_array_equal(np.asarray(batched.sketch(sid)),
+                                      np.asarray(st.sketch))
+        np.testing.assert_array_equal(np.asarray(batched.corange(sid)),
+                                      np.asarray(st.corange_sketch))
+        np.testing.assert_array_equal(np.asarray(batched.sketch(sid)),
+                                      np.asarray(sketch_reference(A, s, r)))
+
+    # N streams, any number of batched calls: ONE compiled batch program
+    assert batched.num_compiled == 1, batched.stats()
+
+
+def test_service_update_batch_per_lane_offsets_and_validation():
+    n1, n2, r = 32, 48, 8
+    A = jax.random.normal(jax.random.key(5), (n1, n2))
+    svc = SketchService()
+    sids = [svc.open(StreamConfig(n1=n1, n2=n2, r=r, seed=s,
+                                  corange=False)) for s in (1, 2)]
+    # per-lane row offsets: lane 0 ingests the top half, lane 1 the bottom
+    svc.update_batch(sids, jnp.stack([A[:16], A[16:]]), row0=[0, 16])
+    ref0 = np.asarray(sketch_reference(A, 1, r))
+    got0 = np.asarray(svc.sketch(sids[0]))
+    np.testing.assert_array_equal(got0[:16], ref0[:16])
+    assert np.all(got0[16:] == 0)
+
+    with pytest.raises(ValueError):
+        svc.update_batch(sids, jnp.stack([A[:16], A[16:]]), row0=[0])
+    with pytest.raises(ValueError):   # mixed shape signatures
+        other = svc.open(StreamConfig(n1=n1, n2=n2, r=r + 8, seed=3,
+                                      corange=False))
+        svc.update_batch([sids[0], other],
+                         jnp.stack([A[:16], A[:16]]), row0=0)
+    with pytest.raises(ValueError):   # duplicate lanes would clobber
+        svc.update_batch([sids[0], sids[0]],
+                         jnp.stack([A[:16], A[16:]]), row0=[0, 16])
+    with pytest.raises(NotImplementedError):
+        from repro.core.sketch import make_grid_mesh
+        SketchService(mesh=make_grid_mesh(1, 1, 1)).update_batch(
+            [0], A[None, :16], row0=0)
+
+
+# ---------------------------------------------------------------------------
 # distributed: bitwise vs one-shot Alg. 1, and (c) zero Omega communication
 # ---------------------------------------------------------------------------
 
@@ -222,9 +333,11 @@ for shape in [(8,1,1), (2,2,2)]:
     mesh = make_grid_mesh(*shape)
     cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed)
     st = ShardedStreamingSketch(cfg, mesh)
+    rows = ShardedStreamingSketch(cfg, mesh)
     for (i0, i1) in [(0, 4), (4, 12), (12, 16)]:
         H = jnp.zeros((n1, n2)).at[i0:i1].set(A[i0:i1])
         st.update(H)
+        rows.update_rows(i0, A[i0:i1])          # slab only, no zero frame
     oneshot = rand_matmul(jax.device_put(A, input_sharding(mesh)),
                           seed, r, mesh)
     # row-disjoint streamed updates == one-shot Alg. 1, bitwise
@@ -232,7 +345,45 @@ for shape in [(8,1,1), (2,2,2)]:
     assert np.allclose(np.asarray(st.sketch), ref, atol=1e-4), shape
     Wref = np.asarray(psi_matrix(cfg) @ A)
     assert np.allclose(np.asarray(st.corange_sketch), Wref, atol=1e-4), shape
+    # row-slab ingest == the full-shape additive path, bitwise on Y
+    assert np.array_equal(np.asarray(rows.sketch), np.asarray(st.sketch)), shape
+    assert np.allclose(np.asarray(rows.corange_sketch), Wref,
+                       atol=1e-4), shape
 print("OK bitwise")
+
+# out-of-order, ragged slabs also reproduce the one-shot result bitwise,
+# and slabs aligned to p1 row blocks keep W bitwise too
+mesh = make_grid_mesh(8, 1, 1)
+cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed)
+ragged = ShardedStreamingSketch(cfg, mesh)
+for (i0, i1) in [(12, 16), (0, 7), (7, 12)]:
+    ragged.update_rows(i0, A[i0:i1])
+oneshot = rand_matmul(jax.device_put(A, input_sharding(mesh)), seed, r, mesh)
+assert np.array_equal(np.asarray(ragged.sketch), np.asarray(oneshot))
+aligned_full = ShardedStreamingSketch(cfg, mesh)
+aligned_rows = ShardedStreamingSketch(cfg, mesh)
+for i0 in range(0, n1, 2):          # p1-block-aligned slabs (n1/p1 = 2)
+    H = jnp.zeros((n1, n2)).at[i0:i0+2].set(A[i0:i0+2])
+    aligned_full.update(H)
+    aligned_rows.update_rows(i0, A[i0:i0+2])
+assert np.array_equal(np.asarray(aligned_rows.sketch),
+                      np.asarray(aligned_full.sketch))
+assert np.array_equal(np.asarray(aligned_rows.corange_sketch),
+                      np.asarray(aligned_full.corange_sketch))
+# same (cfg, mesh) -> accumulators share ONE compiled update executable
+# (module-level program cache; keeps autotune trials compile-free too)
+assert aligned_rows._upd is aligned_full._upd
+print("OK update_rows")
+
+# sharded checkpoint: save on one grid, restore on another, bitwise state
+import tempfile
+ckdir = tempfile.mkdtemp()
+ragged.save(ckdir)
+restored = ShardedStreamingSketch.restore(ckdir, make_grid_mesh(2, 2, 2))
+assert np.array_equal(np.asarray(restored.Y), np.asarray(ragged.Y))
+assert np.array_equal(np.asarray(restored.W), np.asarray(ragged.W))
+assert restored.num_updates == ragged.num_updates
+print("OK sharded checkpoint")
 
 # omega_salt is honored on the distributed path (independent salted streams)
 from repro.stream import StreamConfig as SC
