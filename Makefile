@@ -1,19 +1,31 @@
 # Tier-1 verification and benchmarks — the commands CI runs, documented
 # here so they are reproducible locally.
 #
-#   make test    — the tier-1 suite (single CPU device in the main process;
-#                  distributed tests spawn subprocesses with 8 fake devices
-#                  via tests/dist_helper.py)
-#   make bench   — the benchmark driver (CSV to stdout)
+#   make test        — the tier-1 suite (single CPU device in the main
+#                      process; distributed tests spawn subprocesses with 8
+#                      fake devices via tests/dist_helper.py)
+#   make bench       — the benchmark driver (CSV to stdout)
+#   make bench-smoke — tiny-shapes pass of every suite + JSON artifact
+#                      (what the CI bench-smoke job runs)
+#   make lint        — ruff (config in pyproject.toml) + the CI shard
+#                      coverage assertion (the CI lint job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench
+.PHONY: test bench bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
 
 bench:
 	$(PY) -m benchmarks.run
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke --out bench-smoke.json
+
+lint:
+	ruff check .
+	ruff format --check .
+	$(PY) scripts/check_ci_shards.py

@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (alg1_bandwidth_words, gemm_lower_bound,
-                        matmul_lower_bound, nystrom_lower_bound,
-                        select_matmul_grid)
+from repro.core import (gemm_lower_bound, matmul_lower_bound,
+                        nystrom_lower_bound, select_matmul_grid)
 from .common import emit
 
 

@@ -6,27 +6,29 @@ all-gather variant of Alg. 1), plus the HLO collective-byte counts.
 """
 from __future__ import annotations
 
-from .common import emit, run_with_devices, time_us
+from .common import run_with_devices
 
 _SNIPPET = r"""
-import time, jax, jax.numpy as jnp
+import os, time, jax, jax.numpy as jnp
 from repro.core import rand_matmul, rand_matmul_communicating, make_grid_mesh
 from repro.core.sketch import input_sharding, omega_tile
 from repro.roofline.hlo import collective_bytes_of
 
-n1, n2 = 512, 1024
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+n1, n2 = (64, 128) if smoke else (512, 1024)
+iters = 2 if smoke else 5
 mesh = make_grid_mesh(2, 2, 2)
 A = jax.device_put(jax.random.normal(jax.random.key(0), (n1, n2)),
                    input_sharding(mesh))
-for r in (64, 256):
+for r in ((16, 32) if smoke else (64, 256)):
     gen = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
     com = jax.jit(lambda a: rand_matmul_communicating(a, 7, r, mesh))
     for name, fn in (("generate", gen), ("communicate", com)):
         jax.block_until_ready(fn(A))
         t0 = time.perf_counter()
-        for _ in range(5):
+        for _ in range(iters):
             jax.block_until_ready(fn(A))
-        us = (time.perf_counter() - t0) / 5 * 1e6
+        us = (time.perf_counter() - t0) / iters * 1e6
         cb = collective_bytes_of(fn.lower(A).compile().as_text()).total
         print(f"RESULT fig3_{name}_r{r},{us:.1f},collective_bytes={cb:.0f}")
 """

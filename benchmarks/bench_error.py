@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nystrom_reference, relative_error
-from .common import emit
+from .common import emit, pick
 
 
 def kernel_matrices(n=1024, d=96):
@@ -30,9 +30,9 @@ def kernel_matrices(n=1024, d=96):
 
 
 def main():
-    mats = kernel_matrices()
+    mats = kernel_matrices(n=pick(1024, 128), d=pick(96, 24))
     for kname, A in mats.items():
-        for r in (32, 128, 256):
+        for r in pick((32, 128, 256), (8, 16, 32)):
             t0 = time.perf_counter()
             B, C = nystrom_reference(A, 11, r)
             err = float(relative_error(A, B, C))

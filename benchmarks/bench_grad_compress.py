@@ -6,7 +6,7 @@ from __future__ import annotations
 from .common import run_with_devices
 
 _SNIPPET = r"""
-import time, jax, jax.numpy as jnp, numpy as np
+import os, time, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.compat import shard_map
 from repro.parallel.grad_compress import (compress_and_allreduce,
@@ -14,13 +14,16 @@ from repro.parallel.grad_compress import (compress_and_allreduce,
     comm_words_compressed)
 from repro.roofline.hlo import collective_bytes_of
 
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+d1, d2 = (256, 512) if smoke else (2048, 8192)
+rank, min_dim = (8, 64) if smoke else (32, 256)
 mesh = Mesh(np.asarray(jax.devices()), ("data",))
-shapes = {"wq": jnp.zeros((2048, 2048)), "w_up": jnp.zeros((2048, 8192))}
-fb = init_error_fb(shapes, rank=32, min_dim=256, world=8)
+shapes = {"wq": jnp.zeros((d1, d1)), "w_up": jnp.zeros((d1, d2))}
+fb = init_error_fb(shapes, rank=rank, min_dim=min_dim, world=8)
 
 def comp_step(g, fb):
     out, fb_l = compress_and_allreduce(g, local_fb(fb), step=jnp.int32(1),
-                                       rank=32, min_dim=256,
+                                       rank=rank, min_dim=min_dim,
                                        axis_name="data")
     return out, stack_fb(fb_l)
 
@@ -42,7 +45,8 @@ for name, fn, args in (("compressed", cfn, (g, fb)), ("exact", efn, (g,))):
     us = (time.perf_counter() - t0) / 3 * 1e6
     cb = collective_bytes_of(fn.lower(*args).compile().as_text()).total
     print(f"RESULT grad_allreduce_{name},{us:.1f},coll_bytes={cb:.0f}")
-we, wc = comm_words_exact(shapes), comm_words_compressed(shapes, 32, 256)
+we, wc = comm_words_exact(shapes), comm_words_compressed(shapes, rank,
+                                                         min_dim)
 print(f"RESULT grad_allreduce_model,0.0,exact_words={we};"
       f"compressed_words={wc};ratio={we/wc:.1f}x")
 """

@@ -4,24 +4,23 @@ the kernel body in Python, so wall time is NOT a TPU estimate; the derived
 column carries the HBM-traffic model that the fusion eliminates.)"""
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import sketch_matmul
 from repro.kernels.ref import sketch_matmul_ref
-from .common import emit, time_us
+from .common import emit, pick, time_us
 
 
 def main():
-    n1, n2, r = 512, 1024, 128
+    n1, n2, r = pick((512, 1024, 128), (64, 128, 32))
+    bm, bn, bk = pick((128, 64, 256), (32, 16, 64))
     A = jax.random.normal(jax.random.key(0), (n1, n2), jnp.float32)
 
     ref = jax.jit(lambda a: sketch_matmul_ref(a, 9, r))
-    ker = jax.jit(lambda a: sketch_matmul(a, seed=9, r=r, bm=128, bn=64,
-                                          bk=256, interpret=True))
+    ker = jax.jit(lambda a: sketch_matmul(a, seed=9, r=r, bm=bm, bn=bn,
+                                          bk=bk, interpret=True))
     us_ref = time_us(ref, A)
     us_ker = time_us(ker, A, warmup=1, iters=2)
     err = float(jnp.abs(ker(A) - ref(A)).max())

@@ -5,14 +5,19 @@ from __future__ import annotations
 from .common import run_with_devices
 
 _SNIPPET = r"""
-import time, jax, jax.numpy as jnp, numpy as np
+import os, time, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from repro.core import nystrom_no_redist, nystrom_redist
+from repro.core import nystrom_no_redist, nystrom_redist, nystrom_two_grid
+from repro.core.grid import select_two_grid_executable
+from repro.plan.model import redistribute_words
 from repro.roofline.hlo import collective_bytes_of
 
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+shapes = ((256, 16), (64, 16)) if smoke else ((1024, 32), (512, 128))
+iters = 2 if smoke else 5
 Pn = 8
 mesh = Mesh(np.asarray(jax.devices()), ("x",))
-for (n, r) in ((1024, 32), (512, 128)):   # n/r = 32 > P  and  n/r = 4 < P
+for (n, r) in shapes:                 # n/r > P  and  n/r < P (Fig. 7 sides)
     S = jax.random.normal(jax.random.key(2), (n, n))
     S = S @ S.T / n
     Ssh = jax.device_put(S, NamedSharding(mesh, P("x", None)))
@@ -21,12 +26,25 @@ for (n, r) in ((1024, 32), (512, 128)):   # n/r = 32 > P  and  n/r = 4 < P
         jfn = jax.jit(lambda a, f=fn: f(a, 5, r, mesh))
         jax.block_until_ready(jfn(Ssh))
         t0 = time.perf_counter()
-        for _ in range(5):
+        for _ in range(iters):
             jax.block_until_ready(jfn(Ssh))
-        us = (time.perf_counter() - t0) / 5 * 1e6
+        us = (time.perf_counter() - t0) / iters * 1e6
         cb = collective_bytes_of(jfn.lower(Ssh).compile().as_text()).total
         print(f"RESULT fig5-7_nystrom_{name}_n{n}_r{r},{us:.1f},"
               f"coll_bytes={cb:.0f};n_over_r={n//r};P={Pn}")
+    # §5.3 general two-grid: the bound-driven (p, q) pair (two meshes with
+    # an explicit cross-grid redistribution of B; eager timing — the two
+    # stage programs are jit-cached, the device_put between them is the
+    # §5.2 Redistribute being measured)
+    p, q, exact = select_two_grid_executable(n, r, Pn)
+    jax.block_until_ready(nystrom_two_grid(S, 5, r, p=p, q=q)[1])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(nystrom_two_grid(S, 5, r, p=p, q=q)[1])
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rw = redistribute_words(n, r, p, q)
+    print(f"RESULT fig5-7_nystrom_bound_driven_n{n}_r{r},{us:.1f},"
+          f"p={p};q={q};exact_grids={exact};redist_words={rw:.0f}")
 """
 
 

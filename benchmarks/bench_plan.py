@@ -14,18 +14,21 @@ from __future__ import annotations
 import os
 import tempfile
 
-from .common import emit, run_with_devices, time_us
+from .common import emit, pick, run_with_devices, time_us
 
 SHAPES = [(256, 512, 32), (512, 512, 64), (1024, 256, 16), (2048, 1024, 64)]
+SMOKE_SHAPES = [(64, 128, 16), (128, 128, 32), (256, 128, 16)]
 
 _GRID_SNIPPET = r"""
-import time, jax, jax.numpy as jnp
+import os, time, jax, jax.numpy as jnp
 from repro.plan import plan_sketch, PRESETS
 from repro.core import rand_matmul, make_grid_mesh
 from repro.core.sketch import input_sharding
 from repro.plan.model import alg1_cost
 
-n1, n2, r = 64, 1024, 32
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+n1, n2, r = (32, 256, 16) if smoke else (64, 1024, 32)
+iters = 2 if smoke else 5
 P = 8
 plan = plan_sketch(n1, n2, r, P=P, machine=PRESETS["cpu"])
 A = jax.random.normal(jax.random.key(0), (n1, n2))
@@ -40,9 +43,9 @@ for g in grids:
     fn = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
     jax.block_until_ready(fn(Ag))
     t0 = time.perf_counter()
-    for _ in range(5):
+    for _ in range(iters):
         jax.block_until_ready(fn(Ag))
-    us = (time.perf_counter() - t0) / 5 * 1e6
+    us = (time.perf_counter() - t0) / iters * 1e6
     words = alg1_cost(n1, n2, r, g).words
     tag = "chosen" if g == plan.grid else "rival"
     print(f"RESULT plan_grid_{g[0]}x{g[1]}x{g[2]},{us:.1f},"
@@ -55,8 +58,9 @@ def main():
     from repro.plan import AutotuneCache, autotune, plan_sketch
 
     # -- predicted vs measured, local dispatch, >= 3 shapes -----------------
+    shapes = pick(SHAPES, SMOKE_SHAPES)
     rows = []
-    for (n1, n2, r) in SHAPES:
+    for (n1, n2, r) in shapes:
         plan = plan_sketch(n1, n2, r, P=1)
         A = jax.random.normal(jax.random.key(0), (n1, n2))
         us = time_us(lambda: plan.execute(A, seed=1))
@@ -72,7 +76,7 @@ def main():
 
     # -- autotune: miss -> persist -> hit -----------------------------------
     path = os.path.join(tempfile.mkdtemp(prefix="repro_tune_"), "tune.json")
-    plan = plan_sketch(*SHAPES[0], P=1)
+    plan = plan_sketch(*shapes[0], P=1)
     c1 = AutotuneCache(path)
     tuned = autotune(plan, cache=c1)
     c2 = AutotuneCache(path)

@@ -6,16 +6,18 @@ Derived column: per-device collective bytes + the Theorem-2 bound.
 """
 from __future__ import annotations
 
-from .common import emit, run_with_devices
+from .common import run_with_devices
 
 _SNIPPET = r"""
-import time, jax, jax.numpy as jnp
+import os, time, jax, jax.numpy as jnp
 from repro.core import rand_matmul, make_grid_mesh, select_matmul_grid, \
     matmul_lower_bound
 from repro.core.sketch import input_sharding
 from repro.roofline.hlo import collective_bytes_of
 
-n1, n2, r = 1024, 2048, 64
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+n1, n2, r = (128, 256, 16) if smoke else (1024, 2048, 64)
+iters = 2 if smoke else 5
 for P in (1, 2, 4, 8):
     g = select_matmul_grid(n1, n2, r, P)
     mesh = make_grid_mesh(*g.shape, devices=jax.devices()[:P])
@@ -24,9 +26,9 @@ for P in (1, 2, 4, 8):
     fn = jax.jit(lambda a: rand_matmul(a, 7, r, mesh))
     jax.block_until_ready(fn(A))
     t0 = time.perf_counter()
-    for _ in range(5):
+    for _ in range(iters):
         jax.block_until_ready(fn(A))
-    us = (time.perf_counter() - t0) / 5 * 1e6
+    us = (time.perf_counter() - t0) / iters * 1e6
     cb = collective_bytes_of(fn.lower(A).compile().as_text()).total
     W = matmul_lower_bound(n1, n2, r, P)
     print(f"RESULT fig4_scaling_P{P},{us:.1f},"

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 
-from .common import emit, run_with_devices, time_us
+from .common import emit, pick, run_with_devices, time_us
 
 
 def _local():
@@ -33,12 +33,13 @@ def _local():
     from repro.stream import (StreamConfig, StreamingSketch, SketchService,
                               reconstruction_error)
 
-    n1, n2, r, seed = 2048, 1024, 64, 7
+    n1, n2, r = pick((2048, 1024, 64), (256, 128, 16))
+    seed = 7
     A = jax.random.normal(jax.random.key(0), (n1, n2))
 
     # row-block ingest throughput at several chunk heights (service path:
     # one compiled executable per height, traced offsets)
-    for k in (64, 256, 1024):
+    for k in pick((64, 256, 1024), (32, 64, 128)):
         svc = SketchService()
         cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed, corange=False)
         warm = svc.open(cfg)                # throwaway stream: compile only
@@ -77,13 +78,14 @@ def _local():
          f"oneshot_us={us_oneshot:.1f};bitwise={bitwise}")
 
     # one-pass reconstruction error on low-rank + noise
-    rank = 16
+    rank = pick(16, 8)
     M = (jax.random.normal(jax.random.key(1), (n1, rank))
          @ jax.random.normal(jax.random.key(2), (rank, n2))
          + 1e-3 * jax.random.normal(jax.random.key(3), (n1, n2)))
     sr = StreamingSketch(StreamConfig(n1=n1, n2=n2, r=4 * rank, seed=5))
-    for i in range(0, n1, 256):
-        sr.update_rows(i, M[i:i + 256])
+    step = pick(256, 64)
+    for i in range(0, n1, step):
+        sr.update_rows(i, M[i:i + step])
     t0 = time.perf_counter()
     err = float(reconstruction_error(M, sr.reconstruct(rank=rank)))
     us = (time.perf_counter() - t0) * 1e6
@@ -91,13 +93,15 @@ def _local():
 
 
 _DIST_SNIPPET = r"""
-import time, jax, jax.numpy as jnp
+import os, time, jax, jax.numpy as jnp
 from repro.core import make_grid_mesh
 from repro.core.sketch import input_sharding
 from repro.roofline.hlo import collective_bytes_of
 from repro.stream import StreamConfig, ShardedStreamingSketch
 
-n, r = 2048, 64
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+n, r = (256, 16) if smoke else (2048, 64)
+iters = 2 if smoke else 5
 mesh = make_grid_mesh(8, 1, 1)
 cfg = StreamConfig(n1=n, n2=n, r=r, seed=7, corange=False)
 st = ShardedStreamingSketch(cfg, mesh)
@@ -105,10 +109,10 @@ H = jax.device_put(jax.random.normal(jax.random.key(0), (n, n)),
                    input_sharding(mesh))
 st.update(H)                                    # compile + warm
 t0 = time.perf_counter()
-for _ in range(5):
+for _ in range(iters):
     st.update(H)
 jax.block_until_ready(st.sketch)
-us = (time.perf_counter() - t0) / 5 * 1e6
+us = (time.perf_counter() - t0) / iters * 1e6
 cb = collective_bytes_of(st._upd.lower(st.Y, st.W, H).compile().as_text())
 print(f"RESULT stream_dist_update_P8,{us:.1f},coll_bytes={cb.total:.0f}")
 assert cb.total == 0, cb

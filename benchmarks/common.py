@@ -10,6 +10,20 @@ import time
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 
 
+def is_smoke() -> bool:
+    """True when REPRO_BENCH_SMOKE=1 (set by ``run.py --smoke`` and the CI
+    bench-smoke job): every suite shrinks to tiny shapes and minimal iters
+    so one full pass finishes in CI minutes while still walking the exact
+    measurement paths.  Subprocess snippets inherit the flag through the
+    environment (``run_with_devices`` copies ``os.environ``)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def pick(full, smoke):
+    """``full`` in normal runs, ``smoke`` under REPRO_BENCH_SMOKE=1."""
+    return smoke if is_smoke() else full
+
+
 def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time of fn(*args) in microseconds (block_until_ready)."""
     import jax

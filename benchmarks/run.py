@@ -4,47 +4,92 @@ Prints ``name,us_per_call,derived`` CSV.  Multi-device benchmarks run in
 subprocesses with 8 fake XLA devices so this process keeps 1 device.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3_comm_vs_gen,...]
+                                            [--smoke] [--out bench.json]
+
+``--smoke`` sets REPRO_BENCH_SMOKE=1: every suite runs tiny shapes and
+minimal iters (the CI bench-smoke job).  ``--out`` additionally writes the
+parsed rows as JSON — the artifact CI uploads so the perf trajectory
+(BENCH_*.json) is machine-produced, not hand-pasted.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
+import os
 import sys
 import traceback
-
-from . import (bench_bounds, bench_comm_vs_gen, bench_error,
-               bench_grad_compress, bench_kernels, bench_nystrom,
-               bench_plan, bench_sketch, bench_stream)
-
-SUITES = {
-    "thm_bounds": bench_bounds.main,        # Thm 2/3 tables
-    "fig3_comm_vs_gen": bench_comm_vs_gen.main,
-    "fig4_scaling": bench_sketch.main,
-    "fig5-8_nystrom": bench_nystrom.main,
-    "tab2_error": bench_error.main,
-    "kernels": bench_kernels.main,
-    "grad_compress": bench_grad_compress.main,
-    "stream": bench_stream.main,
-    "plan": bench_plan.main,                # predicted vs measured + autotune
-}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shapes smoke mode (REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("--out", default=None,
+                    help="write suite rows as JSON to this path")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
+    # import after --smoke is in the environment so suites (and their
+    # subprocess snippets) all observe the same mode
+    from . import (bench_bounds, bench_comm_vs_gen, bench_error,
+                   bench_grad_compress, bench_kernels, bench_nystrom,
+                   bench_plan, bench_sketch, bench_stream)
+
+    suites = {
+        "thm_bounds": bench_bounds.main,        # Thm 2/3 tables
+        "fig3_comm_vs_gen": bench_comm_vs_gen.main,
+        "fig4_scaling": bench_sketch.main,
+        "fig5-8_nystrom": bench_nystrom.main,
+        "tab2_error": bench_error.main,
+        "kernels": bench_kernels.main,
+        "grad_compress": bench_grad_compress.main,
+        "stream": bench_stream.main,
+        "plan": bench_plan.main,                # predicted vs measured + tune
+    }
+
+    only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in SUITES.items():
+    results = {}
+    for name, fn in suites.items():
         if only and name not in only:
             continue
+        buf = io.StringIO()
+        err = None
         try:
-            fn()
+            with contextlib.redirect_stdout(buf):
+                fn()
         except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
+            err = e
             failed.append((name, e))
+        text = buf.getvalue()
+        sys.stdout.write(text)
+        if err is not None:
+            traceback.print_exception(err)
+        ok = err is None
+        rows = []
+        for line in text.splitlines():
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                try:
+                    us = float(parts[1])
+                except ValueError:
+                    continue
+                rows.append({"name": parts[0], "us_per_call": us,
+                             "derived": parts[2]})
+        results[name] = {"ok": ok, "rows": rows}
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"schema": 1, "smoke": args.smoke,
+                       "suites": results}, f, indent=1)
+        print(f"# wrote {args.out}", file=sys.stderr)
+
     if failed:
         print(f"# {len(failed)} suites FAILED: {[n for n, _ in failed]}",
               file=sys.stderr)

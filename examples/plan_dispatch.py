@@ -42,6 +42,13 @@ print(regime_sweep(plan_nystrom, (49152, 4096),
                    [4, 8, 16, 64], machine=PRESETS["cpu"]))
 print()
 
+# where the 1-D variants cannot run (r < P: neither divides), the §5.3
+# bound-driven general two-grid pair is the only executable plan — it runs
+# stage 1 on p, stage 2 on q, with the §5.2 Redistribute of B in between
+print("r < P: only the general two-grid (bound_driven) plan can execute:")
+print(explain(plan_nystrom(4096, 32, P=64, machine=PRESETS["cpu"])))
+print()
+
 # --- 3. execute + autotune on this machine ---------------------------------
 A = jax.random.normal(jax.random.key(0), (512, 768))
 plan = plan_sketch(512, 768, 64, P=1)

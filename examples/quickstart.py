@@ -5,7 +5,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import (matmul_lower_bound, nystrom_lower_bound,
+from repro.core import (matmul_lower_bound,
                         nystrom_reference, relative_error, report_matmul,
                         select_matmul_grid, sketch_reference)
 from repro.kernels import sketch_matmul

@@ -10,7 +10,6 @@ of Tropp et al.).
     PYTHONPATH=src python examples/streaming_lowrank.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch_reference

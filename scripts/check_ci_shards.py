@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Assert the CI tier-1 shards cover every test file, with no double runs.
+
+The tier-1 matrix in .github/workflows/ci.yml names explicit test files per
+shard plus a generated "rest" shard that runs ``tests`` minus an --ignore
+list.  The invariant this script pins (CHANGES.md calls the hazard out):
+
+  * the rest shard's --ignore list is EXACTLY the union of the files the
+    named shards run — an ignored-but-not-sharded file would silently fall
+    out of tier-1, and a sharded-but-not-ignored file would run twice;
+  * every file a shard names exists on disk (renames can't strand a shard);
+  * every ``tests/test_*.py`` on disk therefore runs in exactly one shard
+    (new files land in "rest" by construction).
+
+Run from the repo root (the lint CI job does) or via the tier-1 test
+``tests/test_ci_shards.py``.  Exits non-zero with a diff on violation.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+CI = ROOT / ".github" / "workflows" / "ci.yml"
+
+
+def parse_shards(text: str):
+    """(named_shard_files, rest_ignores) from the ci.yml shard matrix."""
+    named: set = set()
+    ignores: set = set()
+    # every "tests/test_*.py" token outside YAML comments, tagged by
+    # whether it is an --ignore= argument
+    code = "\n".join(line.split("#", 1)[0] for line in text.splitlines())
+    for m in re.finditer(r"(--ignore=)?(tests/test_[A-Za-z0-9_]+\.py)", code):
+        if m.group(1):
+            ignores.add(m.group(2))
+        else:
+            named.add(m.group(2))
+    return named, ignores
+
+
+def check(ci_path: pathlib.Path = CI, root: pathlib.Path = ROOT):
+    text = ci_path.read_text()
+    named, ignores = parse_shards(text)
+    on_disk = {f"tests/{p.name}" for p in (root / "tests").glob("test_*.py")}
+    errors = []
+    if named != ignores:
+        only_named = sorted(named - ignores)
+        only_ignored = sorted(ignores - named)
+        if only_named:
+            errors.append(
+                f"sharded but missing from the rest --ignore list (would "
+                f"run TWICE): {only_named}")
+        if only_ignored:
+            errors.append(
+                f"ignored by the rest shard but not named by any shard "
+                f"(would NEVER run): {only_ignored}")
+    missing = sorted(named - on_disk)
+    if missing:
+        errors.append(f"shard names files that do not exist: {missing}")
+    # informational: files covered only by the rest shard
+    rest_only = sorted(on_disk - named)
+    return errors, {"named": sorted(named), "rest_only": rest_only}
+
+
+def main() -> int:
+    errors, info = check()
+    if errors:
+        print("CI shard coverage check FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"CI shards OK: {len(info['named'])} files in named shards, "
+          f"{len(info['rest_only'])} covered by the rest shard "
+          f"({', '.join(info['rest_only']) or 'none'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

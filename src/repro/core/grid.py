@@ -222,6 +222,60 @@ def select_nystrom_grids(n: int, r: int, P: int,
     raise ValueError(f"unknown variant {variant!r}")
 
 
+def alg2_two_grid_executable(n: int, r: int,
+                             p: Tuple[int, int, int],
+                             q: Tuple[int, int, int]) -> bool:
+    """Whether ``core.nystrom.nystrom_two_grid`` can run (p, q) on (n, r).
+
+    Stage 1 is Alg. 1 with n1 = n2 = n, so it inherits the entry point's
+    divisibility contract (the B layout P((p1, p2), p3) reduce-scatters each
+    n/p1 row block p2 ways).  Stage 2 lays B out P(q1, (q3, q2)) and
+    reduce-scatters each r/q2 row block of C q1 ways, hence r % (q1*q2).
+    """
+    p1, p2, p3 = p
+    q1, q2, q3 = q
+    stage1 = (n % (p1 * p2) == 0 and n % (p2 * p3) == 0 and r % p3 == 0
+              and p1 <= n and p2 <= n and p3 <= r)
+    stage2 = (n % q1 == 0 and r % (q1 * q2) == 0 and r % (q2 * q3) == 0
+              and q1 <= n and q2 <= r and q3 <= r)
+    return stage1 and stage2
+
+
+def select_two_grid_executable(n: int, r: int, P: int, p=None):
+    """The §5.3 bound-driven (p, q) pair, snapped to what can execute.
+
+    Returns ``(p, q, exact)`` where ``exact`` says the ideal bound-driven
+    grids themselves divide (n, r); otherwise (p, q) is the pair of
+    factorizations of P minimizing ``alg2_bandwidth_words`` among all
+    executable pairs (the same min-words snap ``grid="auto"`` applies to
+    Alg. 1), and the caller should report the bound gap.  Returns ``None``
+    when no factorization pair divides the shape.  ``p`` fixes the stage-1
+    grid (e.g. a streamed accumulator already laid out on (P, 1, 1)) and
+    restricts the search to q.
+    """
+    ideal = select_nystrom_grids(n, r, P, variant="bound_driven")
+    if (p is None or tuple(p) == tuple(ideal.p)) \
+            and alg2_two_grid_executable(n, r, ideal.p, ideal.q):
+        return tuple(ideal.p), tuple(ideal.q), True
+    facs = list(factorizations_3d(P))
+    p_cands = [tuple(p)] if p is not None else facs
+    best = None
+    for pc in p_cands:
+        for qc in facs:
+            if not alg2_two_grid_executable(n, r, pc, qc):
+                continue
+            w = alg2_bandwidth_words(n, r, pc, qc)
+            lat = (alg1_latency_hops(pc[1], pc[2])
+                   + math.log2(max(qc[0], 1))
+                   + (math.log2(max(P, 1)) if pc != qc else 0.0))
+            key = (w, lat)
+            if best is None or key < best[0]:
+                best = (key, pc, qc)
+    if best is None:
+        return None
+    return best[1], best[2], False
+
+
 def _snap_1d(n: int, P: int) -> Tuple[int, int, int]:
     """Largest p1 | P with p1 <= n, rest into p2."""
     for d in sorted(_divisors(P), reverse=True):

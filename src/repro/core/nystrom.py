@@ -15,10 +15,17 @@ Two 1-D variants exactly as implemented in the paper (§5.3, Fig. 1):
     O(nr/P) words per processor, and the second product is entirely local.
     Best when P > n/r (the paper's empirical crossover, Fig. 7).
 
-Plus the general two-grid form (``nystrom_general``) that runs Alg. 1 on an
-arbitrary (p1,p2,p3) grid and the second multiply on an arbitrary
-(q1,q2,q3) grid, with XLA inserting the B redistribution (§5.2's
-``Redistribute``) via a sharding constraint.
+Plus two general two-grid forms of §5.3:
+
+  * ``nystrom_general`` — one mesh: the (q1,q2,q3) grid is a permutation of
+    the mesh axes, with XLA inserting the B redistribution (§5.2's
+    ``Redistribute``) via a sharding constraint.
+  * ``nystrom_two_grid`` — two independent factorizations of the same P
+    devices (the form Theorem 3's bound-driven grids take): Alg. 1 on a
+    p-grid mesh, an explicit cross-grid redistribution of B (<= nr/P words
+    per processor), then the second multiply on a q-grid mesh.  This is the
+    executable form of §5.3 approach 1, dispatched by the planner's
+    ``alg2_bound_driven`` plans.
 
 The second stages are factored out (``nystrom_second_stage_no_redist`` /
 ``nystrom_second_stage_redist``) so they can consume any row-sharded B —
@@ -37,8 +44,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .compat import shard_map
-from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, make_grid_mesh,
-                     omega_tile, rand_matmul, seed_keys)
+from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, input_sharding,
+                     make_grid_mesh, omega_tile, rand_matmul, seed_keys)
 
 X_AXIS = "x"
 
@@ -306,6 +313,136 @@ def _nystrom_general_prog(r: int, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# Bound-driven general two-grid Alg. 2 (§5.3 approach 1): stage 1 on a
+# (p1,p2,p3) grid, stage 2 on an arbitrary (q1,q2,q3) grid over the SAME
+# devices, with the §5.2 ``Redistribute`` of B made explicit between them.
+# Unlike ``nystrom_general`` (one mesh, q a permutation of p's axes), the two
+# grids here are independent factorizations of P — the form Theorem 3's
+# bound-driven grids actually take.
+# ---------------------------------------------------------------------------
+
+Q_AXES = ("q1", "q2", "q3")
+
+
+def _two_grid_devices(mesh, devices):
+    if devices is not None:
+        return list(devices)
+    if mesh is not None:
+        return list(mesh.devices.flat)
+    return jax.devices()
+
+
+def nystrom_second_stage_two_grid(B, seed, r: int, q: Tuple[int, int, int],
+                                  mesh: Optional[Mesh] = None, devices=None,
+                                  kind: str = "normal", salt: int = 0):
+    """Stage 2 of Alg. 2 on an arbitrary (q1, q2, q3) grid (§5.3).
+
+    Accepts B = A·Omega in ANY sharding (one-shot stage-1 output or a
+    streamed accumulator's Y) and re-lays it out P(q1, (q3, q2)) — the
+    cross-grid ``Redistribute`` of §5.2, at most nr/P words per processor.
+    Then, mirroring Alg. 1 with the grid roles shifted: All-Gather B over
+    q2, regenerate Omega_{i'j'} from global coordinates (zero
+    communication), local GEMM, Reduce-Scatter C over q1.
+
+    Returns (B sharded P(q1, (q3, q2)), C sharded P((q2, q1), q3)) on the
+    q-grid mesh.  Bitwise note: with q1 == 1 the stage-2 contraction is
+    never split, so C is blockwise-bitwise against the single-device
+    reference (given a bitwise B).
+    """
+    q1, q2, q3 = (int(x) for x in q)
+    n = B.shape[0]
+    if B.shape[1] != r:
+        raise ValueError(f"B must be (n, r); got {B.shape} with r={r}")
+    if n % q1 or r % (q1 * q2) or r % (q2 * q3):
+        raise ValueError(f"(n={n}, r={r}) not divisible by q-grid "
+                         f"({q1},{q2},{q3}): needs q1 | n, q1*q2 | r, "
+                         f"q2*q3 | r")
+    devices = _two_grid_devices(mesh, devices)
+    mesh_q = make_grid_mesh(q1, q2, q3, axis_names=Q_AXES, devices=devices)
+    # Redistribute: whatever layout B arrives in -> the stage-2 layout.
+    B = jax.device_put(
+        B, NamedSharding(mesh_q, P(Q_AXES[0], (Q_AXES[2], Q_AXES[1]))))
+    keys = jnp.stack(seed_keys(seed))
+    C = _two_grid_stage2_prog(r, mesh_q, kind, salt)(B, keys)
+    return B, C
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _two_grid_stage2_prog(r: int, mesh: Mesh, kind: str, salt: int):
+    a1, a2, a3 = Q_AXES
+    q1, q2, q3 = (mesh.shape[a] for a in Q_AXES)
+
+    def impl(B, keys):
+        n = B.shape[0]
+        om_rows = n // q1
+        om_cols = r // q2
+
+        def body(b_blk):                          # (n/q1, r/(q3 q2))
+            i = jax.lax.axis_index(a1)
+            j = jax.lax.axis_index(a2)
+            if q2 == 1:
+                b_ik = b_blk
+            else:
+                b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
+            om = omega_tile(keys, i * om_rows, j * om_cols,
+                            om_rows, om_cols, kind, b_ik.dtype, salt=salt)
+            c_part = om.T @ b_ik                  # (r/q2, r/q3) partial
+            if q1 == 1:
+                return c_part
+            return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
+                                        tiled=True)
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=P(a1, (a3, a2)),
+                         out_specs=P((a2, a1), a3))(B)
+
+    return jax.jit(impl)
+
+
+def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
+                     p: Tuple[int, int, int] = None,
+                     q: Tuple[int, int, int] = None,
+                     kind: str = "normal", devices=None):
+    """Alg. 2 with stage 1 on grid ``p`` and stage 2 on grid ``q`` (§5.3).
+
+    The grids are independent factorizations of the same P devices (taken
+    from ``mesh``, ``devices``, or ``jax.devices()``), so this executes the
+    bound-driven (p, q) pairs of Theorem 3 that ``nystrom_general`` — one
+    mesh, shared axis sizes — cannot express.  Stage 1 is Alg. 1 on the
+    p-grid mesh; B is then redistributed to the q-grid layout (the §5.2
+    ``Redistribute``, <= nr/P words per processor, zero when the layouts
+    coincide); stage 2 runs on the q-grid mesh.
+
+    in : A (n x n) in any sharding (re-laid out to the Alg. 1 contract)
+    out: B sharded P(q1, (q3, q2)); C sharded P((q2, q1), q3), both on the
+         q-grid mesh.
+    Bitwise note: with p2 == 1 and q1 == 1 neither contraction is split, so
+    (B, C) are bitwise-identical to ``nystrom_reference`` on this backend.
+    """
+    if p is None or q is None:
+        raise ValueError("nystrom_two_grid needs explicit p and q grids "
+                         "(use nystrom_auto(variant='bound_driven') to pick "
+                         "them from the bound)")
+    from .grid import alg2_two_grid_executable
+    p = tuple(int(x) for x in p)
+    q = tuple(int(x) for x in q)
+    if p[0] * p[1] * p[2] != q[0] * q[1] * q[2]:
+        raise ValueError(f"grids must factor the same P: {p} vs {q}")
+    n = A.shape[0]
+    if A.shape[1] != n:
+        raise ValueError(f"Nyström needs a square A; got {A.shape}")
+    if not alg2_two_grid_executable(n, r, p, q):
+        raise ValueError(f"(n={n}, r={r}) not divisible by grids p={p}, "
+                         f"q={q} (see alg2_two_grid_executable)")
+    devices = _two_grid_devices(mesh, devices)
+    mesh_p = make_grid_mesh(*p, devices=devices)
+    A = jax.device_put(A, input_sharding(mesh_p))
+    B = rand_matmul(A, seed, r, mesh_p, kind=kind)
+    return nystrom_second_stage_two_grid(B, seed, r, q, devices=devices,
+                                         kind=kind)
+
+
+# ---------------------------------------------------------------------------
 # Convenience driver
 # ---------------------------------------------------------------------------
 
@@ -319,6 +456,10 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
         redist all-to-all against the no_redist reduce-scatter on the
         machine model, so latency-dominated small problems may legitimately
         deviate from the bandwidth-only rule);
+      * ``"bound_driven"`` — the §5.3 general two-grid algorithm on the
+        Theorem-3 bound-driven (p, q) pair, snapped to the min-words
+        executable factorization pair when the ideal grids do not divide
+        (``core.grid.select_two_grid_executable``);
       * ``"redist"`` / ``"no_redist"`` — explicit.
     plan: a precomputed :class:`repro.plan.Plan` (wins over ``variant``).
     """
@@ -332,8 +473,15 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
         if not plan.executable:
             raise ValueError(
                 f"plan {plan.variant!r} for dims={plan.dims}, "
-                f"P={plan.n_procs} is analytic-only (P must divide n and "
-                f"r for the 1-D variants)")
+                f"P={plan.n_procs} is analytic-only (no executable grid "
+                f"pair divides the shape)")
+        if plan.variant == "alg2_bound_driven":
+            B, C = nystrom_two_grid(A, seed, r,
+                                    p=plan.grid, q=plan.q_grid, kind=kind,
+                                    devices=list(devices[: plan.n_procs]))
+            mesh_q = make_grid_mesh(*plan.q_grid, axis_names=Q_AXES,
+                                    devices=list(devices[: plan.n_procs]))
+            return B, C, mesh_q, "bound_driven"
         variant = {"alg2_no_redist": "no_redist", "alg2_redist": "redist",
                    "local_xla": "no_redist"}.get(plan.variant)
         if variant is None:
@@ -343,6 +491,18 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
                              f"mesh execution here; call plan.execute "
                              f"instead (or pass variant='auto' to force "
                              f"the mesh path)")
+    if variant == "bound_driven":
+        from .grid import select_two_grid_executable
+        got = select_two_grid_executable(n, r, Pn)
+        if got is None:
+            raise ValueError(f"no (p, q) factorization pair of P={Pn} "
+                             f"divides (n={n}, r={r}); pad the shape or "
+                             f"change P")
+        p, q, _exact = got
+        B, C = nystrom_two_grid(A, seed, r, p=p, q=q, kind=kind,
+                                devices=list(devices))
+        mesh_q = make_grid_mesh(*q, axis_names=Q_AXES, devices=list(devices))
+        return B, C, mesh_q, "bound_driven"
     if variant == "auto":
         variant = "redist" if Pn > max(1, n // max(r, 1)) else "no_redist"
     mesh = Mesh(np.asarray(devices), (X_AXIS,))

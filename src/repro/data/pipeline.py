@@ -11,11 +11,10 @@ LM loss has learnable structure (tests assert loss decreases).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

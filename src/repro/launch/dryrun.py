@@ -29,7 +29,7 @@ from repro.models.api import count_params_split, count_active_params, model_flop
 from repro.optim.adamw import AdamWState
 from repro.parallel.sharding import (batch_shardings, cache_shardings,
                                      make_shard_ctx, param_shardings)
-from repro.roofline.analysis import analyze_compiled, format_table
+from repro.roofline.analysis import analyze_compiled
 from repro.serve.engine import serve_prefill
 from repro.train.state import TrainState
 from repro.train.step import make_train_step

@@ -15,12 +15,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig
-from repro.data.pipeline import DataConfig, Pipeline, data_config_for
+from repro.data.pipeline import DataConfig
 from repro.models import get_api
 from repro.models.common import NULL_CTX
 from repro.train.loop import train_loop

@@ -14,7 +14,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .common import ShardCtx, NULL_CTX, dense_init, matmul, softcap, apply_rope
+from .common import ShardCtx, NULL_CTX, dense_init, matmul, apply_rope
 
 
 class AttnParams(NamedTuple):

@@ -9,7 +9,7 @@ decode unrolls a Python loop over layers so heterogeneous per-layer caches
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

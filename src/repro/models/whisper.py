@@ -3,7 +3,7 @@ frontend is a stub per the assignment — ``input_specs`` supplies precomputed
 frame embeddings (B, enc_seq, d_model))."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,7 @@ the hybrid arch stays sub-quadratic on the long_500k cell.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.configs.base import ModelConfig
 from .attention import (AttnParams, attn_init, attention, attention_decode,
                         nystrom_attention)
 from .common import (NULL_CTX, ShardCtx, cross_entropy_chunked, embed_init,
-                     matmul, rmsnorm, rmsnorm_init, softcap)
+                     matmul, rmsnorm, rmsnorm_init)
 from .ffn import FFNParams, ffn, ffn_init
 from .ssm import (Mamba2Params, mamba2, mamba2_init)
 

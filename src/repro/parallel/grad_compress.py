@@ -24,9 +24,7 @@ is the Theorem-2 regime-1 argument at the granularity of one all-reduce.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

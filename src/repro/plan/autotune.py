@@ -26,7 +26,7 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from . import model as M
-from .planner import Candidate, Plan, _alg1_executable, _itemsize
+from .planner import Plan, _alg1_executable, _itemsize
 
 CACHE_VERSION = 1
 
@@ -183,6 +183,20 @@ def _measurable_candidates(plan: Plan, machine: M.MachineModel,
                            + 2 * blocks["bm"] * blocks["bn"])
                 if fit <= machine.vmem_bytes:
                     add(cand.variant, blocks=blocks)
+        elif cand.variant == "alg2_bound_driven":
+            # sweep stage-2 grids: the analytic q plus the next-cheapest
+            # executable q factorizations for the same stage-1 grid
+            from repro.core.grid import (alg2_two_grid_executable,
+                                         factorizations_3d)
+            n, r = plan.dims
+            scored_q = []
+            for qg in factorizations_3d(plan.n_procs):
+                if alg2_two_grid_executable(n, r, cand.grid, qg):
+                    c = M.alg2_cost(n, r, cand.grid, qg)
+                    scored_q.append((c.seconds(machine, isz), qg))
+            scored_q.sort(key=lambda t: t[0])
+            for _, qg in scored_q[:top_k]:
+                add(cand.variant, grid=cand.grid, q_grid=qg)
         else:
             add(cand.variant, grid=cand.grid, q_grid=cand.q_grid)
     return out
@@ -258,7 +272,8 @@ def _rescore(plan: Plan, machine: M.MachineModel) -> Plan:
             c = M.local_cost(n1, n2, r)
     elif plan.task == "nystrom":
         n, r = plan.dims
-        if plan.variant in ("alg2_no_redist", "alg2_redist") and plan.grid:
+        if plan.variant in ("alg2_no_redist", "alg2_redist",
+                            "alg2_bound_driven") and plan.grid:
             c = M.alg2_cost(n, r, plan.grid, plan.q_grid or plan.grid)
         else:
             c = M.nystrom_local_cost(n, r,
@@ -300,7 +315,13 @@ def _plan_from_entry(plan: Plan, entry: dict) -> Optional[Plan]:
                 return None
     elif plan.task == "nystrom":
         n, r = plan.dims
-        if variant.startswith("alg2"):
+        if variant == "alg2_bound_driven":
+            from repro.core.grid import alg2_two_grid_executable
+            qg = tuple(entry["q_grid"]) if entry.get("q_grid") else None
+            if grid is None or qg is None \
+                    or not alg2_two_grid_executable(n, r, grid, qg):
+                return None
+        elif variant.startswith("alg2"):
             P = plan.n_procs
             if n % P or r % P or P > n:
                 return None

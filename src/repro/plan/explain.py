@@ -16,6 +16,7 @@ from repro.core.lower_bounds import (
     report_nystrom,
 )
 
+from . import model as M
 from .planner import Plan
 
 
@@ -72,6 +73,15 @@ def explain(plan: Plan) -> str:
     if plan.measured_seconds is not None:
         lines.append(f"          measured {_fmt(plan.measured_seconds)} s "
                      f"(autotuned)")
+    if (plan.task == "nystrom" and plan.grid and plan.q_grid
+            and tuple(plan.grid) != tuple(plan.q_grid)):
+        n, r = plan.dims
+        rw = M.redistribute_words(n, r, plan.grid, plan.q_grid)
+        how = ("general two-grid (§5.3 approach 1): stage 1 on p, stage 2 "
+               "on q" if plan.variant == "alg2_bound_driven"
+               else "B re-laid out between stages")
+        lines.append(f"          {how}; Redistribute of B p->q moves "
+                     f"{_fmt(rw)} words/proc (§5.2)")
     if plan.task in ("sketch", "stream"):
         n1 = plan.dims[0]
         lines.append(f"  zero-communication regime up to P <= n1 = {n1}"

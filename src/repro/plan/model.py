@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.core.grid import (
     alg1_bandwidth_words,
@@ -205,9 +205,26 @@ def pallas_fused_cost(n1: int, n2: int, r: int) -> Cost:
 # Variant costs — Nyström  (B = A·Omega ; C = Omega^T·B)
 # ---------------------------------------------------------------------------
 
+def redistribute_words(n: int, r: int, p: Tuple[int, int, int],
+                       q: Tuple[int, int, int]) -> float:
+    """Per-processor words of the §5.2 ``Redistribute`` of B between the
+    stage-1 and stage-2 grids: zero when q == p (B is already in place),
+    else the all-to-all re-layout bound nr/P — every processor holds nr/P
+    words of B and in the worst case all of them change owner.  This is
+    exactly the ``p != q`` term inside ``alg2_bandwidth_words``, broken out
+    so plans and reports can show the redistribution separately."""
+    if tuple(p) == tuple(q):
+        return 0.0
+    P = p[0] * p[1] * p[2]
+    return n * r / P
+
+
 def alg2_cost(n: int, r: int, p: Tuple[int, int, int],
               q: Tuple[int, int, int]) -> Cost:
-    """Alg. 2 on grids (p, q): words is ``alg2_bandwidth_words`` exactly."""
+    """Alg. 2 on grids (p, q): words is ``alg2_bandwidth_words`` exactly
+    (which already includes ``redistribute_words`` when p != q), so a
+    shard_map winner's predicted words stay equal to the paper's closed
+    form and never fall below the Theorem 3 bound."""
     p1, p2, p3 = p
     P = p1 * p2 * p3
     words = alg2_bandwidth_words(n, r, p, q)

@@ -16,7 +16,11 @@ Planner invariants (pinned by tests/test_plan.py):
     zero-communication local-regenerate grid (P, 1, 1);
   * the Alg.-1 grid agrees with ``core.grid.select_matmul_grid`` whenever
     that grid is executable (divisibility), and otherwise falls back to the
-    cheapest executable factorization of P.
+    cheapest executable factorization of P;
+  * every Nyström candidate — including the §5.3 bound-driven general
+    two-grid pair run by ``nystrom_two_grid`` — prices at
+    ``alg2_bandwidth_words`` on its own (p, q) grids, so no candidate ever
+    scores below the Theorem 3 floor.
 
 The analytic ranking is refined by measured timings in ``plan.autotune``.
 """
@@ -31,6 +35,7 @@ from repro.core.grid import (
     factorizations_3d,
     select_matmul_grid,
     select_nystrom_grids,
+    select_two_grid_executable,
 )
 from repro.core.lower_bounds import (
     matmul_lower_bound,
@@ -180,6 +185,15 @@ class Plan:
             fn = (nystrom_no_redist if self.variant == "alg2_no_redist"
                   else nystrom_redist)
             return fn(A, seed, r, mesh, axis="x", kind=self.kind)
+        if self.variant == "alg2_bound_driven":
+            from repro.core.nystrom import nystrom_two_grid
+            devices = devices if devices is not None else jax.devices()
+            if len(devices) < self.n_procs:
+                raise ValueError(f"plan needs {self.n_procs} devices, "
+                                 f"have {len(devices)}")
+            return nystrom_two_grid(A, seed, r, p=self.grid, q=self.q_grid,
+                                    kind=self.kind,
+                                    devices=list(devices[: self.n_procs]))
         if self.variant == "local_xla":
             from repro.core.nystrom import nystrom_reference
             return nystrom_reference(A, seed, r, kind=self.kind)
@@ -303,13 +317,29 @@ def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
 def plan_nystrom(n: int, r: int, P: Optional[int] = None,
                  dtype="float32", kind: str = "normal",
                  machine: Optional[M.MachineModel] = None,
-                 allow_pallas: Optional[bool] = None) -> Plan:
+                 allow_pallas: Optional[bool] = None,
+                 variant: str = "auto") -> Plan:
     """Plan the Nyström pair (B, C) for a symmetric (n x n) A on P procs.
 
     The redist / no_redist choice falls out of the cost model — redist's
     nr/P all-to-all beats no_redist's (1-1/P)·r² reduce-scatter exactly
-    when P > ~n/r, the paper's Fig.-7 crossover.
+    when P > ~n/r, the paper's Fig.-7 crossover.  The §5.3 bound-driven
+    general two-grid algorithm is a third executable candidate
+    (``alg2_bound_driven``, run by ``core.nystrom.nystrom_two_grid``); it
+    wins whenever its (p, q) pair prices below both 1-D variants — in
+    particular when P > n and no 1-D grid is runnable at all.
+
+    variant: ``"auto"`` lets the cost model choose; ``"no_redist"`` /
+    ``"redist"`` / ``"bound_driven"`` force that variant (the others stay
+    in ``candidates`` for the audit trail).
     """
+    requires = {"auto": None, "no_redist": "alg2_no_redist",
+                "redist": "alg2_redist",
+                "bound_driven": "alg2_bound_driven"}
+    if variant not in requires:
+        raise ValueError(f"unknown variant {variant!r}")
+    require = requires[variant]
+    forced = variant != "auto"
     if P is None:
         import jax
         P = len(jax.devices())
@@ -323,6 +353,8 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
 
     cands = []
     if P == 1:
+        if forced:
+            raise ValueError(f"variant={variant!r} needs P > 1")
         c = M.nystrom_local_cost(n, r, fused=False)
         cands.append(Candidate("local_xla", c, c.seconds(machine, isz)))
         cp = M.nystrom_local_cost(n, r, fused=True)
@@ -335,24 +367,39 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
         executable_1d = (n % P == 0 and r % P == 0 and P <= n)
         note = "" if executable_1d else f"needs P | n and P | r (P={P})"
         p = (P, 1, 1)
-        for variant, q in (("alg2_no_redist", (P, 1, 1)),
-                           ("alg2_redist", (1, 1, P))):
+        for vname, q in (("alg2_no_redist", (P, 1, 1)),
+                         ("alg2_redist", (1, 1, P))):
             c = M.alg2_cost(n, r, p, q)
-            cands.append(Candidate(variant, c, c.seconds(machine, isz),
+            cands.append(Candidate(vname, c, c.seconds(machine, isz),
                                    grid=p, q_grid=q,
                                    executable=executable_1d, note=note))
-        # §5.3 approach 1, analytic-only: general two-grid execution of the
-        # bound-driven grids is future work (nystrom_general covers a mesh
-        # with shared axes; arbitrary (p, q) pairs are not wired up).
-        bd = select_nystrom_grids(n, r, P, variant="bound_driven")
-        cb = M.alg2_cost(n, r, bd.p, bd.q)
-        cands.append(Candidate(
-            "alg2_bound_driven", cb, cb.seconds(machine, isz),
-            grid=tuple(bd.p), q_grid=tuple(bd.q), executable=False,
-            note="analytic reference (general two-grid execution unwired)"))
+        # §5.3 approach 1: the bound-driven general two-grid algorithm,
+        # executed by core.nystrom.nystrom_two_grid.  When the ideal grids
+        # do not divide (n, r), snap to the min-words executable pair of
+        # factorizations (same policy as Alg. 1's grid="auto") and report
+        # the gap; when no pair divides at all, keep the analytic row.
+        ideal = select_nystrom_grids(n, r, P, variant="bound_driven")
+        got = select_two_grid_executable(n, r, P)
+        if got is not None:
+            p_bd, q_bd, exact = got
+            cb = M.alg2_cost(n, r, p_bd, q_bd)
+            note = "" if exact else (
+                f"snapped from ideal p={tuple(ideal.p)} q={tuple(ideal.q)} "
+                f"(+{cb.words - M.alg2_cost(n, r, ideal.p, ideal.q).words:g}"
+                f" words over the unrunnable ideal)")
+            cands.append(Candidate(
+                "alg2_bound_driven", cb, cb.seconds(machine, isz),
+                grid=p_bd, q_grid=q_bd, executable=True, note=note))
+        else:
+            cb = M.alg2_cost(n, r, ideal.p, ideal.q)
+            cands.append(Candidate(
+                "alg2_bound_driven", cb, cb.seconds(machine, isz),
+                grid=tuple(ideal.p), q_grid=tuple(ideal.q), executable=False,
+                note=f"no (p, q) factorization pair of P={P} divides "
+                     f"(n={n}, r={r})"))
 
     return _finish_plan("nystrom", (n, r), P, dtype, kind, machine,
-                        cands, lb, regime)
+                        cands, lb, regime, require=require)
 
 
 # ---------------------------------------------------------------------------
@@ -411,13 +458,17 @@ def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
 
 def _finish_plan(task: str, dims: Tuple[int, ...], P: int, dtype: str,
                  kind: str, machine: M.MachineModel,
-                 cands: Sequence[Candidate], lb: float, regime: int) -> Plan:
+                 cands: Sequence[Candidate], lb: float, regime: int,
+                 require: Optional[str] = None) -> Plan:
     cands = tuple(sorted(
         cands, key=lambda c: (not c.executable, c.seconds,
                               c.cost.hbm_words, c.cost.words)))
-    chosen = next((c for c in cands if c.executable), None)
+    eligible = [c for c in cands
+                if require is None or c.variant == require]
+    chosen = next((c for c in eligible if c.executable), None)
     if chosen is None:
-        chosen = cands[0]  # analytic-only plan; execute() raises
+        # analytic-only plan; execute() raises
+        chosen = eligible[0] if eligible else cands[0]
     return Plan(
         task=task, variant=chosen.variant, dims=tuple(dims), n_procs=P,
         dtype=dtype, kind=kind, grid=chosen.grid, q_grid=chosen.q_grid,

@@ -22,7 +22,7 @@ import json
 from dataclasses import dataclass, asdict, field
 from typing import Dict, Optional
 
-from .hlo import CollectiveBytes, collective_bytes_of, op_histogram
+from .hlo import collective_bytes_of, op_histogram
 from . import hlo_cost
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------

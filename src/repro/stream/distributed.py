@@ -29,6 +29,7 @@ from repro.core.compat import shard_map
 from repro.core.nystrom import (
     nystrom_second_stage_no_redist,
     nystrom_second_stage_redist,
+    nystrom_second_stage_two_grid,
 )
 from repro.core.sketch import (
     DEFAULT_AXES,
@@ -54,7 +55,11 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
 
     Needs a 1-D (P, 1, 1) grid so Y is row-sharded — exactly the layout the
     paper's Redist / No-Redist second stages consume.  ``auto`` follows the
-    paper's crossover: redist iff P > n/r (Fig. 7).
+    paper's crossover: redist iff P > n/r (Fig. 7).  ``bound_driven`` runs
+    the §5.3 general two-grid second stage: the accumulated Y plays stage
+    1's B (already on the (P, 1, 1) grid), and the bound's q-grid — snapped
+    to the min-words executable factorization — consumes it via
+    :func:`repro.core.nystrom.nystrom_second_stage_two_grid`.
     """
     ax1, ax2, ax3 = axes
     if cfg.n1 != cfg.n2:
@@ -76,6 +81,16 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
         return nystrom_second_stage_redist(Y, cfg.seed, cfg.r, mesh,
                                            axis=ax1, kind=cfg.kind,
                                            salt=cfg.omega_salt)
+    if variant == "bound_driven":
+        from repro.core.grid import select_two_grid_executable
+        got = select_two_grid_executable(cfg.n1, cfg.r, Pn, p=(Pn, 1, 1))
+        if got is None:
+            raise ValueError(f"no q-grid factorization of P={Pn} divides "
+                             f"(n={cfg.n1}, r={cfg.r})")
+        _, q, _exact = got
+        return nystrom_second_stage_two_grid(
+            Y, cfg.seed, cfg.r, q, devices=list(mesh.devices.flat),
+            kind=cfg.kind, salt=cfg.omega_salt)
     raise ValueError(variant)
 
 

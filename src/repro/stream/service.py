@@ -249,7 +249,9 @@ class SketchService:
     def nystrom(self, sid: int, variant: str = "auto"):
         """(B, C) for a symmetric stream (local mode: computed in place;
         distributed mode: via the Alg.-2 second stages on a (P,1,1) grid —
-        see :func:`repro.stream.distributed.nystrom_finalize`)."""
+        ``variant`` is ``auto``/``no_redist``/``redist``/``bound_driven``,
+        the last running the §5.3 general two-grid second stage; see
+        :func:`repro.stream.distributed.nystrom_finalize`)."""
         st = self._streams[sid]
         cfg = st.cfg
         if cfg.n1 != cfg.n2:

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint import ckpt

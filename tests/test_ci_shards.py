@@ -1,0 +1,48 @@
+"""Tier-1 guard for the CI shard matrix (scripts/check_ci_shards.py).
+
+A test file must never silently fall out of tier-1: the rest shard's
+--ignore list has to equal the union of files the named shards run.  This
+runs the same check the CI lint job runs, so the invariant holds locally
+too (the hazard CHANGES.md called out when the shards were introduced).
+"""
+import importlib.util
+import pathlib
+
+_SCRIPT = (pathlib.Path(__file__).resolve().parents[1]
+           / "scripts" / "check_ci_shards.py")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("check_ci_shards", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_every_test_file_runs_in_exactly_one_shard():
+    mod = _load()
+    errors, info = mod.check()
+    assert not errors, "\n".join(errors)
+    # this very file is new since the shards were written: it must be
+    # covered by the generated rest shard, not lost
+    assert "tests/test_ci_shards.py" in info["rest_only"] \
+        or "tests/test_ci_shards.py" in info["named"]
+
+
+def test_parser_catches_both_failure_modes(tmp_path):
+    mod = _load()
+    good = (_SCRIPT.parents[1] / ".github" / "workflows" / "ci.yml")
+    text = good.read_text()
+    # drop one --ignore= occurrence -> that file would run twice
+    broken = text.replace("--ignore=tests/test_plan.py", "", 1)
+    p = tmp_path / "ci.yml"
+    p.write_text(broken)
+    errors, _ = mod.check(ci_path=p)
+    assert any("TWICE" in e for e in errors)
+    # ignore a file no shard names -> it would never run
+    broken2 = text.replace(
+        "--ignore=tests/test_plan.py",
+        "--ignore=tests/test_plan.py --ignore=tests/test_ci_shards.py", 1)
+    p.write_text(broken2)
+    errors2, _ = mod.check(ci_path=p)
+    assert any("NEVER" in e for e in errors2)

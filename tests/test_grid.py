@@ -2,12 +2,10 @@
 (the paper's tightness claim, §4.3), and the §5.3 Nyström grid trade-offs."""
 import math
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.grid import (
     alg1_bandwidth_words,
-    alg2_bandwidth_words,
     factorizations_3d,
     select_matmul_grid,
     select_nystrom_grids,

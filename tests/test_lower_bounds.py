@@ -6,7 +6,6 @@ optimum of Lemma 5 / Lemma 6 and sit below the classical GEMM bound.
 """
 import math
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.lower_bounds import (

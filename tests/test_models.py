@@ -9,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import get_api
-from repro.models.common import NULL_CTX
 from repro.models import transformer, whisper as whisper_mod
 
 B, S = 2, 16

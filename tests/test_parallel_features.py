@@ -1,7 +1,6 @@
 """Distributed features on 8 fake devices (subprocess): sketched gradient
 compression, GPipe pipeline over a mesh axis, elastic checkpoint restore,
 parameter sharding rules."""
-import pytest
 
 from dist_helper import run_distributed
 

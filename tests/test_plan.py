@@ -35,7 +35,6 @@ from repro.core.lower_bounds import matmul_lower_bound, nystrom_lower_bound
 from repro.plan import (
     AutotuneCache,
     PRESETS,
-    Plan,
     autotune,
     explain,
     plan_nystrom,
@@ -79,6 +78,11 @@ def test_plan_nystrom_never_below_bound(ne, re_, Pe):
     lb = nystrom_lower_bound(n, r, P)
     assert plan.lower_bound_words == lb
     assert plan.predicted_words >= lb - 1e-9, (plan.variant, plan.grid)
+    # every executable candidate — including the §5.3 bound-driven general
+    # two-grid pair — respects the Theorem 3 floor on its own grids
+    for c in plan.candidates:
+        if c.executable:
+            assert c.cost.words >= lb - 1e-9, (c.variant, c.grid, c.q_grid)
 
 
 def test_alg1_choice_equals_closed_form_and_grid_selector():

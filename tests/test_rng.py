@@ -1,7 +1,6 @@
 """Philox-4x32 correctness + the tile-decomposition-invariance property that
 makes regeneration communication-free."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax

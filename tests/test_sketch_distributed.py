@@ -4,8 +4,6 @@ Each test runs in a subprocess with 8 fake XLA devices (the main pytest
 process keeps 1 device per the dry-run isolation rule).  Assertions are
 printed from the subprocess and re-raised here on failure.
 """
-import pytest
-
 from dist_helper import run_distributed
 
 COMMON = r"""

@@ -3,12 +3,10 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 
-from dist_helper import SRC, run_distributed
+from dist_helper import SRC
 
 
 def test_end_to_end_sketch_to_nystrom_single_device():
