@@ -7,6 +7,8 @@
 #   make bench       — the benchmark driver (CSV to stdout)
 #   make bench-smoke — tiny-shapes pass of every suite + JSON artifact
 #                      (what the CI bench-smoke job runs)
+#   make bench-trend — bench-smoke + trend compare vs the newest committed
+#                      baseline in benchmarks/trends/ (the CI compare step)
 #   make lint        — ruff (config in pyproject.toml) + the CI shard
 #                      coverage assertion (the CI lint job)
 
@@ -14,7 +16,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench bench-smoke lint
+.PHONY: test bench bench-smoke bench-trend lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +26,10 @@ bench:
 
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke --out bench-smoke.json
+
+bench-trend:
+	$(PY) -m benchmarks.run --smoke --out bench-smoke.json --compare \
+		$$(ls benchmarks/trends/BENCH_*.json | sort -V | tail -1)
 
 lint:
 	ruff check .

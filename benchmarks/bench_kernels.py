@@ -1,15 +1,22 @@
 """Pallas fused sketch-matmul kernel (interpret mode) vs the jnp reference:
-correctness at benchmark shapes + relative timing.  (Interpret mode executes
-the kernel body in Python, so wall time is NOT a TPU estimate; the derived
-column carries the HBM-traffic model that the fusion eliminates.)"""
+correctness at benchmark shapes + relative timing, plus the backend-matrix
+rows behind the zero-Omega-HBM dispatch — per-backend HBM word counts on a
+shape sweep with a bitwise-parity flag.  (Interpret mode executes the
+kernel body on CPU, so wall time is NOT a TPU estimate; the derived column
+carries the HBM-traffic model that the fusion eliminates, which is what the
+planner dispatches on.)"""
 from __future__ import annotations
 
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import sketch_matmul
+from repro.kernels.local import sketch_block
 from repro.kernels.ref import sketch_matmul_ref
+from repro.plan.model import hbm_roofline_words
 from .common import emit, pick, time_us
 
 
@@ -34,6 +41,27 @@ def main():
     emit("kernel_sketch_matmul_fused_interp", us_ker,
          f"hbm_bytes={fused_bytes};saving={gemm_bytes/fused_bytes:.3f}x;"
          f"max_err={err:.1e}")
+
+    # backend matrix: the local layer both distributed paths dispatch on.
+    # Reports per-backend HBM words (the roofline the planner prices), the
+    # fused reduction factor, and whether the backends agreed bit for bit
+    # (the kernels/local.py contract — contraction un-split by default).
+    shapes = pick(((256, 512, 64), (512, 1024, 128), (512, 2048, 64)),
+                  ((32, 64, 16), (64, 128, 32)))
+    for (m, k, n) in shapes:
+        X = jax.random.normal(jax.random.key(1), (m, k), jnp.float32)
+        jf = jax.jit(lambda a: sketch_block(a, 9, n, backend="jnp"))
+        pf = jax.jit(lambda a: sketch_block(a, 9, n, backend="pallas"))
+        us_j = time_us(jf, X, warmup=1, iters=pick(3, 2))
+        us_p = time_us(pf, X, warmup=1, iters=pick(3, 2))
+        bitwise = bool(np.array_equal(np.asarray(jf(X)), np.asarray(pf(X))))
+        wj = hbm_roofline_words(m, k, n, "jnp")
+        wp = hbm_roofline_words(m, k, n, "pallas")
+        emit(f"kernel_backend_jnp_{m}x{k}x{n}", us_j,
+             f"hbm_words={wj:.0f}")
+        emit(f"kernel_backend_pallas_interp_{m}x{k}x{n}", us_p,
+             f"hbm_words={wp:.0f};hbm_reduction={wj / wp:.3f}x;"
+             f"bitwise_vs_jnp={int(bitwise)}")
 
 
 if __name__ == "__main__":

@@ -5,11 +5,21 @@ subprocesses with 8 fake XLA devices so this process keeps 1 device.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3_comm_vs_gen,...]
                                             [--smoke] [--out bench.json]
+                                            [--compare BASELINE.json ...]
 
 ``--smoke`` sets REPRO_BENCH_SMOKE=1: every suite runs tiny shapes and
 minimal iters (the CI bench-smoke job).  ``--out`` additionally writes the
-parsed rows as JSON — the artifact CI uploads so the perf trajectory
-(BENCH_*.json) is machine-produced, not hand-pasted.
+parsed rows as JSON — the artifact CI persists as ``BENCH_<PR>.json`` so
+the perf trajectory is machine-produced, not hand-pasted; the committed
+trend line lives in ``benchmarks/trends/``.
+
+``--compare A.json [B.json]`` renders a trend table.  With two paths it is
+a pure post-processing mode (no suites run): A is the baseline, B the
+current run.  With one path the baseline is compared against the suites
+just executed.  Wall-time ratios are informational (CI runners vary);
+the comparison FAILS (exit 1) only on *coverage* regressions — a suite
+that existed in the baseline but is now missing, failing, or empty — or
+when ``--fail-ratio`` is given and a row slows past it.
 """
 from __future__ import annotations
 
@@ -22,6 +32,57 @@ import sys
 import traceback
 
 
+def load_results(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(baseline: dict, current: dict,
+            fail_ratio: float | None = None) -> int:
+    """Print a per-row trend table; return a process exit code."""
+    base_suites = baseline.get("suites", {})
+    cur_suites = current.get("suites", {})
+    failures = []
+    print(f"# trend vs baseline (smoke={baseline.get('smoke')}"
+          f" -> {current.get('smoke')})")
+    print("suite,row,base_us,cur_us,ratio")
+    for sname, bsuite in sorted(base_suites.items()):
+        csuite = cur_suites.get(sname)
+        if csuite is None:
+            failures.append(f"suite {sname!r} disappeared")
+            continue
+        if bsuite.get("ok") and not csuite.get("ok"):
+            failures.append(f"suite {sname!r} now failing")
+        if bsuite.get("rows") and not csuite.get("rows"):
+            failures.append(f"suite {sname!r} lost all rows")
+        cur_rows = {r["name"]: r for r in csuite.get("rows", [])}
+        for row in bsuite.get("rows", []):
+            cur = cur_rows.get(row["name"])
+            if cur is None:
+                print(f"{sname},{row['name']},{row['us_per_call']:.1f},"
+                      f"MISSING,-")
+                continue
+            ratio = (cur["us_per_call"] / row["us_per_call"]
+                     if row["us_per_call"] else float("inf"))
+            print(f"{sname},{row['name']},{row['us_per_call']:.1f},"
+                  f"{cur['us_per_call']:.1f},{ratio:.2f}")
+            # zero/degenerate baselines carry no trend signal: report the
+            # inf ratio but never fail on it
+            if (fail_ratio is not None and row["us_per_call"] > 0
+                    and ratio > fail_ratio):
+                failures.append(
+                    f"{sname}/{row['name']} slowed {ratio:.2f}x "
+                    f"(> {fail_ratio}x)")
+    for sname in sorted(set(cur_suites) - set(base_suites)):
+        for row in cur_suites[sname].get("rows", []):
+            print(f"{sname},{row['name']},NEW,{row['us_per_call']:.1f},-")
+    if failures:
+        print(f"# trend compare FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("# trend compare OK", file=sys.stderr)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -30,7 +91,20 @@ def main() -> None:
                     help="tiny-shapes smoke mode (REPRO_BENCH_SMOKE=1)")
     ap.add_argument("--out", default=None,
                     help="write suite rows as JSON to this path")
+    ap.add_argument("--compare", nargs="+", default=None, metavar="JSON",
+                    help="baseline JSON (and optionally a current JSON for "
+                         "pure post-processing) to trend-compare against")
+    ap.add_argument("--fail-ratio", type=float, default=None,
+                    help="fail when a row slows past this ratio "
+                         "(default: wall times informational only)")
     args = ap.parse_args()
+    if args.compare and len(args.compare) > 2:
+        ap.error("--compare takes at most two JSON paths")
+    if args.compare and len(args.compare) == 2:
+        # pure post-processing: baseline vs an existing result file
+        sys.exit(compare(load_results(args.compare[0]),
+                         load_results(args.compare[1]),
+                         args.fail_ratio))
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
@@ -84,16 +158,23 @@ def main() -> None:
                              "derived": parts[2]})
         results[name] = {"ok": ok, "rows": rows}
 
+    payload = {"schema": 1, "smoke": args.smoke, "suites": results}
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"schema": 1, "smoke": args.smoke,
-                       "suites": results}, f, indent=1)
+            json.dump(payload, f, indent=1)
         print(f"# wrote {args.out}", file=sys.stderr)
+
+    rc = 0
+    if args.compare:
+        rc = compare(load_results(args.compare[0]), payload,
+                     args.fail_ratio)
 
     if failed:
         print(f"# {len(failed)} suites FAILED: {[n for n, _ in failed]}",
               file=sys.stderr)
         sys.exit(1)
+    if rc:
+        sys.exit(rc)
 
 
 if __name__ == "__main__":

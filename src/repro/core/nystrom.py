@@ -97,24 +97,30 @@ def relative_error(A, B, C, rcond: Optional[float] = None):
 # First stage (shared): B_i = A_i·Omega on a 1-D row-sharded layout
 # ---------------------------------------------------------------------------
 
-def _sketch_rows_1d(A, seed, r: int, mesh: Mesh, axis: str, kind: str):
+def _sketch_rows_1d(A, seed, r: int, mesh: Mesh, axis: str, kind: str,
+                    backend: str = "jnp", blocks=None):
     """B = A·Omega with A row-sharded; every rank regenerates the full Omega
     (zero communication — the Case-1 grid p=(P,1,1) of Alg. 1)."""
     keys = jnp.stack(seed_keys(seed))
-    return _sketch_rows_1d_prog(r, mesh, axis, kind)(A, keys)
+    return _sketch_rows_1d_prog(r, mesh, axis, kind, backend, blocks)(A, keys)
 
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
-def _sketch_rows_1d_prog(r: int, mesh: Mesh, axis: str, kind: str):
+def _sketch_rows_1d_prog(r: int, mesh: Mesh, axis: str, kind: str,
+                         backend: str = "jnp", blocks=None):
+    from repro.kernels.local import sketch_block
+
     def impl(A, keys):
-        n2 = A.shape[1]
-
         def body(a_i):                            # a_i: (n/P, n2)
-            om = omega_tile(keys, 0, 0, n2, r, kind, a_i.dtype)
-            return a_i @ om                       # (n/P, r) — no comm
+            # full Omega consumed locally; the pallas backend never
+            # materializes it in HBM (kernels/local.py)
+            return sketch_block(a_i, keys, r, kind=kind, backend=backend,
+                                blocks=blocks)    # (n/P, r) — no comm
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         return shard_map(body, mesh=mesh,
-                         in_specs=P(axis, None), out_specs=P(axis, None))(A)
+                         in_specs=P(axis, None), out_specs=P(axis, None),
+                         **kw)(A)
 
     return jax.jit(impl)
 
@@ -127,25 +133,33 @@ def _sketch_rows_1d_prog(r: int, mesh: Mesh, axis: str, kind: str):
 
 def nystrom_second_stage_no_redist(B, seed, r: int, mesh: Mesh,
                                    axis: str = X_AXIS, kind: str = "normal",
-                                   salt: int = 0):
+                                   salt: int = 0, backend: str = "jnp",
+                                   blocks=None):
     """No-Redist second stage: C = Omega^T·B with B row-sharded (§5.3).
 
     Each rank forms the partial product Omega_i^T·B_i against its local row
     block and one Reduce-Scatter of r^2 words produces C row-sharded —
     B never moves.  Omega_i is regenerated from global coordinates, so this
     composes bitwise with any producer of B (one-shot or streamed).
+    ``backend``: local GEMM body (kernels/local.py) — the pallas backend
+    keeps Omega_i out of HBM too.
     """
+    from repro.kernels.local import resolve_backend
     Pn = mesh.shape[axis]
     n = B.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
     keys = jnp.stack(seed_keys(seed))
-    return _second_stage_no_redist_prog(r, mesh, axis, kind, salt)(B, keys)
+    return _second_stage_no_redist_prog(
+        r, mesh, axis, kind, salt, resolve_backend(backend),
+        None if blocks is None else tuple(blocks))(B, keys)
 
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
 def _second_stage_no_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
-                                 salt: int):
+                                 salt: int, backend: str = "jnp",
+                                 blocks=None):
+    from repro.kernels.local import sketch_t_block
     Pn = mesh.shape[axis]
 
     def impl(B, keys):
@@ -153,53 +167,59 @@ def _second_stage_no_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
 
         def body(b_i):                            # b_i: (n/P, r2)
             i = jax.lax.axis_index(axis)
-            om_i = omega_tile(keys, i * rows, 0, rows, r, kind, b_i.dtype,
-                              salt=salt)
-            c_part = om_i.T @ b_i                 # (r, r2) partial sum
+            c_part = sketch_t_block(b_i, keys, r, row0=i * rows, kind=kind,
+                                    salt=salt, backend=backend,
+                                    blocks=blocks)    # (r, r2) partial sum
             return jax.lax.psum_scatter(c_part, axis, scatter_dimension=0,
                                         tiled=True)   # (r/P, r2)
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         return shard_map(body, mesh=mesh,
-                         in_specs=P(axis, None), out_specs=P(axis, None))(B)
+                         in_specs=P(axis, None), out_specs=P(axis, None),
+                         **kw)(B)
 
     return jax.jit(impl)
 
 
 def nystrom_second_stage_redist(B, seed, r: int, mesh: Mesh,
                                 axis: str = X_AXIS, kind: str = "normal",
-                                salt: int = 0):
+                                salt: int = 0, backend: str = "jnp",
+                                blocks=None):
     """Redist second stage: re-lay out B and finish locally (§5.3).
 
     One All-to-All moves nr/P words per processor (row-shard -> column-shard
     re-layout of B); the product C = Omega^T·B is then entirely local.
     Returns (B column-sharded, C column-sharded).
     """
+    from repro.kernels.local import resolve_backend
     Pn = mesh.shape[axis]
     n = B.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
     keys = jnp.stack(seed_keys(seed))
-    return _second_stage_redist_prog(r, mesh, axis, kind, salt)(B, keys)
+    return _second_stage_redist_prog(
+        r, mesh, axis, kind, salt, resolve_backend(backend),
+        None if blocks is None else tuple(blocks))(B, keys)
 
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
 def _second_stage_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
-                              salt: int):
-    def impl(B, keys):
-        n = B.shape[0]
+                              salt: int, backend: str = "jnp", blocks=None):
+    from repro.kernels.local import sketch_t_block
 
+    def impl(B, keys):
         def body(b_i):                            # b_i: (n/P, r)
             # Redistribute B: rows-sharded -> cols-sharded (All-to-All).
             b_k = jax.lax.all_to_all(b_i, axis, split_axis=1, concat_axis=0,
                                      tiled=True)  # (n, r/P)
-            om = omega_tile(keys, 0, 0, n, r, kind, b_k.dtype,
-                            salt=salt)                       # full Omega
-            c_k = om.T @ b_k                      # (r, r/P) — local
-            return b_k, c_k
+            c_k = sketch_t_block(b_k, keys, r, kind=kind, salt=salt,
+                                 backend=backend, blocks=blocks)
+            return b_k, c_k                       # (r, r/P) — local
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         return shard_map(body, mesh=mesh,
                          in_specs=P(axis, None),
-                         out_specs=(P(None, axis), P(None, axis)))(B)
+                         out_specs=(P(None, axis), P(None, axis)), **kw)(B)
 
     return jax.jit(impl)
 
@@ -209,19 +229,25 @@ def _second_stage_redist_prog(r: int, mesh: Mesh, axis: str, kind: str,
 # ---------------------------------------------------------------------------
 
 def nystrom_no_redist(A, seed, r: int, mesh: Mesh,
-                      axis: str = X_AXIS, kind: str = "normal"):
+                      axis: str = X_AXIS, kind: str = "normal",
+                      backend: str = "auto", blocks=None):
     """Paper's No-Redist variant.
 
     in : A row-sharded P(x, None)
     out: B row-sharded P(x, None); C row-sharded P(x, None)
     comm: one Reduce-Scatter of r^2 words (the (1-1/P)·r^2 term).
+    backend: local GEMM body for both stages (kernels/local.py).
     """
+    from repro.kernels.local import resolve_backend
+    backend = resolve_backend(backend)
+    blocks = None if blocks is None else tuple(blocks)
     Pn = mesh.shape[axis]
     n = A.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
-    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind)
-    C = nystrom_second_stage_no_redist(B, seed, r, mesh, axis, kind)
+    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind, backend, blocks)
+    C = nystrom_second_stage_no_redist(B, seed, r, mesh, axis, kind,
+                                       backend=backend, blocks=blocks)
     return B, C
 
 
@@ -230,20 +256,26 @@ def nystrom_no_redist(A, seed, r: int, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def nystrom_redist(A, seed, r: int, mesh: Mesh,
-                   axis: str = X_AXIS, kind: str = "normal"):
+                   axis: str = X_AXIS, kind: str = "normal",
+                   backend: str = "auto", blocks=None):
     """Paper's Redist variant.
 
     in : A row-sharded P(x, None)
     out: B column-sharded P(None, x); C column-sharded P(None, x)
     comm: one All-to-All moving nr/P words per processor (B row-shard ->
     column-shard re-layout), second multiply fully local.
+    backend: local GEMM body for both stages (kernels/local.py).
     """
+    from repro.kernels.local import resolve_backend
+    backend = resolve_backend(backend)
+    blocks = None if blocks is None else tuple(blocks)
     Pn = mesh.shape[axis]
     n = A.shape[0]
     if n % Pn or r % Pn:
         raise ValueError(f"n={n}, r={r} must divide P={Pn}")
-    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind)
-    return nystrom_second_stage_redist(B, seed, r, mesh, axis, kind)
+    B = _sketch_rows_1d(A, seed, r, mesh, axis, kind, backend, blocks)
+    return nystrom_second_stage_redist(B, seed, r, mesh, axis, kind,
+                                       backend=backend, blocks=blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -253,7 +285,8 @@ def nystrom_redist(A, seed, r: int, mesh: Mesh,
 def nystrom_general(A, seed: int, r: int, mesh: Mesh,
                     p_axes: Tuple[str, str, str] = DEFAULT_AXES,
                     q_axes: Optional[Tuple[str, str, str]] = None,
-                    kind: str = "normal"):
+                    kind: str = "normal", backend: str = "auto",
+                    blocks=None):
     """Alg. 2 on arbitrary (p1,p2,p3) / (q1,q2,q3) grids over one mesh.
 
     Stage 1 is Alg. 1 (``rand_matmul``).  The ``Redistribute`` of §5.2 is
@@ -261,8 +294,10 @@ def nystrom_general(A, seed: int, r: int, mesh: Mesh,
     collective-permute exactly where the paper's algorithm places it.
     Stage 2 (C = Omega^T B) mirrors Alg. 1 with the roles of the grid axes
     shifted: all-gather B over q2, generate Omega_{i'j'}, local GEMM,
-    reduce-scatter C over q1.
+    reduce-scatter C over q1.  ``backend`` selects the local GEMM body for
+    both stages (kernels/local.py).
     """
+    from repro.kernels.local import resolve_backend
     q_axes = tuple(q_axes or p_axes)
     p_axes = tuple(p_axes)
     q1, q2, q3 = (mesh.shape[a] for a in q_axes)
@@ -271,19 +306,24 @@ def nystrom_general(A, seed: int, r: int, mesh: Mesh,
         raise ValueError(f"(n={n}, r={r}) not divisible by q-grid "
                          f"({q1},{q2},{q3})")
     keys = jnp.stack(seed_keys(seed))
-    return _nystrom_general_prog(r, mesh, p_axes, q_axes, kind)(A, keys)
+    return _nystrom_general_prog(
+        r, mesh, p_axes, q_axes, kind, resolve_backend(backend),
+        None if blocks is None else tuple(blocks))(A, keys)
 
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
 def _nystrom_general_prog(r: int, mesh: Mesh,
                           p_axes: Tuple[str, str, str],
-                          q_axes: Tuple[str, str, str], kind: str):
+                          q_axes: Tuple[str, str, str], kind: str,
+                          backend: str = "jnp", blocks=None):
+    from repro.kernels.local import sketch_t_block
     a1, a2, a3 = q_axes
     q1, q2, q3 = (mesh.shape[a] for a in q_axes)
 
     def impl(A, keys):
         n = A.shape[0]
-        B = rand_matmul(A, keys, r, mesh, axes=p_axes, kind=kind)
+        B = rand_matmul(A, keys, r, mesh, axes=p_axes, kind=kind,
+                        backend=backend, blocks=blocks)
 
         # Redistribute B into the stage-2 layout: rows over q1, cols over
         # (q3, q2) — each block B_{i'k'} split column-wise across q2.
@@ -296,17 +336,18 @@ def _nystrom_general_prog(r: int, mesh: Mesh,
             i = jax.lax.axis_index(a1)
             j = jax.lax.axis_index(a2)
             b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
-            om = omega_tile(keys, i * om_rows, j * om_cols,
-                            om_rows, om_cols, kind, b_ik.dtype)
-            c_part = om.T @ b_ik                  # (r/q2, r/q3) partial
-            if q1 == 1:
+            c_part = sketch_t_block(b_ik, keys, om_cols, row0=i * om_rows,
+                                    col0=j * om_cols, kind=kind,
+                                    backend=backend, blocks=blocks)
+            if q1 == 1:                           # (r/q2, r/q3) partial
                 return c_part
             return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
                                         tiled=True)
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         C = shard_map(stage2, mesh=mesh,
                       in_specs=P(a1, (a3, a2)),
-                      out_specs=P((a2, a1), a3))(B)
+                      out_specs=P((a2, a1), a3), **kw)(B)
         return B, C
 
     return jax.jit(impl)
@@ -334,7 +375,8 @@ def _two_grid_devices(mesh, devices):
 
 def nystrom_second_stage_two_grid(B, seed, r: int, q: Tuple[int, int, int],
                                   mesh: Optional[Mesh] = None, devices=None,
-                                  kind: str = "normal", salt: int = 0):
+                                  kind: str = "normal", salt: int = 0,
+                                  backend: str = "auto", blocks=None):
     """Stage 2 of Alg. 2 on an arbitrary (q1, q2, q3) grid (§5.3).
 
     Accepts B = A·Omega in ANY sharding (one-shot stage-1 output or a
@@ -347,8 +389,10 @@ def nystrom_second_stage_two_grid(B, seed, r: int, q: Tuple[int, int, int],
     Returns (B sharded P(q1, (q3, q2)), C sharded P((q2, q1), q3)) on the
     q-grid mesh.  Bitwise note: with q1 == 1 the stage-2 contraction is
     never split, so C is blockwise-bitwise against the single-device
-    reference (given a bitwise B).
+    reference (given a bitwise B).  ``backend`` selects the local GEMM
+    body (kernels/local.py) — both backends honor the bitwise note.
     """
+    from repro.kernels.local import resolve_backend
     q1, q2, q3 = (int(x) for x in q)
     n = B.shape[0]
     if B.shape[1] != r:
@@ -363,12 +407,16 @@ def nystrom_second_stage_two_grid(B, seed, r: int, q: Tuple[int, int, int],
     B = jax.device_put(
         B, NamedSharding(mesh_q, P(Q_AXES[0], (Q_AXES[2], Q_AXES[1]))))
     keys = jnp.stack(seed_keys(seed))
-    C = _two_grid_stage2_prog(r, mesh_q, kind, salt)(B, keys)
+    C = _two_grid_stage2_prog(
+        r, mesh_q, kind, salt, resolve_backend(backend),
+        None if blocks is None else tuple(blocks))(B, keys)
     return B, C
 
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
-def _two_grid_stage2_prog(r: int, mesh: Mesh, kind: str, salt: int):
+def _two_grid_stage2_prog(r: int, mesh: Mesh, kind: str, salt: int,
+                          backend: str = "jnp", blocks=None):
+    from repro.kernels.local import sketch_t_block
     a1, a2, a3 = Q_AXES
     q1, q2, q3 = (mesh.shape[a] for a in Q_AXES)
 
@@ -384,17 +432,18 @@ def _two_grid_stage2_prog(r: int, mesh: Mesh, kind: str, salt: int):
                 b_ik = b_blk
             else:
                 b_ik = jax.lax.all_gather(b_blk, a2, axis=1, tiled=True)
-            om = omega_tile(keys, i * om_rows, j * om_cols,
-                            om_rows, om_cols, kind, b_ik.dtype, salt=salt)
-            c_part = om.T @ b_ik                  # (r/q2, r/q3) partial
-            if q1 == 1:
+            c_part = sketch_t_block(b_ik, keys, om_cols, row0=i * om_rows,
+                                    col0=j * om_cols, kind=kind, salt=salt,
+                                    backend=backend, blocks=blocks)
+            if q1 == 1:                           # (r/q2, r/q3) partial
                 return c_part
             return jax.lax.psum_scatter(c_part, a1, scatter_dimension=0,
                                         tiled=True)
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         return shard_map(body, mesh=mesh,
                          in_specs=P(a1, (a3, a2)),
-                         out_specs=P((a2, a1), a3))(B)
+                         out_specs=P((a2, a1), a3), **kw)(B)
 
     return jax.jit(impl)
 
@@ -402,7 +451,8 @@ def _two_grid_stage2_prog(r: int, mesh: Mesh, kind: str, salt: int):
 def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
                      p: Tuple[int, int, int] = None,
                      q: Tuple[int, int, int] = None,
-                     kind: str = "normal", devices=None):
+                     kind: str = "normal", devices=None,
+                     backend: str = "auto", blocks=None):
     """Alg. 2 with stage 1 on grid ``p`` and stage 2 on grid ``q`` (§5.3).
 
     The grids are independent factorizations of the same P devices (taken
@@ -437,9 +487,11 @@ def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
     devices = _two_grid_devices(mesh, devices)
     mesh_p = make_grid_mesh(*p, devices=devices)
     A = jax.device_put(A, input_sharding(mesh_p))
-    B = rand_matmul(A, seed, r, mesh_p, kind=kind)
+    B = rand_matmul(A, seed, r, mesh_p, kind=kind, backend=backend,
+                    blocks=blocks)
     return nystrom_second_stage_two_grid(B, seed, r, q, devices=devices,
-                                         kind=kind)
+                                         kind=kind, backend=backend,
+                                         blocks=blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -447,7 +499,8 @@ def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
 # ---------------------------------------------------------------------------
 
 def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
-                 kind: str = "normal", plan=None):
+                 kind: str = "normal", plan=None, backend: str = "auto",
+                 blocks=None):
     """Run the paper-preferred variant on a 1-D mesh over all devices.
 
     variant:
@@ -461,7 +514,9 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
         executable factorization pair when the ideal grids do not divide
         (``core.grid.select_two_grid_executable``);
       * ``"redist"`` / ``"no_redist"`` — explicit.
-    plan: a precomputed :class:`repro.plan.Plan` (wins over ``variant``).
+    plan: a precomputed :class:`repro.plan.Plan` (wins over ``variant``;
+    its backend decision also wins over the ``backend`` arg).
+    backend: local GEMM body for every stage (kernels/local.py).
     """
     devices = devices if devices is not None else jax.devices()
     Pn = len(devices)
@@ -475,10 +530,14 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
                 f"plan {plan.variant!r} for dims={plan.dims}, "
                 f"P={plan.n_procs} is analytic-only (no executable grid "
                 f"pair divides the shape)")
+        backend = getattr(plan, "backend", backend) or backend
+        if plan.blocks and plan.variant != "pallas_fused":
+            blocks = tuple(plan.blocks[k] for k in ("bm", "bn", "bk"))
         if plan.variant == "alg2_bound_driven":
             B, C = nystrom_two_grid(A, seed, r,
                                     p=plan.grid, q=plan.q_grid, kind=kind,
-                                    devices=list(devices[: plan.n_procs]))
+                                    devices=list(devices[: plan.n_procs]),
+                                    backend=backend, blocks=blocks)
             mesh_q = make_grid_mesh(*plan.q_grid, axis_names=Q_AXES,
                                     devices=list(devices[: plan.n_procs]))
             return B, C, mesh_q, "bound_driven"
@@ -500,7 +559,8 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
                              f"change P")
         p, q, _exact = got
         B, C = nystrom_two_grid(A, seed, r, p=p, q=q, kind=kind,
-                                devices=list(devices))
+                                devices=list(devices), backend=backend,
+                                blocks=blocks)
         mesh_q = make_grid_mesh(*q, axis_names=Q_AXES, devices=list(devices))
         return B, C, mesh_q, "bound_driven"
     if variant == "auto":
@@ -508,9 +568,11 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
     mesh = Mesh(np.asarray(devices), (X_AXIS,))
     A = jax.device_put(A, NamedSharding(mesh, P(X_AXIS, None)))
     if variant == "no_redist":
-        B, C = nystrom_no_redist(A, seed, r, mesh, kind=kind)
+        B, C = nystrom_no_redist(A, seed, r, mesh, kind=kind,
+                                 backend=backend, blocks=blocks)
     elif variant == "redist":
-        B, C = nystrom_redist(A, seed, r, mesh, kind=kind)
+        B, C = nystrom_redist(A, seed, r, mesh, kind=kind,
+                              backend=backend, blocks=blocks)
     else:
         raise ValueError(variant)
     return B, C, mesh, variant

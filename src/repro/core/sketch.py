@@ -130,7 +130,8 @@ def rand_matmul(A, seed, r: int, mesh: Mesh,
                 axes: Tuple[str, str, str] = DEFAULT_AXES,
                 kind: str = "normal",
                 scale: Optional[float] = None,
-                precision=None, salt: int = 0):
+                precision=None, salt: int = 0,
+                backend: str = "auto", blocks=None):
     """B = A @ Omega on the (p1, p2, p3) grid ``mesh`` (paper Alg. 1).
 
     A must be shardable as P(p1, (p2, p3)); the result is sharded
@@ -138,12 +139,23 @@ def rand_matmul(A, seed, r: int, mesh: Mesh,
     tiled Reduce-Scatter over p2 — matching the paper's optimal bandwidth
     ``(1-1/p3)·n1n2/(p1p2) + (1-1/p2)·n1r/(p1p3)`` exactly.
 
+    ``backend`` selects the *local* GEMM body (``repro.kernels.local``):
+    ``"jnp"`` materializes the per-shard Omega block in HBM; ``"pallas"``
+    generates it in VMEM inside the fused kernel, dropping the n2·r/(p2·p3)
+    HBM stream — the memory-roofline analogue of the zero-communication
+    claim; ``"auto"`` picks pallas on TPU.  Both backends are bitwise-
+    identical wherever the local contraction is not tiled (the interpret-
+    mode default — see kernels/local.py).  ``blocks`` optionally fixes the
+    Pallas (bm, bn, bk) tile shape (autotunable via plan.autotune).
+
     The compiled program is cached per (r, mesh, axes, kind, scale,
-    precision) with the seed *traced* as a Philox key pair, so repeated
-    calls — any seed, any A of the same shape — reuse one executable.
-    (Eager ``shard_map`` would otherwise pay a per-primitive SPMD dispatch
-    on every call, which is minutes for the Philox graph.)
+    precision, backend, blocks) with the seed *traced* as a Philox key
+    pair, so repeated calls — any seed, any A of the same shape — reuse
+    one executable.  (Eager ``shard_map`` would otherwise pay a
+    per-primitive SPMD dispatch on every call, which is minutes for the
+    Philox graph.)
     """
+    from repro.kernels.local import resolve_backend
     ax1, ax2, ax3 = axes
     p1, p2, p3 = (mesh.shape[a] for a in axes)
     n1, n2 = A.shape
@@ -156,7 +168,8 @@ def rand_matmul(A, seed, r: int, mesh: Mesh,
     keys = jnp.stack(seed_keys(seed))
     fn = _rand_matmul_prog(r, mesh, tuple(axes), kind,
                            None if scale is None else float(scale),
-                           precision, salt)
+                           precision, salt, resolve_backend(backend),
+                           None if blocks is None else tuple(blocks))
     return fn(A, keys)
 
 
@@ -167,7 +180,9 @@ _PROG_CACHE_SIZE = 64
 
 @functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
 def _rand_matmul_prog(r: int, mesh: Mesh, axes: Tuple[str, str, str],
-                      kind: str, scale, precision, salt: int):
+                      kind: str, scale, precision, salt: int,
+                      backend: str = "jnp", blocks=None):
+    from repro.kernels.local import sketch_block
     ax1, ax2, ax3 = axes
     p2 = mesh.shape[ax2]
     p3 = mesh.shape[ax3]
@@ -185,29 +200,31 @@ def _rand_matmul_prog(r: int, mesh: Mesh, axes: Tuple[str, str, str],
                 a_ij = a_blk                  # regime-1 grids: no collective
             else:
                 a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
-            # Regenerate Omega_jk locally — zero communication.
-            om = omega_tile(keys, j * blk_rows, k * blk_cols,
-                            blk_rows, blk_cols, kind, a_ij.dtype, salt=salt)
-            if scale is not None:
-                om = om * jnp.asarray(scale, a_ij.dtype)
-            b_partial = jnp.matmul(a_ij, om, precision=precision)
+            # Regenerate Omega_jk locally — zero communication.  The
+            # backend decides whether the block lives in HBM (jnp) or only
+            # in VMEM inside the fused kernel (pallas).
+            b_partial = sketch_block(
+                a_ij, keys, blk_cols, row0=j * blk_rows, col0=k * blk_cols,
+                kind=kind, salt=salt, scale=scale, precision=precision,
+                backend=backend, blocks=blocks)
             # Reduce-Scatter B_ik over the p2 fiber (tiled along rows).
             if p2 == 1:
                 return b_partial
             return jax.lax.psum_scatter(b_partial, ax2, scatter_dimension=0,
                                         tiled=True)
 
+        kw = {} if backend == "jnp" else {"check_rep": False}
         return shard_map(
             body, mesh=mesh,
             in_specs=P(ax1, (ax2, ax3)),
-            out_specs=P((ax1, ax2), ax3))(A)
+            out_specs=P((ax1, ax2), ax3), **kw)(A)
 
     return jax.jit(impl)
 
 
 def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
                      kind: str = "normal", devices=None, grid="auto",
-                     plan=None):
+                     plan=None, backend: str = "auto", blocks=None):
     """Alg. 1 with the grid chosen automatically.
 
     grid:
@@ -217,7 +234,9 @@ def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
       * ``"plan"`` — full cost-model dispatch via :mod:`repro.plan`
         (equivalent to passing ``plan=plan_sketch(...)``);
       * an explicit ``(p1, p2, p3)`` tuple.
-    plan: a precomputed :class:`repro.plan.Plan` (wins over ``grid``).
+    plan: a precomputed :class:`repro.plan.Plan` (wins over ``grid``; its
+    backend/blocks decision also wins over the ``backend``/``blocks`` args).
+    backend: local GEMM backend (see :func:`rand_matmul`).
 
     Returns (B, MatmulGrid, mesh).
     """
@@ -237,6 +256,9 @@ def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
                 f"divides the shape)")
         if plan.variant == "alg1" and plan.grid is not None:
             grid = plan.grid
+            backend = getattr(plan, "backend", backend) or backend
+            if plan.blocks:
+                blocks = tuple(plan.blocks[k] for k in ("bm", "bn", "bk"))
         elif plan.variant == "local_xla":
             grid = (1, 1, 1)          # degenerate Alg.-1 grid, same GEMM
         else:
@@ -267,7 +289,8 @@ def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
                        alg1_latency_hops(p2, p3))
     mesh = make_grid_mesh(g.p1, g.p2, g.p3, devices=devices)
     A = jax.device_put(A, input_sharding(mesh))
-    return rand_matmul(A, seed, r, mesh, kind=kind), g, mesh
+    return rand_matmul(A, seed, r, mesh, kind=kind, backend=backend,
+                       blocks=blocks), g, mesh
 
 
 # ---------------------------------------------------------------------------

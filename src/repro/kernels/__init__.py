@@ -7,4 +7,7 @@ from .ops import (  # noqa: F401
 from .sketch_matmul import (  # noqa: F401
     gen_omega_pallas, sketch_matmul_pallas, sketch_t_matmul_pallas,
 )
-from . import ref  # noqa: F401
+from .local import (  # noqa: F401
+    resolve_backend, sketch_block, sketch_t_block,
+)
+from . import local, ref  # noqa: F401

@@ -1,0 +1,406 @@
+"""Offset-aware fused local GEMM backends for every distributed hot path.
+
+The paper's Theorems 2/3 remove Omega from the *network*; the Pallas
+kernels remove it from *HBM*.  Until now only the single-device entry
+points (``kernels/ops.py``) got the fused treatment — every shard_map body
+(Alg. 1's ``rand_matmul``, both Nyström stages, the streaming updates)
+still materialized its per-shard Omega block via ``omega_tile`` and paid
+the full ``n1·n2 + n2·r + n1·r`` local HBM traffic.  This module closes
+that gap: it exposes the two local GEMM bodies those paths need,
+
+  * ``sketch_block``    —  acc? + A · Omega[row0:, col0:col0+cols]
+  * ``sketch_t_block``  —  acc? + Omega[row0:, col0:col0+cols]^T · B
+
+with the Omega (or Psi) tile generated at *global* Philox coordinates —
+``row0``/``col0`` and the key pair may be **traced** (they are
+``axis_index`` products inside shard_map bodies), entering the kernel as
+scalar-prefetch operands.  ``acc`` fuses the streaming accumulation
+``Y += H·Omega`` into the kernel accumulator so Y makes one HBM round trip
+(read into VMEM at k==0, written at the flush) instead of two.
+
+Backends:
+
+  * ``"jnp"``    — the expression the shard_map bodies have always
+                   inlined (``omega_tile`` + ``jnp.matmul``), normalized
+                   to f32 accumulation: bit-identical to the historical
+                   bodies for f32 inputs; for bf16 inputs the historical
+                   bodies accumulated in bf16 (see the jnp-backend
+                   section below).  The reference semantics.
+  * ``"pallas"`` — the fused kernel; native on TPU, interpret mode
+                   elsewhere (a correctness tool, not a fast path).
+  * ``"auto"``   — ``"pallas"`` on TPU, else ``"jnp"``.
+
+Bitwise contract (pinned by tests/test_local_backend.py): whenever the
+contraction dimension is not tiled (``nsteps_k == 1`` — guaranteed by the
+default block policy in interpret mode, which takes the whole operand as
+one tile), the Pallas backend reproduces the jnp backend bit for bit: the
+Irwin–Hall generator makes the Omega *entries* invariant to tiling and
+compilation context (core/rng.py), and an un-split ``lax.dot`` on the same
+f32 operands is the same reduction.  Tilings that split the contraction
+agree to f32 reduction order (~1e-6), same as any re-blocked GEMM.
+
+HBM roofline (the point): per local GEMM the jnp backend touches
+``m·k + k·n + m·n`` words (+ ``2·m·n`` more for a read-modify-write
+accumulation); the fused backend touches ``m·k + m·n`` — the ``k·n``
+Omega stream never exists.  ``plan.model`` prices both so the planner
+picks the backend analytically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.core.sketch import omega_tile, seed_keys
+
+BACKENDS = ("jnp", "pallas", "auto")
+
+
+def resolve_backend(backend: str) -> str:
+    """Normalize a backend knob to a concrete backend name.
+
+    ``auto`` resolves to the fused Pallas path only where it is a fast
+    path (native TPU); everywhere else the jnp body is both the fastest
+    and the reference-bitwise choice.  ``xla`` is accepted as an alias of
+    ``jnp`` (the streaming accumulator's historical name for it).
+    """
+    if backend in ("xla", None):
+        return "jnp"
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} (want jnp|pallas|auto)")
+    return backend
+
+
+def _interpret() -> bool:
+    """Pallas interpret mode everywhere but native TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# VMEM budget for the default (no explicit ``blocks``) native-TPU tiling;
+# deliberately below the physical per-core VMEM so double buffering fits.
+_VMEM_BUDGET = 12 * 2 ** 20
+
+
+def vmem_fit_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Resident VMEM bytes of one fused-GEMM tile set: the A (or B) panel,
+    the generated Omega tile, and the f32 accumulator + output tile.
+    Single source of truth for the default block policy here and the
+    autotuner's block-sweep filter (plan/autotune.py)."""
+    return itemsize * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def default_local_blocks(m: int, n: int, k: int,
+                         interpret: bool) -> tuple:
+    """(bm, bn, bk) for a local fused GEMM.
+
+    Interpret mode: one exact tile — no padding, no k split — so the
+    kernel performs literally the same single ``lax.dot`` as the jnp
+    body (the bitwise default the backend matrix tests pin).  Native TPU:
+    MXU-aligned tiles shrunk to the VMEM budget, splitting m then n and
+    only then the contraction (k splits cost the bitwise property).
+    """
+    if interpret:
+        return (m, n, k)
+    bm, bn, bk = _round_up(m, 8), _round_up(n, 128), _round_up(k, 128)
+
+    def fit(bm, bn, bk):
+        return vmem_fit_bytes(bm, bn, bk) <= _VMEM_BUDGET
+
+    while not fit(bm, bn, bk) and bm > 256:
+        bm = _round_up(bm // 2, 8)
+    while not fit(bm, bn, bk) and bn > 256:
+        bn = _round_up(bn // 2, 128)
+    while not fit(bm, bn, bk) and bk > 512:
+        bk = _round_up(bk // 2, 128)
+    return (bm, bn, bk)
+
+
+# ---------------------------------------------------------------------------
+# jnp backend — the expression the shard_map bodies always inlined, with
+# one deliberate normalization: accumulation is f32 on every input dtype
+# (Omega drawn at f32, operands upcast, output cast back).  For f32 inputs
+# — the dtype every bitwise contract in this repo covers — this is
+# bit-identical to the historical inline bodies (astype is the identity);
+# for sub-f32 inputs (bf16) the historical bodies quantized Omega to the
+# input dtype and accumulated there, so their bits differ from this path.
+# The normalization is what makes the two backends comparable at all:
+# the Pallas kernel accumulates in f32 by construction (MXU), and the
+# backend-parity matrix (tests/test_local_backend.py) pins jnp == pallas
+# bitwise for bf16 under exactly this rule.
+# ---------------------------------------------------------------------------
+
+def _omega_f32(seed, row0, col0, rows: int, cols: int, kind: str, salt: int,
+               scale):
+    om = omega_tile(seed, row0, col0, rows, cols, kind, jnp.float32,
+                    salt=salt)
+    if scale is not None:
+        om = om * jnp.float32(scale)
+    return om
+
+
+def _sketch_block_jnp(A, seed, cols, row0, col0, kind, salt, scale,
+                      precision, acc, out_dtype):
+    om = _omega_f32(seed, row0, col0, A.shape[1], cols, kind, salt, scale)
+    out = jnp.matmul(A.astype(jnp.float32), om, precision=precision)
+    if acc is not None:
+        out = acc.astype(jnp.float32) + out
+    return out.astype(out_dtype)
+
+
+def _sketch_t_block_jnp(B, seed, cols, row0, col0, kind, salt, scale,
+                        precision, acc, out_dtype):
+    om = _omega_f32(seed, row0, col0, B.shape[0], cols, kind, salt, scale)
+    out = jnp.matmul(om.T, B.astype(jnp.float32), precision=precision)
+    if acc is not None:
+        out = acc.astype(jnp.float32) + out
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — Omega generated in VMEM at global coordinates; the key
+# pair and base offsets arrive as scalar-prefetch operands so shard_map
+# bodies can pass traced axis_index products.
+# ---------------------------------------------------------------------------
+
+def _om_block(meta_ref, r_off, c_off, rows: int, cols: int, kind: str,
+              salt: int, scale):
+    """An Omega tile inside the kernel at meta's base + static tile offset."""
+    key0 = meta_ref[0]
+    key1 = meta_ref[1]
+    row0 = meta_ref[2] + jnp.uint32(r_off)
+    col0 = meta_ref[3] + jnp.uint32(c_off)
+    if kind == "normal":
+        om = rng.philox_normal_grid(key0, key1, row0, col0, rows, cols, salt)
+    elif kind == "uniform":
+        om = rng.philox_uniform_grid(key0, key1, row0, col0, rows, cols, salt)
+    elif kind == "rademacher":
+        u = rng.philox_uniform_grid(key0, key1, row0, col0, rows, cols, salt)
+        om = jnp.where(u < 0.5, jnp.float32(-1), jnp.float32(1))
+    else:
+        raise ValueError(f"unknown omega kind {kind!r}")
+    if scale is not None:
+        om = om * jnp.float32(scale)
+    return om
+
+
+def _fwd_body(meta_ref, a_ref, o_ref, acc_ref, *, bk, bn, nsteps_k, kind,
+              salt, scale):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    om = _om_block(meta_ref, k * bk, j * bn, bk, bn, kind, salt, scale)
+    a = a_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(a, om, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _fwd_acc_body(meta_ref, a_ref, y_ref, o_ref, acc_ref, *, bk, bn,
+                  nsteps_k, kind, salt, scale):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        # the fused accumulation: Y enters the VMEM accumulator once...
+        acc_ref[...] = y_ref[...].astype(jnp.float32)
+
+    om = _om_block(meta_ref, k * bk, j * bn, bk, bn, kind, salt, scale)
+    a = a_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(a, om, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        # ...and leaves once — one HBM round trip instead of two.
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _t_body(meta_ref, b_ref, o_ref, acc_ref, *, bk, bm, nsteps_k, kind,
+            salt, scale):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+    i = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    om = _om_block(meta_ref, k * bk, i * bm, bk, bm, kind, salt, scale)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(om.T, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _t_acc_body(meta_ref, b_ref, w_ref, o_ref, acc_ref, *, bk, bm, nsteps_k,
+                kind, salt, scale):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+    i = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = w_ref[...].astype(jnp.float32)
+
+    om = _om_block(meta_ref, k * bk, i * bm, bk, bm, kind, salt, scale)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(om.T, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _meta(seed, row0, col0):
+    """(4,) uint32 scalar-prefetch vector: key pair + global base offsets."""
+    k0, k1 = seed_keys(seed)
+    return jnp.stack([k0, k1,
+                      jnp.asarray(row0, jnp.uint32),
+                      jnp.asarray(col0, jnp.uint32)])
+
+
+def _pad2(X, m: int, n: int):
+    if X.shape == (m, n):
+        return X
+    return jnp.pad(X, ((0, m - X.shape[0]), (0, n - X.shape[1])))
+
+
+def _sketch_block_pallas(A, seed, cols, row0, col0, kind, salt, scale,
+                         acc, out_dtype, blocks, interpret):
+    import jax.experimental.pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    from repro.core.compat import vmem_scratch
+
+    m, k = A.shape
+    bm, bn, bk = blocks or default_local_blocks(m, cols, k, interpret)
+    bm, bn, bk = min(bm, _round_up(m, 8)), min(bn, _round_up(cols, 8)), \
+        min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(cols, bn), _round_up(k, bk)
+    # Padding contract (see kernels/ops.py): padded contraction rows of
+    # Omega draw at their own global coordinates but multiply zero columns
+    # of A; padded output columns are drawn and sliced away.  In-range
+    # entries keep their global coordinates, so padding never shifts draws.
+    Ap = _pad2(A, mp, kp)
+    meta = _meta(seed, row0, col0)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    body = _fwd_acc_body if acc is not None else _fwd_body
+    kernel = functools.partial(body, bk=bk, bn=bn, nsteps_k=kp // bk,
+                               kind=kind, salt=salt, scale=scale)
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, kk, m_: (i, kk))]
+    operands = [meta, Ap]
+    aliases = {}
+    if acc is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk, m_: (i, j)))
+        operands.append(_pad2(acc.astype(out_dtype), mp, np_))
+        aliases = {2: 0}        # acc operand (after meta, A) aliases the out
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, m_: (i, j)),
+        scratch_shapes=[vmem_scratch((bm, bn), jnp.float32)])
+    out = pl.pallas_call(
+        kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        input_output_aliases=aliases,
+        interpret=interpret)(*operands)
+    return out[:m, :cols]
+
+
+def _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt, scale,
+                           acc, out_dtype, blocks, interpret):
+    import jax.experimental.pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    from repro.core.compat import vmem_scratch
+
+    k, r2 = B.shape           # contraction over rows of B / rows of Omega
+    bm, bn, bk = blocks or default_local_blocks(cols, r2, k, interpret)
+    bm, bn, bk = min(bm, _round_up(cols, 8)), min(bn, _round_up(r2, 8)), \
+        min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(cols, bm), _round_up(r2, bn), _round_up(k, bk)
+    Bp = _pad2(B, kp, np_)
+    meta = _meta(seed, row0, col0)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    body = _t_acc_body if acc is not None else _t_body
+    kernel = functools.partial(body, bk=bk, bm=bm, nsteps_k=kp // bk,
+                               kind=kind, salt=salt, scale=scale)
+    in_specs = [pl.BlockSpec((bk, bn), lambda i, j, kk, m_: (kk, j))]
+    operands = [meta, Bp]
+    aliases = {}
+    if acc is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk, m_: (i, j)))
+        operands.append(_pad2(acc.astype(out_dtype), mp, np_))
+        aliases = {2: 0}
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, m_: (i, j)),
+        scratch_shapes=[vmem_scratch((bm, bn), jnp.float32)])
+    out = pl.pallas_call(
+        kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        input_output_aliases=aliases,
+        interpret=interpret)(*operands)
+    return out[:cols, :r2]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def sketch_block(A, seed, cols: int, *, row0=0, col0=0, kind: str = "normal",
+                 salt: int = 0, scale=None, precision=None, acc=None,
+                 out_dtype=None, backend: str = "jnp", blocks=None,
+                 interpret=None):
+    """``acc? + A @ Omega[row0:row0+k, col0:col0+cols]`` (k = A.shape[1]).
+
+    The local body of Alg. 1 / the streaming range update.  ``seed`` may be
+    an int or a traced (2,) uint32 key pair; ``row0``/``col0`` may be
+    traced (shard offsets).  Accumulation is f32 on both backends; the
+    result is cast to ``out_dtype`` (default: A's dtype).  ``acc`` fuses an
+    accumulation into the kernel (``Y += ...``); with the Pallas backend
+    the accumulator is aliased in-place, one HBM round trip.
+    """
+    b = resolve_backend(backend)
+    out_dtype = out_dtype or A.dtype
+    if b == "jnp":
+        return _sketch_block_jnp(A, seed, cols, row0, col0, kind, salt,
+                                 scale, precision, acc, out_dtype)
+    interpret = _interpret() if interpret is None else interpret
+    return _sketch_block_pallas(A, seed, cols, row0, col0, kind, salt,
+                                scale, acc, out_dtype, blocks, interpret)
+
+
+def sketch_t_block(B, seed, cols: int, *, row0=0, col0=0,
+                   kind: str = "normal", salt: int = 0, scale=None,
+                   precision=None, acc=None, out_dtype=None,
+                   backend: str = "jnp", blocks=None, interpret=None):
+    """``acc? + Omega[row0:row0+n, col0:col0+cols]^T @ B`` (n = B.shape[0]).
+
+    The local body of the Nyström second stages (C = Omega^T·B) and the
+    streaming co-range update (W += Psi·H, with Psi's salt).  Same traced
+    seed/offset and f32-accumulation contract as :func:`sketch_block`.
+    """
+    b = resolve_backend(backend)
+    out_dtype = out_dtype or B.dtype
+    if b == "jnp":
+        return _sketch_t_block_jnp(B, seed, cols, row0, col0, kind, salt,
+                                   scale, precision, acc, out_dtype)
+    interpret = _interpret() if interpret is None else interpret
+    return _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt,
+                                  scale, acc, out_dtype, blocks, interpret)

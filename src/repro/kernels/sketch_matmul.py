@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import rng
+from repro.core.compat import vmem_scratch as _vmem_scratch
 
 
 # ---------------------------------------------------------------------------
@@ -95,15 +96,6 @@ def sketch_matmul_pallas(A, seed: int, r: int, *,
         scratch_shapes=[_vmem_scratch((bm, bn), jnp.float32)],
         interpret=interpret,
     )(A)
-
-
-def _vmem_scratch(shape, dtype):
-    """VMEM scratch allocation, portable across pallas versions."""
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.VMEM(shape, dtype)
-    except Exception:                                    # pragma: no cover
-        return pl.MemoryRef(shape, dtype)
 
 
 # ---------------------------------------------------------------------------

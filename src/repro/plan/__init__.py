@@ -15,13 +15,16 @@ a versioned on-disk cache; ``explain`` renders the decision.
   explain.py  — reports (regimes, crossovers, bound gaps)
 """
 from .model import (  # noqa: F401
-    Cost, MachineModel, PRESETS, device_kind_tag, probe_machine,
+    Cost, MachineModel, PRESETS, device_kind_tag, hbm_roofline_words,
+    probe_machine,
 )
 from .planner import (  # noqa: F401
     Candidate, Plan, plan_nystrom, plan_sketch, plan_stream,
 )
 from .autotune import (  # noqa: F401
-    AutotuneCache, autotune, cache_key, default_timer, shape_bucket,
+    AutotuneCache, PRESET_ENTRIES, autotune, cache_key,
+    calibrate_machine_model, default_timer, load_sweep, save_sweep,
+    shape_bucket, sweep_records,
 )
 from .explain import (  # noqa: F401
     explain, nystrom_crossover_P, regime_sweep, sketch_zero_comm_limit,

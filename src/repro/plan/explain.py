@@ -63,7 +63,13 @@ def explain(plan: Plan) -> str:
     qg = f" q={plan.q_grid}" if plan.q_grid else ""
     blocks = f" blocks={plan.blocks}" if plan.blocks else ""
     chunk = f" chunk_rows={plan.chunk_rows}" if plan.chunk_rows else ""
-    lines.append(f"  chosen: {plan.variant}{grid}{qg}{blocks}{chunk}")
+    be = (f" backend={plan.backend}"
+          if getattr(plan, "backend", "jnp") != "jnp" else "")
+    lines.append(f"  chosen: {plan.variant}{grid}{qg}{blocks}{chunk}{be}")
+    if getattr(plan, "backend", "jnp") == "pallas":
+        lines.append("          fused local body: Omega/Psi blocks "
+                     "generated in VMEM, never stored in HBM "
+                     "(kernels/local.py)")
     lines.append(f"          predicted {_fmt(plan.predicted_words)} words/proc"
                  f" (gap over bound {_fmt(plan.bound_gap_words)}, "
                  f"ratio {_fmt(plan.bound_ratio)})")
@@ -96,13 +102,18 @@ def explain(plan: Plan) -> str:
     lines.append("  candidates (best first; * = chosen):")
     for c in plan.candidates:
         mark = "*" if (c.variant == plan.variant and c.executable
-                       and c.grid == plan.grid) else " "
+                       and c.grid == plan.grid
+                       and getattr(c, "backend", "jnp")
+                       == getattr(plan, "backend", "jnp")) else " "
         where = f" grid={c.grid}" if c.grid else ""
         whereq = f" q={c.q_grid}" if c.q_grid else ""
+        be = (f" [{c.backend}]"
+              if getattr(c, "backend", "jnp") != "jnp" else "")
         tail = f"  [{c.note}]" if c.note else ""
         exe = "" if c.executable else "  (analytic-only)"
-        lines.append(f"   {mark} {c.variant:<20}{where}{whereq}"
+        lines.append(f"   {mark} {c.variant:<20}{where}{whereq}{be}"
                      f"  {_fmt(c.cost.words):>10} words"
+                     f"  {_fmt(c.cost.hbm_words):>10} hbm"
                      f"  {_fmt(c.seconds):>10} s{exe}{tail}")
     return "\n".join(lines)
 

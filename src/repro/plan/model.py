@@ -21,6 +21,13 @@ Per-variant analytic costs:
   * ``stream_update_cost``— one row-slab ingest step of the streaming
                            subsystem (local or sharded).
 
+``alg1_cost`` / ``alg2_cost`` / ``stream_update_cost`` take a ``backend``
+("jnp" | "pallas") pricing the *local* GEMM body: the pallas backend
+(kernels/local.py) generates Omega/Psi blocks in VMEM, zeroing their HBM
+streams and halving the accumulate round trips — identical network words,
+strictly fewer HBM words, which is how ``plan_*`` picks the backend
+analytically (``hbm_roofline_words`` is the single-GEMM table).
+
 Machine presets are deliberately coarse (vendor peaks); the measured
 autotuner (``plan.autotune``) exists precisely because these numbers are
 only good enough to *rank* candidates, not to predict wall time.
@@ -164,14 +171,24 @@ class Cost:
 # ---------------------------------------------------------------------------
 
 def alg1_cost(n1: int, n2: int, r: int,
-              grid: Tuple[int, int, int]) -> Cost:
-    """Alg. 1 on (p1, p2, p3): words is the paper's closed form exactly."""
+              grid: Tuple[int, int, int],
+              backend: str = "jnp") -> Cost:
+    """Alg. 1 on (p1, p2, p3): words is the paper's closed form exactly.
+
+    ``backend`` prices the *local* GEMM body (kernels/local.py): the jnp
+    backend materializes the per-shard Omega block in HBM
+    (n2·r/(p2·p3) words); the pallas backend generates it in VMEM, so
+    that term vanishes — the HBM-roofline analogue of the paper's
+    zero-communication claim.  Network words are identical by construction.
+    """
     p1, p2, p3 = grid
     P = p1 * p2 * p3
     words = alg1_bandwidth_words(n1, n2, r, p1, p2, p3)
     # per device: read the gathered A panel + regenerated Omega block
-    # (write+read through VMEM), write the B shard.
-    hbm = (n1 * n2 / (p1 * p2) + n2 * r / (p2 * p3) + n1 * r / P)
+    # (write+read through VMEM; zero for the fused backend), write the
+    # B shard.
+    omega_hbm = 0.0 if backend == "pallas" else n2 * r / (p2 * p3)
+    hbm = (n1 * n2 / (p1 * p2) + omega_hbm + n1 * r / P)
     return Cost(words=words, messages=alg1_latency_hops(p2, p3),
                 flops=2.0 * n1 * n2 * r / P, hbm_words=hbm)
 
@@ -192,6 +209,24 @@ def local_cost(n1: int, n2: int, r: int) -> Cost:
     """Single-device GEMM with Omega materialized in HBM."""
     return Cost(words=0.0, messages=0.0, flops=2.0 * n1 * n2 * r,
                 hbm_words=float(n1 * n2 + n2 * r + n1 * r))
+
+
+def hbm_roofline_words(m: int, k: int, n: int, backend: str,
+                       accumulate: bool = False) -> float:
+    """Local HBM words of one (m×k)·(k×n) sketch GEMM per backend.
+
+    The words-moved table behind the backend dispatch (see
+    docs/COMMUNICATION_MODEL.md "HBM roofline"): jnp streams the operand,
+    the materialized Omega block, and the output; pallas generates Omega in
+    VMEM so the k·n term vanishes.  ``accumulate=True`` prices ``out += ``
+    consumers (the streaming updates): jnp's separate delta + add costs
+    4·m·n words (delta write/read + out read/write), the fused kernel's
+    aliased accumulator 2·m·n (out read at k==0, write at the flush).
+    """
+    omega = 0.0 if backend == "pallas" else float(k * n)
+    out = (2.0 if backend == "pallas" else 4.0) * m * n if accumulate \
+        else float(m * n)
+    return m * k + omega + out
 
 
 def pallas_fused_cost(n1: int, n2: int, r: int) -> Cost:
@@ -220,16 +255,22 @@ def redistribute_words(n: int, r: int, p: Tuple[int, int, int],
 
 
 def alg2_cost(n: int, r: int, p: Tuple[int, int, int],
-              q: Tuple[int, int, int]) -> Cost:
+              q: Tuple[int, int, int], backend: str = "jnp") -> Cost:
     """Alg. 2 on grids (p, q): words is ``alg2_bandwidth_words`` exactly
     (which already includes ``redistribute_words`` when p != q), so a
     shard_map winner's predicted words stay equal to the paper's closed
-    form and never fall below the Theorem 3 bound."""
+    form and never fall below the Theorem 3 bound.
+
+    ``backend`` prices the local bodies of both stages: pallas drops the
+    Omega regeneration HBM streams (stage 1's A·Omega block and stage 2's
+    Omega^T·B block) entirely — they live only in VMEM.
+    """
     p1, p2, p3 = p
     P = p1 * p2 * p3
     words = alg2_bandwidth_words(n, r, p, q)
+    omega_hbm = 0.0 if backend == "pallas" else 2.0 * n * r / P
     hbm = (n * n / (p1 * p2)          # A panel
-           + 2.0 * n * r / P          # Omega regen (stage 1 + stage 2)
+           + omega_hbm                # Omega regen (stage 1 + stage 2)
            + 2.0 * n * r / P          # B write + B re-read
            + r * r / P)               # C shard
     msgs = alg1_latency_hops(p2, p3) + math.log2(max(p1, 1))
@@ -253,13 +294,27 @@ def nystrom_local_cost(n: int, r: int, fused: bool = False) -> Cost:
 
 def stream_update_cost(k: int, n2: int, r: int, l: int,
                        grid: Tuple[int, int, int] = (1, 1, 1),
-                       corange: bool = True) -> Cost:
+                       corange: bool = True,
+                       backend: str = "jnp") -> Cost:
     """One ``update_rows`` step folding a (k, n2) slab.
 
     Local grid (1,1,1): zero network words.  Sharded: the slab (replicated
     over p1, column-sharded over (p2, p3)) pays one All-Gather over p3 and
     one All-Reduce of the dY partial over p2, plus nothing for W (replicated
     over p1, update fully local) — see stream/distributed.py:update_rows.
+
+    HBM accounting per backend, priced for the row-slab ingest this plan
+    actually executes (``update_rows``): the jnp body materializes the
+    Omega block (n2·r/(p2·p3) words) and, when the co-range sketch is on,
+    the Psi slab (k·l words) plus a W read-modify-write through a
+    materialized delta (4·l·n2/(p2·p3) accumulate words).  The pallas
+    body generates Omega/Psi in VMEM and fuses ``W += Psi·H`` into the
+    kernel accumulator (``sketch_t_block(acc=w)``): zero Omega/Psi words
+    and one W round trip (2·l·n2/(p2·p3)).  The Y fold is the same
+    traced-offset slice-add on BOTH backends (dY write + dY read + Y
+    read + Y write = 4·k·r/p3) — the fused ``sketch_block(acc=y)`` round
+    trip currently applies only to the full-shape additive update on
+    p2 == 1 grids, which this per-slab cost deliberately does not credit.
     """
     p1, p2, p3 = grid
     words = 0.0
@@ -271,8 +326,12 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
         words += 2.0 * (1.0 - 1.0 / p2) * k * r / p3   # all-reduce of dY
         msgs += 2.0 * math.log2(p2)
     flops = 2.0 * k * n2 * r / (p2 * p3)
-    hbm = k * n2 / (p2 * p3) + n2 * r / (p2 * p3) + k * r / p3
+    fused = backend == "pallas"
+    omega_hbm = 0.0 if fused else n2 * r / (p2 * p3)
+    acc_hbm = 4.0 * k * r / p3      # Y fold: identical on both backends
+    hbm = k * n2 / (p2 * p3) + omega_hbm + acc_hbm
     if corange:
         flops += 2.0 * k * n2 * l / (p2 * p3)
-        hbm += k * l + l * n2 / (p2 * p3)
+        psi_hbm = 0.0 if fused else k * l
+        hbm += psi_hbm + (2.0 if fused else 4.0) * l * n2 / (p2 * p3)
     return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)

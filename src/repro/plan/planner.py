@@ -68,7 +68,9 @@ def _itemsize(dtype_name: str) -> int:
 class Candidate:
     """One scored dispatch option; ``executable=False`` entries are kept in
     the report (e.g. the Omega-communicating baseline, infeasible ideal
-    grids) but never chosen."""
+    grids) but never chosen.  ``backend`` is the local GEMM body
+    (kernels/local.py) the shard_map variants would run with — same
+    network words, different HBM roofline."""
     variant: str
     cost: M.Cost
     seconds: float
@@ -77,6 +79,7 @@ class Candidate:
     blocks: Optional[Tuple[Tuple[str, int], ...]] = None
     executable: bool = True
     note: str = ""
+    backend: str = "jnp"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +107,7 @@ class Plan:
     corange: bool = False                      # stream plans only
     sketch_l: Optional[int] = None             # stream plans only
     measured_seconds: Optional[float] = None   # set by plan.autotune
+    backend: str = "jnp"                       # local GEMM body (kernels/)
 
     # -- audit helpers ------------------------------------------------------
 
@@ -155,6 +159,10 @@ class Plan:
                              f"have {len(devices)}")
         return Mesh(np.asarray(devices[: self.n_procs]), ("x",))
 
+    def _blocks_tuple(self):
+        return (tuple(self.blocks[k] for k in ("bm", "bn", "bk"))
+                if self.blocks else None)
+
     def _execute_sketch(self, A, seed, devices):
         import jax
         n1, n2, r = self.dims
@@ -163,7 +171,9 @@ class Plan:
                                            rand_matmul)
             mesh = make_grid_mesh(*self.grid, devices=devices)
             A = jax.device_put(A, input_sharding(mesh))
-            return rand_matmul(A, seed, r, mesh, kind=self.kind)
+            return rand_matmul(A, seed, r, mesh, kind=self.kind,
+                               backend=self.backend,
+                               blocks=self._blocks_tuple())
         if self.variant == "local_xla":
             from repro.core.sketch import sketch_reference
             return sketch_reference(A, seed, r, kind=self.kind)
@@ -184,7 +194,8 @@ class Plan:
             A = jax.device_put(A, NamedSharding(mesh, P("x", None)))
             fn = (nystrom_no_redist if self.variant == "alg2_no_redist"
                   else nystrom_redist)
-            return fn(A, seed, r, mesh, axis="x", kind=self.kind)
+            return fn(A, seed, r, mesh, axis="x", kind=self.kind,
+                      backend=self.backend, blocks=self._blocks_tuple())
         if self.variant == "alg2_bound_driven":
             from repro.core.nystrom import nystrom_two_grid
             devices = devices if devices is not None else jax.devices()
@@ -193,7 +204,9 @@ class Plan:
                                  f"have {len(devices)}")
             return nystrom_two_grid(A, seed, r, p=self.grid, q=self.q_grid,
                                     kind=self.kind,
-                                    devices=list(devices[: self.n_procs]))
+                                    devices=list(devices[: self.n_procs]),
+                                    backend=self.backend,
+                                    blocks=self._blocks_tuple())
         if self.variant == "local_xla":
             from repro.core.nystrom import nystrom_reference
             return nystrom_reference(A, seed, r, kind=self.kind)
@@ -217,7 +230,8 @@ class Plan:
             from repro.core.sketch import make_grid_mesh
             from repro.stream.distributed import ShardedStreamingSketch
             mesh = make_grid_mesh(*self.grid, devices=devices)
-            st = ShardedStreamingSketch(cfg, mesh)
+            st = ShardedStreamingSketch(cfg, mesh, backend=self.backend,
+                                        blocks=self._blocks_tuple())
         else:
             raise ValueError(self.variant)
         for row0 in range(0, n1, k):
@@ -285,7 +299,7 @@ def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
         cands.append(Candidate(
             "pallas_fused", cp, cp.seconds(machine, isz),
             blocks=tuple(sorted(DEFAULT_BLOCKS.items())),
-            executable=allow_pallas,
+            executable=allow_pallas, backend="pallas",
             note="" if allow_pallas else "needs TPU (interpret-only here)"))
     else:
         grid = _best_executable_alg1_grid(n1, n2, r, P)
@@ -293,6 +307,14 @@ def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
             c = M.alg1_cost(n1, n2, r, grid)
             cands.append(Candidate("alg1", c, c.seconds(machine, isz),
                                    grid=grid))
+            # same grid, fused local body: identical network words,
+            # n2·r/(p2·p3) fewer HBM words per device
+            cp = M.alg1_cost(n1, n2, r, grid, backend="pallas")
+            cands.append(Candidate(
+                "alg1", cp, cp.seconds(machine, isz), grid=grid,
+                backend="pallas", executable=allow_pallas,
+                note="" if allow_pallas else "needs TPU (interpret-only "
+                                             "here)"))
             cc = M.alg1_communicating_cost(n1, n2, r, grid)
             cands.append(Candidate(
                 "alg1_communicating", cc, cc.seconds(machine, isz),
@@ -361,7 +383,7 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
         cands.append(Candidate(
             "pallas_fused", cp, cp.seconds(machine, isz),
             blocks=tuple(sorted(DEFAULT_BLOCKS.items())),
-            executable=allow_pallas,
+            executable=allow_pallas, backend="pallas",
             note="" if allow_pallas else "needs TPU (interpret-only here)"))
     else:
         executable_1d = (n % P == 0 and r % P == 0 and P <= n)
@@ -373,6 +395,13 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
             cands.append(Candidate(vname, c, c.seconds(machine, isz),
                                    grid=p, q_grid=q,
                                    executable=executable_1d, note=note))
+            cp = M.alg2_cost(n, r, p, q, backend="pallas")
+            pnote = note if not executable_1d else (
+                "" if allow_pallas else "needs TPU (interpret-only here)")
+            cands.append(Candidate(
+                vname, cp, cp.seconds(machine, isz), grid=p, q_grid=q,
+                backend="pallas",
+                executable=executable_1d and allow_pallas, note=pnote))
         # §5.3 approach 1: the bound-driven general two-grid algorithm,
         # executed by core.nystrom.nystrom_two_grid.  When the ideal grids
         # do not divide (n, r), snap to the min-words executable pair of
@@ -390,6 +419,14 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
             cands.append(Candidate(
                 "alg2_bound_driven", cb, cb.seconds(machine, isz),
                 grid=p_bd, q_grid=q_bd, executable=True, note=note))
+            cbp = M.alg2_cost(n, r, p_bd, q_bd, backend="pallas")
+            cands.append(Candidate(
+                "alg2_bound_driven", cbp, cbp.seconds(machine, isz),
+                grid=p_bd, q_grid=q_bd, backend="pallas",
+                executable=allow_pallas,
+                note=note if allow_pallas else
+                (note + "; " if note else "") + "needs TPU (interpret-only "
+                                               "here)"))
         else:
             cb = M.alg2_cost(n, r, ideal.p, ideal.q)
             cands.append(Candidate(
@@ -410,16 +447,21 @@ def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
                 chunk_rows: Optional[int] = None, l: Optional[int] = None,
                 corange: bool = False, dtype="float32",
                 kind: str = "normal",
-                machine: Optional[M.MachineModel] = None) -> Plan:
+                machine: Optional[M.MachineModel] = None,
+                allow_pallas: Optional[bool] = None) -> Plan:
     """Plan a full streaming pass over A in row slabs of ``chunk_rows``.
 
     Scores the local accumulator against the mesh-sharded one; predicted
     cost is the per-update cost times the number of slabs (one full pass).
+    Sharded candidates are priced per backend: the fused pallas body drops
+    the per-update Omega HBM stream and halves the Y round trips.
     """
     if P is None:
         import jax
         P = len(jax.devices())
     machine = machine or M.probe_machine()
+    if allow_pallas is None:
+        allow_pallas = machine.supports_pallas
     dtype = _dtype_name(dtype)
     isz = _itemsize(dtype)
     chunk_rows = chunk_rows or max(1, n1 // 8)
@@ -445,6 +487,14 @@ def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
                                             grid, corange))
             cands.append(Candidate("stream_sharded", c,
                                    c.seconds(machine, isz), grid=grid))
+            cp = scaled(M.stream_update_cost(chunk_rows, n2, r, l_eff,
+                                             grid, corange,
+                                             backend="pallas"))
+            cands.append(Candidate(
+                "stream_sharded", cp, cp.seconds(machine, isz), grid=grid,
+                backend="pallas", executable=allow_pallas,
+                note="" if allow_pallas else "needs TPU (interpret-only "
+                                             "here)"))
 
     plan = _finish_plan("stream", (n1, n2, r), P, dtype, kind, machine,
                         cands, lb, regime)
@@ -479,4 +529,5 @@ def _finish_plan(task: str, dims: Tuple[int, ...], P: int, dtype: str,
         predicted_seconds=chosen.seconds,
         lower_bound_words=lb, regime=regime, candidates=cands,
         machine=machine.name,
-        executable=chosen.executable)
+        executable=chosen.executable,
+        backend=chosen.backend)

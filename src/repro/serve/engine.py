@@ -162,8 +162,8 @@ class BatchedServer:
 
 def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
                         devices=None, plan=None,
-                        shape: Optional[Tuple[int, int, int]] = None
-                        ) -> SketchService:
+                        shape: Optional[Tuple[int, int, int]] = None,
+                        backend: str = "auto") -> SketchService:
     """The streaming-sketch serving entry point: one mesh, many streams.
 
     grid:
@@ -178,7 +178,9 @@ def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
                         ``shape=(n1, n2, r)``.
     plan: a precomputed :class:`repro.plan.Plan` (e.g. from ``plan_stream``
           or ``plan_sketch``); its grid places the service mesh.  Wins over
-          ``grid``.
+          ``grid`` (and its backend decision over ``backend``).
+    backend: local GEMM body of the distributed updates
+          (``"jnp"`` | ``"pallas"`` | ``"auto"`` — kernels/local.py).
     """
     if plan is None and grid == "auto":
         if shape is None:
@@ -197,7 +199,9 @@ def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
         if plan.grid is None:   # single-device plan -> local mode
             return SketchService()
         grid = plan.grid
+        backend = getattr(plan, "backend", backend) or backend
     if grid is None:
         return SketchService()
     from repro.core.sketch import make_grid_mesh
-    return SketchService(mesh=make_grid_mesh(*grid, devices=devices))
+    return SketchService(mesh=make_grid_mesh(*grid, devices=devices),
+                         backend=backend)

@@ -49,7 +49,7 @@ def corange_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
 
 def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
                      axes: Tuple[str, str, str] = DEFAULT_AXES,
-                     variant: str = "auto"):
+                     variant: str = "auto", backend: str = "auto"):
     """(B, C) of a symmetric stream from its accumulated Y, reusing the
     Alg.-2 second stages.
 
@@ -60,6 +60,9 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
     1's B (already on the (P, 1, 1) grid), and the bound's q-grid — snapped
     to the min-words executable factorization — consumes it via
     :func:`repro.core.nystrom.nystrom_second_stage_two_grid`.
+    ``backend`` selects the second stage's local GEMM body
+    (kernels/local.py) — the pallas backend keeps Omega out of HBM at
+    finalize time too.
     """
     ax1, ax2, ax3 = axes
     if cfg.n1 != cfg.n2:
@@ -75,12 +78,14 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
     if variant == "no_redist":
         C = nystrom_second_stage_no_redist(Y, cfg.seed, cfg.r, mesh,
                                            axis=ax1, kind=cfg.kind,
-                                           salt=cfg.omega_salt)
+                                           salt=cfg.omega_salt,
+                                           backend=backend)
         return Y, C
     if variant == "redist":
         return nystrom_second_stage_redist(Y, cfg.seed, cfg.r, mesh,
                                            axis=ax1, kind=cfg.kind,
-                                           salt=cfg.omega_salt)
+                                           salt=cfg.omega_salt,
+                                           backend=backend)
     if variant == "bound_driven":
         from repro.core.grid import select_two_grid_executable
         got = select_two_grid_executable(cfg.n1, cfg.r, Pn, p=(Pn, 1, 1))
@@ -90,27 +95,39 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
         _, q, _exact = got
         return nystrom_second_stage_two_grid(
             Y, cfg.seed, cfg.r, q, devices=list(mesh.devices.flat),
-            kind=cfg.kind, salt=cfg.omega_salt)
+            kind=cfg.kind, salt=cfg.omega_salt, backend=backend)
     raise ValueError(variant)
 
 
 def corange_update(W, H, cfg: StreamConfig, mesh: Mesh,
-                   axes: Tuple[str, str, str] = DEFAULT_AXES, seed=None):
+                   axes: Tuple[str, str, str] = DEFAULT_AXES, seed=None,
+                   backend: str = "jnp", blocks=None):
     """W + Psi·H with H in the Alg.-1 input layout and W in the streaming
     co-range layout.  Psi columns are regenerated per p1 block — the only
-    traffic is the psum of the data-derived partial products."""
+    traffic is the psum of the data-derived partial products.  The pallas
+    backend generates the Psi block in VMEM inside the fused kernel
+    (kernels/local.py ``sketch_t_block`` under the Psi salt)."""
+    from repro.kernels.local import resolve_backend, sketch_t_block
+    backend = resolve_backend(backend)
     ax1, ax2, ax3 = axes
     br = cfg.n1 // mesh.shape[ax1]
 
     def body(w_blk, h_blk):              # (l, n2/(p2p3)), (n1/p1, n2/(p2p3))
         i = jax.lax.axis_index(ax1)
-        psi_c = psi_cols(cfg, i * br, br, seed=seed)       # (br, l)
-        part = psi_c.T.astype(h_blk.dtype) @ h_blk
+        if backend == "jnp":
+            psi_c = psi_cols(cfg, i * br, br, seed=seed)   # (br, l)
+            part = psi_c.T.astype(h_blk.dtype) @ h_blk
+        else:
+            part = sketch_t_block(
+                h_blk, cfg.seed if seed is None else seed, cfg.sketch_l,
+                row0=i * br, kind=cfg.kind, salt=cfg.psi_salt,
+                backend=backend, blocks=blocks)
         return w_blk + jax.lax.psum(part, ax1)
 
+    kw = {} if backend == "jnp" else {"check_rep": False}
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(None, (ax2, ax3)), P(ax1, (ax2, ax3))),
-                   out_specs=P(None, (ax2, ax3)))
+                   out_specs=P(None, (ax2, ax3)), **kw)
     return fn(W, H)
 
 
@@ -128,14 +145,67 @@ _PROG_CACHE = 64
 
 @functools.lru_cache(maxsize=_PROG_CACHE)
 def _sharded_update_prog(cfg: StreamConfig, mesh: Mesh,
-                         axes: Tuple[str, str, str]):
-    """Full-shape additive update: Y += Alg.-1 sketch of H (+ W psum)."""
+                         axes: Tuple[str, str, str], backend: str = "jnp",
+                         blocks=None):
+    """Full-shape additive update: Y += Alg.-1 sketch of H (+ W psum).
+
+    jnp backend: the original program — sketch H with ``rand_matmul`` and
+    add the result into the resident Y shard (dY makes an HBM round trip
+    between the kernel and the add).  pallas backend: the accumulation is
+    fused into the kernel accumulator via ``sketch_block(acc=y)`` — on
+    regime-1 grids (p2 == 1, where the local partial IS the resident
+    shard's delta) Y enters VMEM once and is written once, one HBM round
+    trip instead of two; with p2 > 1 the reduce-scatter sits between the
+    GEMM and the add, so only the Omega stream is elided.  Both backends
+    are bitwise-identical where the local contraction is not tiled
+    (kernels/local.py).
+    """
+    if backend == "jnp":
+        def upd(Y, W, H):
+            Y = Y + rand_matmul(H, cfg.seed, cfg.r, mesh, axes=axes,
+                                kind=cfg.kind, salt=cfg.omega_salt,
+                                backend="jnp")
+            if W is not None:
+                W = corange_update(W, H, cfg, mesh, axes, backend="jnp")
+            return Y, W
+
+        return jax.jit(upd)
+
+    from repro.kernels.local import sketch_block
+    ax1, ax2, ax3 = axes
+    p2, p3 = mesh.shape[ax2], mesh.shape[ax3]
+    blk_rows = cfg.n2 // p2
+    blk_cols = cfg.r // p3
+
+    def body(y_blk, a_blk):
+        j = jax.lax.axis_index(ax2)
+        k = jax.lax.axis_index(ax3)
+        if p3 == 1:
+            a_ij = a_blk
+        else:
+            a_ij = jax.lax.all_gather(a_blk, ax3, axis=1, tiled=True)
+        if p2 == 1:
+            # fused accumulate: Y += A_ij · Omega_jk in one kernel pass
+            return sketch_block(a_ij, cfg.seed, blk_cols,
+                                row0=j * blk_rows, col0=k * blk_cols,
+                                kind=cfg.kind, salt=cfg.omega_salt,
+                                acc=y_blk, backend=backend, blocks=blocks)
+        b_partial = sketch_block(a_ij, cfg.seed, blk_cols,
+                                 row0=j * blk_rows, col0=k * blk_cols,
+                                 kind=cfg.kind, salt=cfg.omega_salt,
+                                 backend=backend, blocks=blocks)
+        return y_blk + jax.lax.psum_scatter(b_partial, ax2,
+                                            scatter_dimension=0, tiled=True)
+
+    fused = shard_map(body, mesh=mesh,
+                      in_specs=(P((ax1, ax2), ax3), P(ax1, (ax2, ax3))),
+                      out_specs=P((ax1, ax2), ax3), check_rep=False)
 
     def upd(Y, W, H):
-        Y = Y + rand_matmul(H, cfg.seed, cfg.r, mesh, axes=axes,
-                            kind=cfg.kind, salt=cfg.omega_salt)
+        Y = fused(Y, H)
         if W is not None:
-            W = corange_update(W, H, cfg, mesh, axes)
+            W = corange_update(W, H, cfg, mesh, axes, backend=backend,
+                               blocks=blocks)
         return Y, W
 
     return jax.jit(upd)
@@ -143,7 +213,8 @@ def _sharded_update_prog(cfg: StreamConfig, mesh: Mesh,
 
 @functools.lru_cache(maxsize=_PROG_CACHE)
 def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
-                           axes: Tuple[str, str, str], k: int):
+                           axes: Tuple[str, str, str], k: int,
+                           backend: str = "jnp", blocks=None):
     """Compiled ingest of a (k, n2) row slab at traced offset row0.
 
     Layout: the slab is column-sharded over (p2, p3) and replicated over
@@ -158,7 +229,12 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
     slicing a zero-padded dY at a traced offset: out-of-overlap shards
     slice pure zeros, so row-disjoint slabs reproduce the full-shape
     additive path bitwise (0 + x == x).
+
+    ``backend``: local GEMM body for the slab sketch and the Psi-slab
+    product (kernels/local.py) — pallas keeps the Omega/Psi blocks out of
+    HBM; the Y fold is a traced-offset slice either way.
     """
+    from repro.kernels.local import sketch_block, sketch_t_block
     ax1, ax2, ax3 = axes
     p1, p2, p3 = (mesh.shape[a] for a in axes)
     y_rows = cfg.n1 // (p1 * p2)        # Y shard height, P((p1,p2), p3)
@@ -173,10 +249,16 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
         else:
             h_cols = jax.lax.all_gather(h_blk, ax3, axis=1, tiled=True)
         kk = jax.lax.axis_index(ax3)
-        om = omega_tile(cfg.seed, j * om_rows, kk * r_cols,
-                        om_rows, r_cols, cfg.kind, h_cols.dtype,
-                        salt=cfg.omega_salt)
-        part = h_cols @ om                       # (k, r/p3) partial
+        if backend == "jnp":
+            om = omega_tile(cfg.seed, j * om_rows, kk * r_cols,
+                            om_rows, r_cols, cfg.kind, h_cols.dtype,
+                            salt=cfg.omega_salt)
+            part = h_cols @ om                   # (k, r/p3) partial
+        else:
+            part = sketch_block(h_cols, cfg.seed, r_cols,
+                                row0=j * om_rows, col0=kk * r_cols,
+                                kind=cfg.kind, salt=cfg.omega_salt,
+                                backend=backend, blocks=blocks)
         dY = jax.lax.psum(part, ax2) if p2 > 1 else part
         # fold the overlap [g0, g0 + y_rows) n [row0, row0 + k) into the
         # resident shard: slice a zero-padded dY so that shards outside
@@ -192,15 +274,23 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
             dpad, (start, jnp.int32(0)), (y_rows, r_cols))
         if w_blk is None:
             return y_new
-        psi_c = psi_cols(cfg, row0, k)           # (k, l), traced row0
-        w_new = w_blk + psi_c.T.astype(h_blk.dtype) @ h_blk
+        if backend == "jnp":
+            psi_c = psi_cols(cfg, row0, k)       # (k, l), traced row0
+            w_new = w_blk + psi_c.T.astype(h_blk.dtype) @ h_blk
+        else:
+            # fused accumulate: W += Psi[:, row0:row0+k] · H in one pass
+            w_new = sketch_t_block(h_blk, cfg.seed, cfg.sketch_l,
+                                   row0=row0, kind=cfg.kind,
+                                   salt=cfg.psi_salt, acc=w_blk,
+                                   backend=backend, blocks=blocks)
         return y_new, w_new
 
     in_h = P(None, (ax2, ax3))
+    kw = {} if backend == "jnp" else {"check_rep": False}
     if cfg.corange:
         fn = shard_map(body, mesh=mesh,
                        in_specs=(P((ax1, ax2), ax3), in_h, in_h, P()),
-                       out_specs=(P((ax1, ax2), ax3), in_h))
+                       out_specs=(P((ax1, ax2), ax3), in_h), **kw)
 
         def upd(Y, W, H, row0):
             return fn(Y, W, H, row0)
@@ -208,7 +298,7 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
         fn = shard_map(lambda y, h, row0: body(y, None, h, row0),
                        mesh=mesh,
                        in_specs=(P((ax1, ax2), ax3), in_h, P()),
-                       out_specs=P((ax1, ax2), ax3))
+                       out_specs=P((ax1, ax2), ax3), **kw)
 
         def upd(Y, W, H, row0):
             return fn(Y, H, row0), W
@@ -228,17 +318,28 @@ class ShardedStreamingSketch:
     bitwise (untouched rows accumulate exact zeros).
 
     ``mesh`` may also be a :class:`repro.plan.Plan` (from ``plan_stream`` /
-    ``plan_sketch``); its chosen grid places the state.
+    ``plan_sketch``); its chosen grid places the state (and its backend
+    decision wins over the ``backend`` arg).
+
+    ``backend`` selects the local GEMM body of every update
+    (``"jnp"`` | ``"pallas"`` | ``"auto"`` — kernels/local.py): the pallas
+    backend generates Omega/Psi blocks in VMEM and fuses the Y
+    accumulation into the kernel accumulator.
     """
 
     def __init__(self, cfg: StreamConfig, mesh,
-                 axes: Tuple[str, str, str] = DEFAULT_AXES):
+                 axes: Tuple[str, str, str] = DEFAULT_AXES,
+                 backend: str = "auto", blocks=None):
+        from repro.kernels.local import resolve_backend
         cfg.validate()
         if not isinstance(mesh, Mesh):      # a repro.plan.Plan
             from repro.core.sketch import make_grid_mesh
             if getattr(mesh, "grid", None) is None:
                 raise ValueError(f"plan {getattr(mesh, 'variant', mesh)!r} "
                                  f"carries no processor grid")
+            backend = getattr(mesh, "backend", backend) or backend
+            if getattr(mesh, "blocks", None):
+                blocks = tuple(mesh.blocks[k] for k in ("bm", "bn", "bk"))
             mesh = make_grid_mesh(*mesh.grid)
         ax1, ax2, ax3 = axes
         p1, p2, p3 = (mesh.shape[a] for a in axes)
@@ -249,6 +350,8 @@ class ShardedStreamingSketch:
         self.cfg = cfg
         self.mesh = mesh
         self.axes = axes
+        self.backend = resolve_backend(backend)
+        self.blocks = None if blocks is None else tuple(blocks)
         self.Y = jax.device_put(jnp.zeros((cfg.n1, cfg.r), cfg.dtype),
                                 output_sharding(mesh, axes))
         self.W = (jax.device_put(
@@ -257,8 +360,10 @@ class ShardedStreamingSketch:
                   if cfg.corange else None)
         self.num_updates = 0
         # module-level lru cache: every accumulator (and every autotune
-        # trial) with the same (cfg, mesh, axes) shares one executable
-        self._upd = _sharded_update_prog(cfg, mesh, tuple(axes))
+        # trial) with the same (cfg, mesh, axes, backend) shares one
+        # executable
+        self._upd = _sharded_update_prog(cfg, mesh, tuple(axes),
+                                         self.backend, self.blocks)
 
     def update(self, H):
         """A <- A + H; H must be the full (n1, n2) shape (sharded or host)."""
@@ -287,7 +392,8 @@ class ShardedStreamingSketch:
         H = jax.device_put(
             jnp.asarray(H, self.cfg.dtype),
             NamedSharding(self.mesh, P(None, (self.axes[1], self.axes[2]))))
-        fn = _sharded_rowblock_prog(self.cfg, self.mesh, tuple(self.axes), k)
+        fn = _sharded_rowblock_prog(self.cfg, self.mesh, tuple(self.axes), k,
+                                    self.backend, self.blocks)
         self.Y, self.W = fn(self.Y, self.W, H, jnp.int32(row0))
         self.num_updates += 1
         return self
@@ -308,19 +414,22 @@ class ShardedStreamingSketch:
             tree["W"] = self.W
         extra = {"config": self.cfg.to_json_dict(),
                  "num_updates": self.num_updates,
+                 "backend": self.backend,
                  "layout": "sharded"}
         return ckpt.save(directory, step, tree, extra=extra, keep=keep)
 
     @classmethod
     def restore(cls, directory: str, mesh, step: Optional[int] = None,
-                axes: Tuple[str, str, str] = DEFAULT_AXES
-                ) -> "ShardedStreamingSketch":
+                axes: Tuple[str, str, str] = DEFAULT_AXES,
+                backend: Optional[str] = None) -> "ShardedStreamingSketch":
         """Rebuild a stream from a checkpoint onto ``mesh`` (any grid whose
-        divisibility admits the stream shape — elastic restore)."""
+        divisibility admits the stream shape — elastic restore).  The saved
+        backend is restored by default; pass ``backend=`` to migrate."""
         from repro.checkpoint import ckpt
         extra, step = ckpt.load_extra(directory, step)
         cfg = StreamConfig.from_json_dict(extra["config"])
-        st = cls(cfg, mesh, axes=axes)
+        st = cls(cfg, mesh, axes=axes,
+                 backend=backend or extra.get("backend", "jnp"))
         tree = {"Y": st.Y}
         shardings = {"Y": output_sharding(st.mesh, axes)}
         if st.W is not None:
@@ -347,7 +456,7 @@ class ShardedStreamingSketch:
     def nystrom(self, variant: str = "auto"):
         """(B, C) of a symmetric stream — see :func:`nystrom_finalize`."""
         return nystrom_finalize(self.Y, self.cfg, self.mesh, self.axes,
-                                variant)
+                                variant, backend=self.backend)
 
     def reconstruct(self, rank: Optional[int] = None, rcond=None):
         """One-pass low-rank reconstruction (gathers the small factors)."""

@@ -71,9 +71,14 @@ class SketchService:
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
-                 axes: Tuple[str, str, str] = DEFAULT_AXES):
+                 axes: Tuple[str, str, str] = DEFAULT_AXES,
+                 backend: str = "auto"):
+        from repro.kernels.local import resolve_backend
         self.mesh = mesh
         self.axes = axes
+        # the distributed updates' local GEMM body (kernels/local.py);
+        # local-mode row-block ingest keeps its own bitwise xla path
+        self.backend = resolve_backend(backend)
         self._streams: Dict[int, _Stream] = {}
         self._fns: Dict[Tuple, any] = {}
         self._sid = itertools.count()
@@ -127,14 +132,16 @@ class SketchService:
         return fn
 
     def _build_dist_update(self, cfg: StreamConfig):
-        mesh, axes = self.mesh, self.axes
+        mesh, axes, backend = self.mesh, self.axes, self.backend
 
         def upd(Y, W, H, keys, row0):
             del row0                      # distributed mode is additive-only
             Y = Y + rand_matmul(H, keys, cfg.r, mesh, axes=axes,
-                                kind=cfg.kind, salt=cfg.omega_salt)
+                                kind=cfg.kind, salt=cfg.omega_salt,
+                                backend=backend)
             if W is not None:
-                W = corange_update(W, H, cfg, mesh, axes, seed=keys)
+                W = corange_update(W, H, cfg, mesh, axes, seed=keys,
+                                   backend=backend)
             return Y, W
 
         return jax.jit(upd)
@@ -259,7 +266,8 @@ class SketchService:
         if self.mesh is None:
             return nystrom_local(st.Y, cfg)
         from .distributed import nystrom_finalize
-        return nystrom_finalize(st.Y, cfg, self.mesh, self.axes, variant)
+        return nystrom_finalize(st.Y, cfg, self.mesh, self.axes, variant,
+                                backend=self.backend)
 
     # -- introspection -----------------------------------------------------
 

@@ -204,6 +204,8 @@ class StreamingSketch:
     backend:
       * ``"xla"``     — plain jnp GEMM against a regenerated Omega tile
                         (bitwise-stable vs. ``sketch_reference``).
+                        ``"jnp"`` is accepted as an alias (the name the
+                        distributed entry points use — kernels/local.py).
       * ``"pallas"``  — the fused TPU kernel (Omega generated in VMEM,
                         never materialized in HBM).  Numerically equal to
                         within f32-accumulation tolerance, not bitwise.
@@ -215,6 +217,8 @@ class StreamingSketch:
         cfg.validate()
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if backend == "jnp":
+            backend = "xla"
         if backend not in ("xla", "pallas", "interpret"):
             raise ValueError(f"unknown backend {backend!r}")
         self.cfg = cfg

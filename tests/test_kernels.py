@@ -36,6 +36,59 @@ def test_gen_omega_nonaligned_shapes():
 
 
 # ---------------------------------------------------------------------------
+# Padding invariance (ops.py contract): rounding r / n2 up to block
+# multiples must not SHIFT the Philox draws of in-range entries — padded
+# tail columns/rows draw at their own global coordinates and are sliced
+# off, so the padded run is bitwise the unpadded one.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["normal", "uniform", "rademacher"])
+def test_gen_omega_padding_never_shifts_draws(kind):
+    """The padded generator's in-range block equals the same block of a
+    larger unpadded generation — draws are a pure function of global
+    coordinates, bitwise."""
+    big = np.asarray(gen_omega(seed=5, n2=64, r=32, br=16, bc=8, kind=kind,
+                               **I))
+    # n2=37 pads to 48, r=13 pads to 16: in-range entries must be the
+    # corresponding prefix of the bigger generation, bit for bit
+    pad = np.asarray(gen_omega(seed=5, n2=37, r=13, br=16, bc=8, kind=kind,
+                               **I))
+    np.testing.assert_array_equal(pad, big[:37, :13])
+
+
+def test_sketch_matmul_r_padding_bitwise():
+    """Padding only the output columns (r up to bn multiples) leaves the
+    contraction untouched, so in-range columns are bitwise the run whose
+    blocks divide r exactly."""
+    A = jax.random.normal(jax.random.key(1), (32, 64))
+    padded = sketch_matmul(A, seed=7, r=11, bm=32, bn=8, bk=64, **I)
+    exact = sketch_matmul(A, seed=7, r=16, bm=32, bn=16, bk=64, **I)
+    np.testing.assert_array_equal(np.asarray(padded),
+                                  np.asarray(exact)[:, :11])
+
+
+def test_sketch_matmul_row_padding_bitwise():
+    """Zero-padded A rows produce zero output rows that are sliced away;
+    in-range rows see the identical contraction."""
+    A = jax.random.normal(jax.random.key(1), (30, 64))
+    Ap = jnp.pad(A, ((0, 2), (0, 0)))
+    padded = sketch_matmul(A, seed=7, r=16, bm=16, bn=16, bk=64, **I)
+    exact = sketch_matmul(Ap, seed=7, r=16, bm=16, bn=16, bk=64, **I)
+    np.testing.assert_array_equal(np.asarray(padded),
+                                  np.asarray(exact)[:30])
+
+
+def test_sketch_t_matmul_r_padding_bitwise():
+    """Same invariance for the transposed kernel: padded Omega columns
+    (output rows of C) draw at their own coordinates and are sliced off."""
+    B = jax.random.normal(jax.random.key(2), (64, 16))
+    padded = sketch_t_matmul(B, seed=9, r=13, bm=8, bn=16, bk=64, **I)
+    exact = sketch_t_matmul(B, seed=9, r=16, bm=16, bn=16, bk=64, **I)
+    np.testing.assert_array_equal(np.asarray(padded),
+                                  np.asarray(exact)[:13])
+
+
+# ---------------------------------------------------------------------------
 # sketch_matmul: B = A @ Omega
 # ---------------------------------------------------------------------------
 

@@ -296,9 +296,10 @@ def test_autotune_cache_round_trip(tmp_path):
     assert tuned.executable
 
     # persisted, versioned, atomic
+    from repro.plan.autotune import CACHE_VERSION
     with open(path) as f:
         data = json.load(f)
-    assert data["version"] == 1
+    assert data["version"] == CACHE_VERSION
     assert len(data["entries"]) == 1
 
     # second invocation (fresh cache object): pure hit, timer must NOT run
@@ -431,3 +432,99 @@ def test_regime_sweep_table():
     lines = table.splitlines()
     assert len(lines) == 5                       # header + sep + 3 rows
     assert "variant" in lines[0]
+
+
+# ---------------------------------------------------------------------------
+# (g) machine-model calibration from grid-sweep residuals (autotune.py)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_machine_model_recovers_alpha_beta():
+    """Times synthesized from a known (alpha, beta) over a communicating
+    grid sweep must be fit back to those values (within lstsq noise)."""
+    import dataclasses
+    from repro.plan import calibrate_machine_model
+    from repro.plan import model as M
+
+    true = dataclasses.replace(CPU, alpha=3e-5, byte_bw=2e9)
+    recs = []
+    for grid in ((8, 1, 1), (2, 2, 2), (1, 4, 2), (4, 2, 1), (1, 1, 8)):
+        c = M.alg1_cost(64, 128, 16, grid)
+        recs.append({"words": c.words, "messages": c.messages,
+                     "flops": c.flops, "hbm_words": c.hbm_words,
+                     "itemsize": 4, "seconds": c.seconds(true, 4)})
+    fit = calibrate_machine_model(recs, base=CPU)
+    assert abs(fit.alpha - true.alpha) / true.alpha < 0.05
+    assert abs(fit.byte_bw - true.byte_bw) / true.byte_bw < 0.05
+    assert fit.name.endswith("_calibrated")
+    # compute/memory rates come from the base preset, untouched
+    assert fit.flop_rate == CPU.flop_rate and fit.hbm_bw == CPU.hbm_bw
+
+
+def test_calibrate_machine_model_degenerate_keeps_base():
+    """Zero-communication records carry no network information — the base
+    terms must survive unchanged instead of fitting noise."""
+    from repro.plan import calibrate_machine_model
+    recs = [{"words": 0.0, "messages": 0.0, "flops": 1e6,
+             "hbm_words": 1e4, "itemsize": 4, "seconds": 1e-4}]
+    fit = calibrate_machine_model(recs, base=CPU)
+    assert fit.alpha == CPU.alpha and fit.byte_bw == CPU.byte_bw
+
+
+def test_sweep_records_round_trip(tmp_path):
+    """sweep_records measures every candidate with the injected timer and
+    the JSON round-trips through save_sweep/load_sweep."""
+    from repro.plan import load_sweep, save_sweep, sweep_records
+
+    plan = plan_sketch(32, 64, 8, P=1, machine=CPU)
+    recs = sweep_records(plan, timer=lambda fn: 1e-3, machine=CPU)
+    assert recs and all(r["seconds"] == 1e-3 for r in recs)
+    assert all({"words", "flops", "hbm_words", "itemsize"} <= set(r)
+               for r in recs)
+    path = os.path.join(str(tmp_path), "sweep.json")
+    save_sweep(recs, path)
+    assert load_sweep(path) == recs
+
+
+def test_autotune_records_and_presets(tmp_path):
+    """autotune(records=...) captures one record per timed candidate, and
+    a preset entry short-circuits measurement on a cache miss (then seeds
+    the writable cache)."""
+    from repro.plan import AutotuneCache, cache_key
+
+    plan = plan_sketch(64, 128, 16, P=1, machine=CPU)
+    recs = []
+    tuned = autotune(plan, timer=lambda fn: 1e-3, records=recs,
+                     presets={})
+    assert tuned.measured_seconds == 1e-3
+    assert len(recs) >= 1 and all("seconds" in r for r in recs)
+
+    # preset hit: no measurement, decision restored, cache seeded
+    key = cache_key(plan)
+    preset = {key: {"variant": "local_xla", "grid": None, "q_grid": None,
+                    "blocks": None, "chunk_rows": None, "backend": "jnp",
+                    "source": "analytic", "seconds": None}}
+
+    def forbidden_timer(fn):
+        raise AssertionError("timer ran despite a preset hit")
+
+    cache = AutotuneCache(os.path.join(str(tmp_path), "t.json"))
+    got = autotune(plan, cache=cache, timer=forbidden_timer, presets=preset)
+    assert got.variant == "local_xla"
+    assert cache.get(key) is not None       # preset copied into the cache
+
+
+def test_autotune_cache_entry_preserves_backend(tmp_path):
+    """A tuned pallas-backend decision round-trips through the cache with
+    its backend and block shape."""
+    import dataclasses
+    from repro.plan.autotune import _entry_from_plan, _plan_from_entry
+
+    plan = plan_sketch(64, 128, 16, P=8, machine=CPU)
+    tuned = dataclasses.replace(plan, backend="pallas", grid=(8, 1, 1),
+                                blocks={"bm": 128, "bn": 128, "bk": 256},
+                                measured_seconds=1e-3, executable=True)
+    entry = _entry_from_plan(tuned)
+    assert entry["backend"] == "pallas" and entry["source"] == "measured"
+    restored = _plan_from_entry(plan, entry)
+    assert restored.backend == "pallas"
+    assert restored.blocks == {"bm": 128, "bn": 128, "bk": 256}
