@@ -7,9 +7,10 @@ from .common import run_with_devices
 _SNIPPET = r"""
 import os, time, jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from repro.core import nystrom_no_redist, nystrom_redist, nystrom_two_grid
-from repro.core.grid import select_two_grid_executable
-from repro.plan.model import redistribute_words
+from repro.core import (nystrom_no_redist, nystrom_redist, nystrom_two_grid,
+                        nystrom_two_grid_fused)
+from repro.core.grid import select_two_grid_executable, two_grid_axis_split
+from repro.plan.model import fused_redistribute_words, redistribute_words
 from repro.roofline.hlo import collective_bytes_of
 
 smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
@@ -45,6 +46,20 @@ for (n, r) in shapes:                 # n/r > P  and  n/r < P (Fig. 7 sides)
     rw = redistribute_words(n, r, p, q)
     print(f"RESULT fig5-7_nystrom_bound_driven_n{n}_r{r},{us:.1f},"
           f"p={p};q={q};exact_grids={exact};redist_words={rw:.0f}")
+    # single-jit fused two-grid: same (p, q), but both stages plus the
+    # §5.2 Redistribute compile into ONE executable on the shared mesh
+    # (the in-program min-cut resharding replaces the host device_put)
+    if two_grid_axis_split(p, q) is not None:
+        jax.block_until_ready(nystrom_two_grid_fused(S, 5, r, p=p, q=q)[1])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(
+                nystrom_two_grid_fused(S, 5, r, p=p, q=q)[1])
+        us = (time.perf_counter() - t0) / iters * 1e6
+        fw = fused_redistribute_words(n, r, p, q)
+        print(f"RESULT fig5-7_nystrom_bound_driven_fused_n{n}_r{r},"
+              f"{us:.1f},p={p};q={q};redist_words_inprog={fw:.0f};"
+              f"redist_words_cross={rw:.0f}")
 """
 
 

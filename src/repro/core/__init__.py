@@ -11,6 +11,7 @@ from .grid import (  # noqa: F401
     select_matmul_grid, select_nystrom_grids,
     alg1_bandwidth_words, alg2_bandwidth_words,
     alg2_two_grid_executable, select_two_grid_executable,
+    two_grid_axis_split, two_grid_shared_mesh,
 )
 from .sketch import (  # noqa: F401
     rand_matmul, rand_matmul_auto, rand_matmul_communicating,
@@ -18,7 +19,8 @@ from .sketch import (  # noqa: F401
 )
 from .nystrom import (  # noqa: F401
     nystrom_reference, nystrom_no_redist, nystrom_redist, nystrom_general,
-    nystrom_two_grid, nystrom_auto, nystrom_second_stage_no_redist,
-    nystrom_second_stage_redist, nystrom_second_stage_two_grid,
+    nystrom_two_grid, nystrom_two_grid_fused, nystrom_auto,
+    nystrom_second_stage_no_redist, nystrom_second_stage_redist,
+    nystrom_second_stage_two_grid, nystrom_second_stage_two_grid_fused,
     reconstruct, relative_error,
 )

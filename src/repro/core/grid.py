@@ -276,6 +276,104 @@ def select_two_grid_executable(n: int, r: int, P: int, p=None):
     return best[1], best[2], False
 
 
+# ---------------------------------------------------------------------------
+# §5.2 Redistribute, in-program: device-order reconciliation of two grids.
+#
+# ``nystrom_two_grid`` runs its two stages on two meshes over the same flat
+# device list and pays a host-mediated ``device_put`` between them.  When
+# one mesh can express BOTH grids — its axes refine both factorizations in
+# row-major order, so the device at p-coordinate (i, j, k) and the device
+# at q-coordinate (i', j', k') are the SAME physical assignment the two
+# separate meshes would use — the Redistribute becomes an in-program
+# resharding (``with_sharding_constraint``) that XLA compiles into the one
+# executable (``core.nystrom.nystrom_two_grid_fused``).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TwoGridSharedMesh:
+    """One mesh serving both grids of a two-grid Alg. 2 run.
+
+    ``p_axes`` / ``q_axes`` are 3-tuples of (possibly empty) tuples of mesh
+    axis names whose size products are (p1, p2, p3) / (q1, q2, q3); grouped
+    row-major, so sharding a dim over a group reproduces the device
+    assignment of the standalone ``make_grid_mesh(p...)`` / ``(q...)``
+    meshes exactly.
+    """
+    mesh: object                       # jax.sharding.Mesh
+    p: Tuple[int, int, int]
+    q: Tuple[int, int, int]
+    p_axes: Tuple[Tuple[str, ...], Tuple[str, ...], Tuple[str, ...]]
+    q_axes: Tuple[Tuple[str, ...], Tuple[str, ...], Tuple[str, ...]]
+
+
+def two_grid_axis_split(p: Tuple[int, int, int],
+                        q: Tuple[int, int, int]):
+    """Common row-major refinement of two factorizations of the same P.
+
+    Returns ``(sizes, p_groups, q_groups)`` — mesh axis sizes plus, per
+    grid, three tuples of axis indices whose size products are the grid
+    dims — or ``None`` when no single row-major device assignment serves
+    both grids (the prefix products of p and q do not chain under
+    divisibility, e.g. p=(2,3,1) vs q=(3,2,1) over P=6).
+    """
+    p = tuple(int(x) for x in p)
+    q = tuple(int(x) for x in q)
+    P = p[0] * p[1] * p[2]
+    if q[0] * q[1] * q[2] != P:
+        raise ValueError(f"grids must factor the same P: {p} vs {q}")
+    if P == 1:
+        return (1,), ((0,), (), ()), ((0,), (), ())
+    cuts = sorted({1, P, p[0], p[0] * p[1], q[0], q[0] * q[1]})
+    for a, b in zip(cuts, cuts[1:]):
+        if b % a:
+            return None
+    sizes = tuple(b // a for a, b in zip(cuts, cuts[1:]))
+
+    def groups(g):
+        bounds = (1, g[0], g[0] * g[1], P)
+        return tuple(
+            tuple(i for i, (a, b) in enumerate(zip(cuts, cuts[1:]))
+                  if a >= bounds[bi] and b <= bounds[bi + 1])
+            for bi in range(3))
+
+    return sizes, groups(p), groups(q)
+
+
+def two_grid_shared_mesh(p: Tuple[int, int, int],
+                         q: Tuple[int, int, int],
+                         devices=None):
+    """A mesh whose device order serves BOTH grids, or ``None``.
+
+    When the refinement exists, the returned mesh assigns devices exactly
+    as ``make_grid_mesh(*p)`` and ``make_grid_mesh(*q)`` over the same
+    flat device list would — so stage 1 sharded over ``p_axes`` is
+    bitwise the p-grid mesh program, and the §5.2 Redistribute to the
+    ``q_axes`` layout can be expressed in-program (no cross-mesh
+    ``device_put``).  ``None`` means no single device assignment serves
+    both factorizations; callers fall back to the cross-mesh path.
+    """
+    split = two_grid_axis_split(p, q)
+    if split is None:
+        return None
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    sizes, pg, qg = split
+    if devices is None:
+        devices = jax.devices()
+    P = p[0] * p[1] * p[2]
+    if len(devices) < P:
+        raise ValueError(f"grids {p}/{q} need {P} devices, "
+                         f"have {len(devices)}")
+    names = tuple(f"g{i}" for i in range(len(sizes)))
+    devs = np.asarray(list(devices[:P])).reshape(sizes)
+    mesh = Mesh(devs, names)
+    to_names = lambda idxs: tuple(tuple(names[i] for i in grp)
+                                  for grp in idxs)
+    return TwoGridSharedMesh(mesh=mesh, p=tuple(p), q=tuple(q),
+                             p_axes=to_names(pg), q_axes=to_names(qg))
+
+
 def _snap_1d(n: int, P: int) -> Tuple[int, int, int]:
     """Largest p1 | P with p1 <= n, rest into p2."""
     for d in sorted(_divisors(P), reverse=True):

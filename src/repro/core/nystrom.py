@@ -26,6 +26,13 @@ Plus two general two-grid forms of §5.3:
     per processor), then the second multiply on a q-grid mesh.  This is the
     executable form of §5.3 approach 1, dispatched by the planner's
     ``alg2_bound_driven`` plans.
+  * ``nystrom_two_grid_fused`` — the same algorithm compiled into ONE
+    executable: both stages plus the §5.2 ``Redistribute`` (expressed as an
+    in-program resharding) over one mesh whose device order serves both
+    grids (``core.grid.two_grid_shared_mesh``), so XLA can schedule and
+    overlap the redistribution instead of paying ``nystrom_two_grid``'s
+    host-mediated ``device_put``.  Dispatched by ``alg2_bound_driven_fused``
+    plans; falls back to the cross-mesh path when no shared mesh exists.
 
 The second stages are factored out (``nystrom_second_stage_no_redist`` /
 ``nystrom_second_stage_redist``) so they can consume any row-sharded B —
@@ -495,6 +502,250 @@ def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
 
 
 # ---------------------------------------------------------------------------
+# Fused single-jit two-grid Alg. 2: stage 1, the §5.2 ``Redistribute``, and
+# stage 2 compiled into ONE executable over ONE mesh whose device order
+# serves both grids (``core.grid.two_grid_shared_mesh``).  The cross-mesh
+# ``device_put`` of ``nystrom_two_grid`` is a host-mediated transfer XLA
+# cannot overlap or fuse; here the Redistribute is an in-program
+# ``with_sharding_constraint`` the SPMD partitioner lowers to a
+# collective-permute / all-to-all inside the compiled program.
+# ---------------------------------------------------------------------------
+
+def _spec_entry(names: Tuple[str, ...]):
+    """PartitionSpec entry for an axis-name group (None when empty)."""
+    if not names:
+        return None
+    return names[0] if len(names) == 1 else tuple(names)
+
+
+def _axes_index(mesh: Mesh, names: Tuple[str, ...]):
+    """Row-major linear index over an axis-name group (0 when empty) —
+    the grouped-axes analogue of ``jax.lax.axis_index`` on a fused axis."""
+    if not names:
+        return jnp.int32(0)
+    idx = None
+    for nm in names:
+        i = jax.lax.axis_index(nm)
+        idx = i if idx is None else idx * mesh.shape[nm] + i
+    return idx
+
+
+def _two_grid_stage2_body(shared, r: int, n: int, kind: str, salt: int,
+                          backend: str, blocks, keys):
+    """Stage-2 shard_map body + specs on a shared mesh's q-axis groups.
+
+    Mirrors ``_two_grid_stage2_prog`` with every single-axis collective /
+    axis_index generalized to the q group; grouped collectives concatenate
+    and reduce in the same row-major participant order as the standalone
+    q-grid mesh, preserving the bitwise contract.
+    """
+    from repro.kernels.local import sketch_t_block
+    mesh = shared.mesh
+    qa1, qa2, qa3 = shared.q_axes
+    q1, q2, q3 = shared.q
+    om_rows = n // q1
+    om_cols = r // q2
+
+    def body(b_blk):                              # (n/q1, r/(q3 q2))
+        i = _axes_index(mesh, qa1)
+        j = _axes_index(mesh, qa2)
+        if q2 == 1:
+            b_ik = b_blk
+        else:
+            b_ik = jax.lax.all_gather(b_blk, qa2, axis=1, tiled=True)
+        c_part = sketch_t_block(b_ik, keys, om_cols, row0=i * om_rows,
+                                col0=j * om_cols, kind=kind, salt=salt,
+                                backend=backend, blocks=blocks)
+        if q1 == 1:                               # (r/q2, r/q3) partial
+            return c_part
+        return jax.lax.psum_scatter(c_part, qa1, scatter_dimension=0,
+                                    tiled=True)
+
+    in_spec = P(_spec_entry(qa1), _spec_entry(qa3 + qa2))
+    out_spec = P(_spec_entry(qa2 + qa1), _spec_entry(qa3))
+    return body, in_spec, out_spec
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _nystrom_two_grid_fused_prog(r: int, shared, kind: str,
+                                 backend: str = "jnp", blocks=None):
+    """One jitted program: Alg. 1 on the p-axis groups, the in-program
+    Redistribute of B, and stage 2 on the q-axis groups."""
+    from repro.kernels.local import sketch_block
+    mesh = shared.mesh
+    pa1, pa2, pa3 = shared.p_axes
+    p1, p2, p3 = shared.p
+    in_spec = P(_spec_entry(pa1), _spec_entry(pa2 + pa3))
+    b_p_spec = P(_spec_entry(pa1 + pa2), _spec_entry(pa3))
+    kw = {} if backend == "jnp" else {"check_rep": False}
+
+    def impl(A, keys):
+        n = A.shape[0]
+        blk_rows = n // p2
+        blk_cols = r // p3
+
+        def stage1(a_blk):
+            j = _axes_index(mesh, pa2)
+            k = _axes_index(mesh, pa3)
+            if p3 == 1:
+                a_ij = a_blk
+            else:
+                a_ij = jax.lax.all_gather(a_blk, pa3, axis=1, tiled=True)
+            b_partial = sketch_block(a_ij, keys, blk_cols,
+                                     row0=j * blk_rows, col0=k * blk_cols,
+                                     kind=kind, backend=backend,
+                                     blocks=blocks)
+            if p2 == 1:
+                return b_partial
+            return jax.lax.psum_scatter(b_partial, pa2,
+                                        scatter_dimension=0, tiled=True)
+
+        B = shard_map(stage1, mesh=mesh, in_specs=in_spec,
+                      out_specs=b_p_spec, **kw)(A)
+
+        body, s2_in, s2_out = _two_grid_stage2_body(
+            shared, r, n, kind, 0, backend, blocks, keys)
+        # §5.2 Redistribute, in-program: p-layout of B -> q-layout, one
+        # resharding the partitioner compiles into this executable (no
+        # host-mediated device_put between the stages).
+        B = jax.lax.with_sharding_constraint(
+            B, NamedSharding(mesh, s2_in))
+        C = shard_map(body, mesh=mesh, in_specs=s2_in, out_specs=s2_out,
+                      **kw)(B)
+        return B, C
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=_PROG_CACHE_SIZE)
+def _two_grid_stage2_fused_prog(r: int, n: int, shared, kind: str,
+                                salt: int, backend: str = "jnp",
+                                blocks=None):
+    """Redistribute + stage 2 in one jit (streamed-Y finalize: stage 1's B
+    is the accumulated Y, already resident on the p-grid layout)."""
+    mesh = shared.mesh
+    pa1, pa2, pa3 = shared.p_axes
+    b_p_spec = P(_spec_entry(pa1 + pa2), _spec_entry(pa3))
+    kw = {} if backend == "jnp" else {"check_rep": False}
+
+    def impl(B, keys):
+        body, s2_in, s2_out = _two_grid_stage2_body(
+            shared, r, n, kind, salt, backend, blocks, keys)
+        B = jax.lax.with_sharding_constraint(B, NamedSharding(mesh, s2_in))
+        C = shard_map(body, mesh=mesh, in_specs=s2_in, out_specs=s2_out,
+                      **kw)(B)
+        return B, C
+
+    return jax.jit(impl), b_p_spec
+
+
+def nystrom_second_stage_two_grid_fused(B, seed, r: int,
+                                        q: Tuple[int, int, int],
+                                        p: Optional[Tuple[int, int, int]]
+                                        = None,
+                                        mesh: Optional[Mesh] = None,
+                                        devices=None, kind: str = "normal",
+                                        salt: int = 0,
+                                        backend: str = "auto", blocks=None):
+    """Stage 2 of Alg. 2 on the q-grid with the Redistribute in-program.
+
+    Like :func:`nystrom_second_stage_two_grid` but the §5.2 re-layout of B
+    and the stage-2 collectives compile into ONE executable on the shared
+    mesh of (p, q) — ``p`` names the layout B arrives in (default the
+    streamed accumulator's (P, 1, 1) row-sharded grid, for which the
+    shared mesh always exists).  Falls back to the cross-mesh path when no
+    single device assignment serves both grids.
+    """
+    from repro.kernels.local import resolve_backend
+    from .grid import two_grid_shared_mesh
+    q = tuple(int(x) for x in q)
+    n = B.shape[0]
+    if B.shape[1] != r:
+        raise ValueError(f"B must be (n, r); got {B.shape} with r={r}")
+    q1, q2, q3 = q
+    if n % q1 or r % (q1 * q2) or r % (q2 * q3):
+        raise ValueError(f"(n={n}, r={r}) not divisible by q-grid "
+                         f"({q1},{q2},{q3}): needs q1 | n, q1*q2 | r, "
+                         f"q2*q3 | r")
+    devices = _two_grid_devices(mesh, devices)
+    Pn = q1 * q2 * q3
+    p = (Pn, 1, 1) if p is None else tuple(int(x) for x in p)
+    shared = two_grid_shared_mesh(p, q, devices=devices)
+    if shared is None:
+        return nystrom_second_stage_two_grid(B, seed, r, q, devices=devices,
+                                             kind=kind, salt=salt,
+                                             backend=backend, blocks=blocks)
+    backend = resolve_backend(backend)
+    blocks = None if blocks is None else tuple(blocks)
+    fn, b_p_spec = _two_grid_stage2_fused_prog(r, n, shared, kind, salt,
+                                               backend, blocks)
+    # placement onto the shared mesh in the p-grid layout.  When B already
+    # lives in that layout — the streamed-finalize case: nystrom_finalize
+    # gates on a (P,1,1) accumulator grid, whose Y layout P((p1,p2),p3)
+    # IS b_p_spec — the shared mesh assigns devices exactly as the p-grid
+    # mesh does, so this moves no bytes between devices and the actual
+    # re-layout happens inside the compiled program.  A B arriving in some
+    # other sharding gets re-laid out by this device_put first (same
+    # host-mediated cost the cross-mesh path pays on every call).
+    B = jax.device_put(B, NamedSharding(shared.mesh, b_p_spec))
+    keys = jnp.stack(seed_keys(seed))
+    return fn(B, keys)
+
+
+def nystrom_two_grid_fused(A, seed, r: int, mesh: Optional[Mesh] = None,
+                           p: Tuple[int, int, int] = None,
+                           q: Tuple[int, int, int] = None,
+                           kind: str = "normal", devices=None,
+                           backend: str = "auto", blocks=None):
+    """Alg. 2 with both stages AND the §5.2 Redistribute in one jit (§5.3).
+
+    Same contract as :func:`nystrom_two_grid` — independent (p, q)
+    factorizations of P, B returned in the q layout, bitwise
+    ``nystrom_reference`` when p2 == 1 and q1 == 1 — but compiled as a
+    single executable over the shared mesh of
+    :func:`repro.core.grid.two_grid_shared_mesh`: the cross-grid
+    redistribution of B is an in-program resharding (still <= nr/P words
+    per processor, emitted as an all-to-all / collective-permute the
+    compiler can overlap) instead of a host-mediated ``device_put``.
+    Falls back to :func:`nystrom_two_grid` when no single device
+    assignment serves both grids (``two_grid_shared_mesh`` returns None).
+    """
+    if p is None or q is None:
+        raise ValueError("nystrom_two_grid_fused needs explicit p and q "
+                         "grids (use nystrom_auto(variant='bound_driven') "
+                         "to pick them from the bound)")
+    from repro.kernels.local import resolve_backend
+    from .grid import alg2_two_grid_executable, two_grid_shared_mesh
+    p = tuple(int(x) for x in p)
+    q = tuple(int(x) for x in q)
+    if p[0] * p[1] * p[2] != q[0] * q[1] * q[2]:
+        raise ValueError(f"grids must factor the same P: {p} vs {q}")
+    n = A.shape[0]
+    if A.shape[1] != n:
+        raise ValueError(f"Nyström needs a square A; got {A.shape}")
+    if not alg2_two_grid_executable(n, r, p, q):
+        raise ValueError(f"(n={n}, r={r}) not divisible by grids p={p}, "
+                         f"q={q} (see alg2_two_grid_executable)")
+    devices = _two_grid_devices(mesh, devices)
+    shared = two_grid_shared_mesh(p, q, devices=devices)
+    if shared is None:
+        # no device-order reconciliation: the two-mesh path with its
+        # explicit cross-mesh Redistribute is the only executable form
+        return nystrom_two_grid(A, seed, r, p=p, q=q, kind=kind,
+                                devices=devices, backend=backend,
+                                blocks=blocks)
+    backend = resolve_backend(backend)
+    blocks = None if blocks is None else tuple(blocks)
+    pa1, pa2, pa3 = shared.p_axes
+    A = jax.device_put(
+        A, NamedSharding(shared.mesh,
+                         P(_spec_entry(pa1), _spec_entry(pa2 + pa3))))
+    keys = jnp.stack(seed_keys(seed))
+    return _nystrom_two_grid_fused_prog(r, shared, kind, backend,
+                                        blocks)(A, keys)
+
+
+# ---------------------------------------------------------------------------
 # Convenience driver
 # ---------------------------------------------------------------------------
 
@@ -512,7 +763,10 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
       * ``"bound_driven"`` — the §5.3 general two-grid algorithm on the
         Theorem-3 bound-driven (p, q) pair, snapped to the min-words
         executable factorization pair when the ideal grids do not divide
-        (``core.grid.select_two_grid_executable``);
+        (``core.grid.select_two_grid_executable``); runs the single-jit
+        fused program (``nystrom_two_grid_fused`` — in-program §5.2
+        Redistribute) whenever the pair admits a shared mesh, else the
+        cross-mesh two-grid path;
       * ``"redist"`` / ``"no_redist"`` — explicit.
     plan: a precomputed :class:`repro.plan.Plan` (wins over ``variant``;
     its backend decision also wins over the ``backend`` arg).
@@ -533,11 +787,13 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
         backend = getattr(plan, "backend", backend) or backend
         if plan.blocks and plan.variant != "pallas_fused":
             blocks = tuple(plan.blocks[k] for k in ("bm", "bn", "bk"))
-        if plan.variant == "alg2_bound_driven":
-            B, C = nystrom_two_grid(A, seed, r,
-                                    p=plan.grid, q=plan.q_grid, kind=kind,
-                                    devices=list(devices[: plan.n_procs]),
-                                    backend=backend, blocks=blocks)
+        if plan.variant in ("alg2_bound_driven", "alg2_bound_driven_fused"):
+            fn = (nystrom_two_grid_fused
+                  if plan.variant == "alg2_bound_driven_fused"
+                  else nystrom_two_grid)
+            B, C = fn(A, seed, r, p=plan.grid, q=plan.q_grid, kind=kind,
+                      devices=list(devices[: plan.n_procs]),
+                      backend=backend, blocks=blocks)
             mesh_q = make_grid_mesh(*plan.q_grid, axis_names=Q_AXES,
                                     devices=list(devices[: plan.n_procs]))
             return B, C, mesh_q, "bound_driven"
@@ -558,9 +814,11 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
                              f"divides (n={n}, r={r}); pad the shape or "
                              f"change P")
         p, q, _exact = got
-        B, C = nystrom_two_grid(A, seed, r, p=p, q=q, kind=kind,
-                                devices=list(devices), backend=backend,
-                                blocks=blocks)
+        # prefer the single-jit fused program; it falls back to the
+        # cross-mesh two-grid path itself when no shared mesh exists
+        B, C = nystrom_two_grid_fused(A, seed, r, p=p, q=q, kind=kind,
+                                      devices=list(devices), backend=backend,
+                                      blocks=blocks)
         mesh_q = make_grid_mesh(*q, axis_names=Q_AXES, devices=list(devices))
         return B, C, mesh_q, "bound_driven"
     if variant == "auto":

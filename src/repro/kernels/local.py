@@ -360,6 +360,87 @@ def _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt, scale,
 
 
 # ---------------------------------------------------------------------------
+# Row-slab fold: Y += zero-padded dY placed at a traced row offset — the
+# streaming ``update_rows`` accumulation (stream/distributed.py).  The jnp
+# body materializes the zero-padded frame in HBM (write + read of
+# (k + 2m)·n words) before the slice-add; the pallas body performs the
+# identical concatenate + dynamic_slice + add INSIDE the kernel, so the
+# padded frame lives only in VMEM and Y (aliased in-place) makes one HBM
+# round trip.  Bitwise-identical by construction: both backends run the
+# same ops on the same operands.
+# ---------------------------------------------------------------------------
+
+def _fold_rows_jnp(y, d, start):
+    m, c = y.shape
+    pad = jnp.zeros((m, c), d.dtype)
+    dpad = jnp.concatenate([pad, d, pad], axis=0)
+    return y + jax.lax.dynamic_slice(dpad, (start, jnp.int32(0)), (m, c))
+
+
+def _fold_rows_body(meta_ref, y_ref, d_ref, o_ref, *, m):
+    start = meta_ref[0]
+    y = y_ref[...]
+    d = d_ref[...]
+    pad = jnp.zeros((m, d.shape[1]), d.dtype)
+    dpad = jnp.concatenate([pad, d, pad], axis=0)
+    win = jax.lax.dynamic_slice(dpad, (start, 0), (m, d.shape[1]))
+    o_ref[...] = (y + win).astype(o_ref.dtype)
+
+
+def _fold_rows_pallas(y, d, start, interpret, pad_to=None):
+    import jax.experimental.pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    m, c = y.shape
+    k = d.shape[0]
+    if pad_to is not None:            # tests: force the padded (native) path
+        mp, cp, kp = pad_to
+    elif interpret:
+        mp, cp, kp = m, c, k          # one exact tile — the bitwise default
+    else:
+        mp, cp, kp = _round_up(m, 8), _round_up(c, 128), _round_up(k, 8)
+    yp = _pad2(y, mp, cp)
+    dp = _pad2(d, kp, cp)
+    # The caller's ``start`` indexes a frame whose top pad is the LOGICAL
+    # shard height m; the in-kernel frame's top pad is the padded height
+    # mp, so shift by the difference — otherwise row-padding would slide
+    # the slab delta mp - m rows down (same padding contract as the
+    # sketch kernels: padding never shifts in-range placement).
+    meta = (jnp.asarray(start, jnp.int32) + jnp.int32(mp - m)).reshape(1)
+    kernel = functools.partial(_fold_rows_body, m=mp)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(1,),
+        in_specs=[pl.BlockSpec((mp, cp), lambda i, m_: (0, 0)),
+                  pl.BlockSpec((kp, cp), lambda i, m_: (0, 0))],
+        out_specs=pl.BlockSpec((mp, cp), lambda i, m_: (0, 0)))
+    out = pl.pallas_call(
+        kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((mp, cp), y.dtype),
+        input_output_aliases={1: 0},    # y aliases the output in-place
+        interpret=interpret)(meta, yp, dp)
+    return out[:m, :c]
+
+
+def fold_rows_block(y, d, start, backend: str = "jnp", interpret=None):
+    """``y + [0_m; d; 0_m][start : start + m]`` — the row-slab Y fold.
+
+    ``y``: (m, c) resident shard; ``d``: (k, c) slab delta; ``start`` may
+    be traced (the shard-relative clipped offset, see
+    ``stream/distributed.py``).  Shards outside the slab slice pure zeros,
+    so row-disjoint ingest reproduces the full-shape path bitwise.  The
+    pallas backend keeps the zero-padded frame in VMEM and aliases ``y``
+    in-place — 2·m·c accumulate HBM words instead of the jnp body's
+    materialized-frame 4·k·c-class traffic (``plan.model``'s
+    ``stream_update_cost`` prices both).
+    """
+    b = resolve_backend(backend)
+    if b == "jnp":
+        return _fold_rows_jnp(y, d, start)
+    interpret = _interpret() if interpret is None else interpret
+    return _fold_rows_pallas(y, d, start, interpret)
+
+
+# ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
 

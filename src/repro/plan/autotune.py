@@ -223,20 +223,32 @@ def _measurable_candidates(plan: Plan, machine: M.MachineModel,
             for blocks in BLOCK_SWEEP:
                 if _vmem_fits(blocks, machine):
                     add(cand.variant, blocks=blocks, backend="pallas")
-        elif cand.variant == "alg2_bound_driven":
-            # sweep stage-2 grids: the analytic q plus the next-cheapest
-            # executable q factorizations for the same stage-1 grid
+        elif cand.variant in ("alg2_bound_driven",
+                              "alg2_bound_driven_fused"):
+            # JOINT (p, q)-pair sweep: score every executable pair of
+            # factorizations of P — not just q-grids under the analytic
+            # stage-1 grid — and measure the top-k.  Fused candidates are
+            # restricted to pairs a shared mesh can serve
+            # (core.grid.two_grid_axis_split).
             from repro.core.grid import (alg2_two_grid_executable,
-                                         factorizations_3d)
+                                         factorizations_3d,
+                                         two_grid_axis_split)
             n, r = plan.dims
-            scored_q = []
-            for qg in factorizations_3d(plan.n_procs):
-                if alg2_two_grid_executable(n, r, cand.grid, qg):
-                    c = M.alg2_cost(n, r, cand.grid, qg)
-                    scored_q.append((c.seconds(machine, isz), qg))
-            scored_q.sort(key=lambda t: t[0])
-            for _, qg in scored_q[:top_k]:
-                add_with_blocks(cand.variant, grid=cand.grid, q_grid=qg,
+            fused = cand.variant == "alg2_bound_driven_fused"
+            cost_fn = M.alg2_fused_cost if fused else M.alg2_cost
+            facs = list(factorizations_3d(plan.n_procs))
+            scored_pq = []
+            for pg in facs:
+                for qg in facs:
+                    if not alg2_two_grid_executable(n, r, pg, qg):
+                        continue
+                    if fused and two_grid_axis_split(pg, qg) is None:
+                        continue
+                    c = cost_fn(n, r, pg, qg)
+                    scored_pq.append((c.seconds(machine, isz), pg, qg))
+            scored_pq.sort(key=lambda t: t[0])
+            for _, pg, qg in scored_pq[:top_k]:
+                add_with_blocks(cand.variant, grid=pg, q_grid=qg,
                                 backend=cand.backend)
         else:
             add_with_blocks(cand.variant, grid=cand.grid,
@@ -334,8 +346,11 @@ def _rescore(plan: Plan, machine: M.MachineModel) -> Plan:
             c = M.local_cost(n1, n2, r)
     elif plan.task == "nystrom":
         n, r = plan.dims
-        if plan.variant in ("alg2_no_redist", "alg2_redist",
-                            "alg2_bound_driven") and plan.grid:
+        if plan.variant == "alg2_bound_driven_fused" and plan.grid:
+            c = M.alg2_fused_cost(n, r, plan.grid, plan.q_grid or plan.grid,
+                                  backend=plan.backend)
+        elif plan.variant in ("alg2_no_redist", "alg2_redist",
+                              "alg2_bound_driven") and plan.grid:
             c = M.alg2_cost(n, r, plan.grid, plan.q_grid or plan.grid,
                             backend=plan.backend)
         else:
@@ -391,8 +406,11 @@ def _messages_of(plan: Plan) -> float:
     if plan.task == "sketch" and plan.variant == "alg1" and plan.grid:
         return M.alg1_cost(*plan.dims, plan.grid).messages
     if plan.task == "nystrom" and plan.grid:
-        return M.alg2_cost(*plan.dims, plan.grid,
-                           plan.q_grid or plan.grid).messages
+        cost_fn = (M.alg2_fused_cost
+                   if plan.variant == "alg2_bound_driven_fused"
+                   else M.alg2_cost)
+        return cost_fn(*plan.dims, plan.grid,
+                       plan.q_grid or plan.grid).messages
     if plan.task == "stream":
         n1 = plan.dims[0]
         k = plan.chunk_rows or n1
@@ -417,11 +435,15 @@ def _plan_from_entry(plan: Plan, entry: dict) -> Optional[Plan]:
                 return None
     elif plan.task == "nystrom":
         n, r = plan.dims
-        if variant == "alg2_bound_driven":
-            from repro.core.grid import alg2_two_grid_executable
+        if variant in ("alg2_bound_driven", "alg2_bound_driven_fused"):
+            from repro.core.grid import (alg2_two_grid_executable,
+                                         two_grid_axis_split)
             qg = tuple(entry["q_grid"]) if entry.get("q_grid") else None
             if grid is None or qg is None \
                     or not alg2_two_grid_executable(n, r, grid, qg):
+                return None
+            if variant == "alg2_bound_driven_fused" \
+                    and two_grid_axis_split(grid, qg) is None:
                 return None
         elif variant.startswith("alg2"):
             P = plan.n_procs

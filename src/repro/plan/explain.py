@@ -84,10 +84,27 @@ def explain(plan: Plan) -> str:
         n, r = plan.dims
         rw = M.redistribute_words(n, r, plan.grid, plan.q_grid)
         how = ("general two-grid (§5.3 approach 1): stage 1 on p, stage 2 "
-               "on q" if plan.variant == "alg2_bound_driven"
+               "on q" if plan.variant in ("alg2_bound_driven",
+                                          "alg2_bound_driven_fused")
                else "B re-laid out between stages")
-        lines.append(f"          {how}; Redistribute of B p->q moves "
-                     f"{_fmt(rw)} words/proc (§5.2)")
+        if plan.variant == "alg2_bound_driven_fused":
+            fw = M.fused_redistribute_words(n, r, plan.grid, plan.q_grid)
+            lines.append(f"          {how}; Redistribute of B p->q (§5.2) "
+                         f"IN-PROGRAM on the shared mesh: {_fmt(fw)} "
+                         f"words/proc min-cut (cross-mesh device_put "
+                         f"would move {_fmt(rw)})")
+        else:
+            from repro.core.grid import two_grid_axis_split
+            line = (f"          {how}; Redistribute of B p->q moves "
+                    f"{_fmt(rw)} words/proc (§5.2), cross-mesh device_put")
+            if (plan.variant == "alg2_bound_driven"
+                    and two_grid_axis_split(plan.grid, plan.q_grid)
+                    is not None):
+                fw = M.fused_redistribute_words(n, r, plan.grid,
+                                                plan.q_grid)
+                line += (f" (single-jit fused form would move {_fmt(fw)} "
+                         f"in-program)")
+            lines.append(line)
     if plan.task in ("sketch", "stream"):
         n1 = plan.dims[0]
         lines.append(f"  zero-communication regime up to P <= n1 = {n1}"

@@ -14,6 +14,11 @@ Per-variant analytic costs:
                            ``core.grid.alg1_bandwidth_words``.
   * ``alg2_cost``        — Alg. 2 on (p, q) grids: words are exactly
                            ``core.grid.alg2_bandwidth_words``.
+  * ``alg2_fused_cost``  — the single-jit two-grid form
+                           (``nystrom_two_grid_fused``): same stage terms,
+                           but the cross-mesh nr/P Redistribute becomes the
+                           in-program layout min-cut
+                           (``fused_redistribute_words``).
   * ``local_cost``       — single-device GEMM with Omega materialized in HBM.
   * ``pallas_fused_cost``— the fused kernel: Omega never touches HBM, so the
                            memory term drops by n2·r words (the §6.3 claim
@@ -254,6 +259,57 @@ def redistribute_words(n: int, r: int, p: Tuple[int, int, int],
     return n * r / P
 
 
+def fused_redistribute_words(n: int, r: int, p: Tuple[int, int, int],
+                             q: Tuple[int, int, int]) -> float:
+    """Per-processor words of the §5.2 ``Redistribute`` when it is expressed
+    IN-PROGRAM (``nystrom_two_grid_fused``): the min-cut between B's
+    stage-1 layout P((p1, p2), p3) and its stage-2 layout P(q1, (q3, q2))
+    over the shared device order.  Each device keeps the overlap between
+    its two shards and only receives the rest, so this is at most the
+    cross-mesh bound nr/P (``redistribute_words``) and strictly below it
+    whenever any device's shards intersect — e.g. the regime-1 pair
+    p=(P,1,1), q=(1,1,P) moves nr/P - nr/P^2 words.  Computed exactly as
+    the max over devices of (q-shard words) - (overlap words)."""
+    p1, p2, p3 = p
+    q1, q2, q3 = q
+    P = p1 * p2 * p3
+    pr, pc = n / (p1 * p2), r / p3            # p-layout shard extents
+    qr, qc = n / q1, r / (q2 * q3)            # q-layout shard extents
+    worst = 0.0
+    for d in range(P):
+        rb, cb = divmod(d, p3)                # p-coords of device d
+        iq, rem = divmod(d, q2 * q3)          # q-coords of device d
+        jq, kq = divmod(rem, q3)
+        col_blk = kq * q2 + jq                # cols sharded (q3, q2)-major
+        ov_r = max(0.0, min(rb * pr + pr, iq * qr + qr)
+                   - max(rb * pr, iq * qr))
+        ov_c = max(0.0, min(cb * pc + pc, col_blk * qc + qc)
+                   - max(cb * pc, col_blk * qc))
+        worst = max(worst, qr * qc - ov_r * ov_c)
+    return worst
+
+
+def alg2_fused_cost(n: int, r: int, p: Tuple[int, int, int],
+                    q: Tuple[int, int, int], backend: str = "jnp") -> Cost:
+    """Alg. 2 compiled as ONE program (``nystrom_two_grid_fused``): same
+    stage collectives as :func:`alg2_cost`, but the cross-mesh nr/P
+    Redistribute term is replaced by the in-program min-cut resharding
+    (:func:`fused_redistribute_words`) and its log2(P) host-mediated hops
+    by one in-program collective.  Words never drop below the Theorem 3
+    floor — the stage All-Gather / Reduce-Scatter terms are untouched and
+    the min-cut is the traffic a REAL schedule moves (pinned by
+    tests/test_two_grid_fused.py across swept (n, r, P))."""
+    _, p2, p3 = p
+    base = alg2_cost(n, r, p, q, backend=backend)
+    cross = redistribute_words(n, r, p, q)
+    fused = fused_redistribute_words(n, r, p, q)
+    msgs = alg1_latency_hops(p2, p3) + math.log2(max(p[0], 1))
+    if fused > 0.0:
+        msgs += 1.0                   # one in-program resharding collective
+    return dataclasses.replace(base, words=base.words - cross + fused,
+                               messages=msgs)
+
+
 def alg2_cost(n: int, r: int, p: Tuple[int, int, int],
               q: Tuple[int, int, int], backend: str = "jnp") -> Cost:
     """Alg. 2 on grids (p, q): words is ``alg2_bandwidth_words`` exactly
@@ -310,11 +366,11 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
     materialized delta (4·l·n2/(p2·p3) accumulate words).  The pallas
     body generates Omega/Psi in VMEM and fuses ``W += Psi·H`` into the
     kernel accumulator (``sketch_t_block(acc=w)``): zero Omega/Psi words
-    and one W round trip (2·l·n2/(p2·p3)).  The Y fold is the same
-    traced-offset slice-add on BOTH backends (dY write + dY read + Y
-    read + Y write = 4·k·r/p3) — the fused ``sketch_block(acc=y)`` round
-    trip currently applies only to the full-shape additive update on
-    p2 == 1 grids, which this per-slab cost deliberately does not credit.
+    and one W round trip (2·l·n2/(p2·p3)).  The traced-offset Y fold is
+    backend-dispatched too (``kernels.local.fold_rows_block``): the jnp
+    body round-trips dY plus the zero-padded frame (4·k·r/p3 accumulate
+    words), the pallas body keeps the padded frame in VMEM and aliases
+    the Y shard in-place (2·k·r/p3).
     """
     p1, p2, p3 = grid
     words = 0.0
@@ -328,7 +384,7 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
     flops = 2.0 * k * n2 * r / (p2 * p3)
     fused = backend == "pallas"
     omega_hbm = 0.0 if fused else n2 * r / (p2 * p3)
-    acc_hbm = 4.0 * k * r / p3      # Y fold: identical on both backends
+    acc_hbm = (2.0 if fused else 4.0) * k * r / p3     # fused Y fold
     hbm = k * n2 / (p2 * p3) + omega_hbm + acc_hbm
     if corange:
         flops += 2.0 * k * n2 * l / (p2 * p3)

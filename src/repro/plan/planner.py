@@ -196,17 +196,21 @@ class Plan:
                   else nystrom_redist)
             return fn(A, seed, r, mesh, axis="x", kind=self.kind,
                       backend=self.backend, blocks=self._blocks_tuple())
-        if self.variant == "alg2_bound_driven":
-            from repro.core.nystrom import nystrom_two_grid
+        if self.variant in ("alg2_bound_driven", "alg2_bound_driven_fused"):
+            from repro.core.nystrom import (nystrom_two_grid,
+                                            nystrom_two_grid_fused)
             devices = devices if devices is not None else jax.devices()
             if len(devices) < self.n_procs:
                 raise ValueError(f"plan needs {self.n_procs} devices, "
                                  f"have {len(devices)}")
-            return nystrom_two_grid(A, seed, r, p=self.grid, q=self.q_grid,
-                                    kind=self.kind,
-                                    devices=list(devices[: self.n_procs]),
-                                    backend=self.backend,
-                                    blocks=self._blocks_tuple())
+            fn = (nystrom_two_grid_fused
+                  if self.variant == "alg2_bound_driven_fused"
+                  else nystrom_two_grid)
+            return fn(A, seed, r, p=self.grid, q=self.q_grid,
+                      kind=self.kind,
+                      devices=list(devices[: self.n_procs]),
+                      backend=self.backend,
+                      blocks=self._blocks_tuple())
         if self.variant == "local_xla":
             from repro.core.nystrom import nystrom_reference
             return nystrom_reference(A, seed, r, kind=self.kind)
@@ -351,13 +355,22 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
     wins whenever its (p, q) pair prices below both 1-D variants — in
     particular when P > n and no 1-D grid is runnable at all.
 
+    When the bound-driven (p, q) pair admits a shared mesh
+    (``core.grid.two_grid_shared_mesh``), a fourth executable candidate
+    ``alg2_bound_driven_fused`` prices the single-jit program
+    (``nystrom_two_grid_fused``): identical stage collectives, but the
+    §5.2 Redistribute is an in-program min-cut resharding (<= nr/P words,
+    one collective hop) instead of the cross-mesh host ``device_put`` —
+    so it outranks the cross-mesh form whenever both can run.
+
     variant: ``"auto"`` lets the cost model choose; ``"no_redist"`` /
-    ``"redist"`` / ``"bound_driven"`` force that variant (the others stay
-    in ``candidates`` for the audit trail).
+    ``"redist"`` / ``"bound_driven"`` / ``"bound_driven_fused"`` force
+    that variant (the others stay in ``candidates`` for the audit trail).
     """
     requires = {"auto": None, "no_redist": "alg2_no_redist",
                 "redist": "alg2_redist",
-                "bound_driven": "alg2_bound_driven"}
+                "bound_driven": "alg2_bound_driven",
+                "bound_driven_fused": "alg2_bound_driven_fused"}
     if variant not in requires:
         raise ValueError(f"unknown variant {variant!r}")
     require = requires[variant]
@@ -427,6 +440,26 @@ def plan_nystrom(n: int, r: int, P: Optional[int] = None,
                 note=note if allow_pallas else
                 (note + "; " if note else "") + "needs TPU (interpret-only "
                                                "here)"))
+            # single-jit fused two-grid (nystrom_two_grid_fused): same
+            # stage collectives, but the §5.2 Redistribute is an
+            # in-program min-cut resharding instead of a host-mediated
+            # cross-mesh device_put — only emitted when one device order
+            # serves both grids (core.grid.two_grid_shared_mesh).
+            from repro.core.grid import two_grid_axis_split
+            if two_grid_axis_split(p_bd, q_bd) is not None:
+                fnote = (note + "; " if note else "") + \
+                    "in-program Redistribute (shared mesh)"
+                cf = M.alg2_fused_cost(n, r, p_bd, q_bd)
+                cands.append(Candidate(
+                    "alg2_bound_driven_fused", cf, cf.seconds(machine, isz),
+                    grid=p_bd, q_grid=q_bd, executable=True, note=fnote))
+                cfp = M.alg2_fused_cost(n, r, p_bd, q_bd, backend="pallas")
+                cands.append(Candidate(
+                    "alg2_bound_driven_fused", cfp,
+                    cfp.seconds(machine, isz), grid=p_bd, q_grid=q_bd,
+                    backend="pallas", executable=allow_pallas,
+                    note=fnote if allow_pallas else
+                    fnote + "; needs TPU (interpret-only here)"))
         else:
             cb = M.alg2_cost(n, r, ideal.p, ideal.q)
             cands.append(Candidate(

@@ -29,7 +29,7 @@ from repro.core.compat import shard_map
 from repro.core.nystrom import (
     nystrom_second_stage_no_redist,
     nystrom_second_stage_redist,
-    nystrom_second_stage_two_grid,
+    nystrom_second_stage_two_grid_fused,
 )
 from repro.core.sketch import (
     DEFAULT_AXES,
@@ -59,7 +59,10 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
     the §5.3 general two-grid second stage: the accumulated Y plays stage
     1's B (already on the (P, 1, 1) grid), and the bound's q-grid — snapped
     to the min-words executable factorization — consumes it via
-    :func:`repro.core.nystrom.nystrom_second_stage_two_grid`.
+    :func:`repro.core.nystrom.nystrom_second_stage_two_grid_fused`, which
+    compiles the §5.2 Redistribute and the stage-2 collectives into one
+    program on the shared mesh (the (P, 1, 1) accumulator grid always
+    admits one).
     ``backend`` selects the second stage's local GEMM body
     (kernels/local.py) — the pallas backend keeps Omega out of HBM at
     finalize time too.
@@ -93,8 +96,14 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
             raise ValueError(f"no q-grid factorization of P={Pn} divides "
                              f"(n={cfg.n1}, r={cfg.r})")
         _, q, _exact = got
-        return nystrom_second_stage_two_grid(
-            Y, cfg.seed, cfg.r, q, devices=list(mesh.devices.flat),
+        # prefer the single-jit fused second stage: the §5.2 Redistribute
+        # of the accumulated Y and the q-grid stage-2 collectives compile
+        # into one program (the (P,1,1) accumulator grid always admits a
+        # shared mesh; the helper falls back to the cross-mesh path
+        # otherwise)
+        return nystrom_second_stage_two_grid_fused(
+            Y, cfg.seed, cfg.r, q, p=(Pn, 1, 1),
+            devices=list(mesh.devices.flat),
             kind=cfg.kind, salt=cfg.omega_salt, backend=backend)
     raise ValueError(variant)
 
@@ -232,9 +241,14 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
 
     ``backend``: local GEMM body for the slab sketch and the Psi-slab
     product (kernels/local.py) — pallas keeps the Omega/Psi blocks out of
-    HBM; the Y fold is a traced-offset slice either way.
+    HBM, and the traced-offset Y fold itself is fused too
+    (``fold_rows_block``: the zero-padded dY frame lives only in VMEM and
+    the Y shard is aliased in-place, one HBM round trip instead of the
+    jnp body's materialized-frame traffic).  Both backends run the same
+    ops on the same operands, so the fold is bitwise-identical.
     """
-    from repro.kernels.local import sketch_block, sketch_t_block
+    from repro.kernels.local import (fold_rows_block, sketch_block,
+                                     sketch_t_block)
     ax1, ax2, ax3 = axes
     p1, p2, p3 = (mesh.shape[a] for a in axes)
     y_rows = cfg.n1 // (p1 * p2)        # Y shard height, P((p1,p2), p3)
@@ -262,16 +276,15 @@ def _sharded_rowblock_prog(cfg: StreamConfig, mesh: Mesh,
         dY = jax.lax.psum(part, ax2) if p2 > 1 else part
         # fold the overlap [g0, g0 + y_rows) n [row0, row0 + k) into the
         # resident shard: slice a zero-padded dY so that shards outside
-        # the slab add exact zeros.
+        # the slab add exact zeros.  clip explicitly: lax.dynamic_slice
+        # WRAPS negative starts (Python-style) instead of clamping, which
+        # would alias the zero pad onto real dY rows for shards left of
+        # the slab.  The fold itself is backend-dispatched
+        # (kernels/local.py fold_rows_block): the pallas body keeps the
+        # padded frame in VMEM and aliases the Y shard in-place.
         g0 = (i * p2 + j) * y_rows
-        pad = jnp.zeros((y_rows, r_cols), dY.dtype)
-        dpad = jnp.concatenate([pad, dY, pad], axis=0)
-        # clip explicitly: lax.dynamic_slice WRAPS negative starts
-        # (Python-style) instead of clamping, which would alias the zero
-        # pad onto real dY rows for shards left of the slab.
         start = jnp.clip(g0 - row0 + y_rows, 0, k + y_rows)
-        y_new = y_blk + jax.lax.dynamic_slice(
-            dpad, (start, jnp.int32(0)), (y_rows, r_cols))
+        y_new = fold_rows_block(y_blk, dY, start, backend=backend)
         if w_blk is None:
             return y_new
         if backend == "jnp":

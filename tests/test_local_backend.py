@@ -140,6 +140,58 @@ def test_k_split_blocks_tolerance():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_fold_rows_block_backend_parity():
+    """The row-slab Y fold (stream ``update_rows``) is backend-dispatched
+    (``fold_rows_block``): the pallas body runs the identical zero-pad +
+    traced-offset slice + add inside one kernel (padded frame in VMEM, Y
+    aliased in-place) and must be BITWISE the jnp body across in-range,
+    clipped-left, clipped-right, and fully-out-of-overlap offsets."""
+    from repro.kernels.local import fold_rows_block
+    y = jax.random.normal(jax.random.key(0), (8, 6))
+    d = jax.random.normal(jax.random.key(1), (5, 6))
+    m, k = y.shape[0], d.shape[0]
+    for start in (0, 1, 3, m, k + m):      # clip range is [0, k + m]
+        j = fold_rows_block(y, d, jnp.int32(start), backend="jnp")
+        p = fold_rows_block(y, d, jnp.int32(start), backend="pallas")
+        np.testing.assert_array_equal(np.asarray(j), np.asarray(p))
+    # start == m places d exactly at the top of y
+    top = fold_rows_block(y, d, jnp.int32(m), backend="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(top)[:k], np.asarray(y[:k] + d))
+    # fully outside the overlap: both backends add exact zeros
+    out = fold_rows_block(y, d, jnp.int32(0), backend="pallas")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(y))
+    # traced start under jit, and bf16 state
+    f = jax.jit(lambda y, d, s: fold_rows_block(y, d, s, backend="pallas"))
+    np.testing.assert_array_equal(
+        np.asarray(f(y, d, jnp.int32(7))),
+        np.asarray(fold_rows_block(y, d, 7, backend="jnp")))
+    yb, db = y.astype(jnp.bfloat16), d.astype(jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(fold_rows_block(yb, db, jnp.int32(9), backend="pallas"),
+                   np.float32),
+        np.asarray(fold_rows_block(yb, db, jnp.int32(9), backend="jnp"),
+                   np.float32))
+
+
+def test_fold_rows_block_padded_path_parity():
+    """The native-TPU tiling pads the fold frame to (8, 128)-aligned
+    shapes; the in-kernel top pad is then TALLER than the logical shard,
+    so the traced start must be shifted by (mp - m) or the slab delta
+    lands rows too low.  Forced through interpret mode so CI pins the
+    padding contract the compiled path relies on (padding never shifts
+    in-range placement)."""
+    from repro.kernels.local import _fold_rows_jnp, _fold_rows_pallas
+    y = jax.random.normal(jax.random.key(0), (6, 6))
+    d = jax.random.normal(jax.random.key(1), (5, 6))
+    for start in (0, 2, 6, 11):       # clip range is [0, k + m]
+        ref = _fold_rows_jnp(y, d, jnp.int32(start))
+        got = _fold_rows_pallas(y, d, jnp.int32(start), interpret=True,
+                                pad_to=(8, 128, 8))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got),
+                                      err_msg=f"start={start}")
+
+
 def test_traced_seed_and_offsets_under_jit():
     A = jax.random.normal(jax.random.key(0), (16, 48))
     keys = jnp.array([7, 0], jnp.uint32)
@@ -248,12 +300,17 @@ for st in (stj, stp):
 assert np.array_equal(np.asarray(stj.Y), np.asarray(stp.Y))
 assert np.array_equal(np.asarray(stj.W), np.asarray(stp.W))
 
-# fused Y accumulate (p2 == 1) and the scatter path (p2 > 1)
+# fused Y accumulate (p2 == 1) and the scatter path (p2 > 1); row-slab
+# ingest exercises the fused traced-offset Y fold (fold_rows_block) on
+# every grid shape — shards left of, inside, and right of the slab
 for g in ((8,1,1), (2,2,2)):
     c2 = StreamConfig(n1=16, n2=48, r=8, seed=3, corange=False)
     meshg = make_grid_mesh(*g)
     a = ShardedStreamingSketch(c2, meshg, backend="jnp").update(H1)
     b = ShardedStreamingSketch(c2, meshg, backend="pallas").update(H1)
+    for st in (a, b):
+        st.update_rows(6, np.asarray(H2)[6:12])
+        st.update_rows(0, np.asarray(H2)[0:2])
     assert np.array_equal(np.asarray(a.Y), np.asarray(b.Y)), g
 
 # symmetric stream: Nyström finalize on both backends, bitwise

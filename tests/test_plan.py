@@ -156,12 +156,24 @@ def test_nystrom_crossover_bandwidth_dominated():
     below = plan_nystrom(n, r, P=4, machine=CPU)
     above = plan_nystrom(n, r, P=64, machine=CPU)
     assert below.variant == "alg2_no_redist"
-    assert above.variant == "alg2_redist"
+    # above the crossover the planner abandons no_redist for the redist
+    # all-to-all family — since PR 5 in its fused single-jit form: the
+    # regime-1 bound-driven pair IS the redist layout p=(P,1,1), q=(1,1,P),
+    # with the §5.2 Redistribute in-program at the layout min-cut < nr/P
+    assert above.variant == "alg2_bound_driven_fused"
+    assert (above.grid, above.q_grid) == ((64, 1, 1), (1, 1, 64))
     # and the words honor the closed forms on both sides
     assert below.predicted_words == alg2_bandwidth_words(n, r, (4, 1, 1),
                                                          (4, 1, 1))
-    assert above.predicted_words == alg2_bandwidth_words(n, r, (64, 1, 1),
-                                                         (1, 1, 64))
+    from repro.plan.model import alg2_fused_cost
+    assert above.predicted_words == alg2_fused_cost(
+        n, r, (64, 1, 1), (1, 1, 64)).words
+    assert above.predicted_words < alg2_bandwidth_words(n, r, (64, 1, 1),
+                                                        (1, 1, 64))
+    # the plain redist closed form still backs the cross-mesh candidates
+    redist = [c for c in above.candidates if c.variant == "alg2_redist"]
+    assert redist and redist[0].cost.words == alg2_bandwidth_words(
+        n, r, (64, 1, 1), (1, 1, 64))
 
 
 def test_infeasible_shape_yields_analytic_only_plan():

@@ -91,11 +91,15 @@ def test_select_two_grid_snap_policy(ne, re_, Pe):
 
 def test_bound_driven_is_only_executable_variant_when_1d_cannot_run():
     """r % P != 0 rules the 1-D variants out, but the two-grid pair runs —
-    the planner can now dispatch in regimes that were analytic-only."""
+    the planner can now dispatch in regimes that were analytic-only.  The
+    single-jit fused form wins over the cross-mesh form whenever the pair
+    admits a shared mesh (fewer Redistribute words, no host hop)."""
     plan = plan_nystrom(64, 4, P=8, machine=CPU)   # r=4 < P=8
     assert plan.executable
-    assert plan.variant == "alg2_bound_driven"
+    assert plan.variant == "alg2_bound_driven_fused"
     assert plan.grid != plan.q_grid
+    cross = [c for c in plan.candidates if c.variant == "alg2_bound_driven"]
+    assert cross and any(c.executable for c in cross)
     one_d = [c for c in plan.candidates
              if c.variant in ("alg2_no_redist", "alg2_redist")]
     assert one_d and not any(c.executable for c in one_d)
@@ -134,7 +138,7 @@ def test_indivisible_two_grid_is_analytic_only():
 def test_autotune_sweeps_q_grids_for_bound_driven():
     from repro.plan import autotune
     plan = plan_nystrom(64, 4, P=8, machine=CPU)    # bound_driven wins
-    assert plan.variant == "alg2_bound_driven"
+    assert plan.variant == "alg2_bound_driven_fused"
     seen = []
 
     def fake_timer(fn):
@@ -142,15 +146,16 @@ def test_autotune_sweeps_q_grids_for_bound_driven():
         return 1e-3 * len(seen)
 
     tuned = autotune(plan, cache=None, timer=fake_timer)
-    assert len(seen) >= 2, "q-grid sweep must measure more than one option"
-    assert tuned.variant == "alg2_bound_driven"
+    assert len(seen) >= 2, "(p, q) sweep must measure more than one option"
+    assert tuned.variant in ("alg2_bound_driven", "alg2_bound_driven_fused")
     assert tuned.q_grid is not None
     assert alg2_two_grid_executable(64, 4, tuned.grid, tuned.q_grid)
     # rescoring describes the tuned pair, not the pre-tune favorite
-    assert math.isclose(
-        tuned.predicted_words,
-        alg2_bandwidth_words(64, 4, tuned.grid, tuned.q_grid),
-        rel_tol=1e-12)
+    from repro.plan.model import alg2_fused_cost
+    want = (alg2_fused_cost(64, 4, tuned.grid, tuned.q_grid).words
+            if tuned.variant == "alg2_bound_driven_fused"
+            else alg2_bandwidth_words(64, 4, tuned.grid, tuned.q_grid))
+    assert math.isclose(tuned.predicted_words, want, rel_tol=1e-12)
 
 
 # ---------------------------------------------------------------------------
@@ -204,9 +209,10 @@ assert np.array_equal(np.asarray(C), np.asarray(Cd))
 print("OK plan bound_driven bitwise vs reference and direct call")
 
 # regime 2 (r < P): a genuinely two-grid pair q=(2,1,4) the 1-D variants
-# cannot run at all (r % P != 0); execute == direct call, bitwise.
+# cannot run at all (r % P != 0); the single-jit fused form wins in auto
+# mode and execute == the cross-mesh direct call, bitwise.
 pn2 = plan_nystrom(n, 4, P=8, machine=CPU)
-assert pn2.variant == "alg2_bound_driven" and pn2.executable
+assert pn2.variant == "alg2_bound_driven_fused" and pn2.executable
 assert pn2.q_grid not in (pn2.grid, (1, 1, 8)), pn2.q_grid
 B2, C2 = pn2.execute(S, seed=seed)
 B2d, C2d = nystrom_two_grid(S, seed, 4, p=pn2.grid, q=pn2.q_grid)
