@@ -16,6 +16,15 @@ Columns:
                              derived: per-device collective bytes (must be
                              zero — the regenerate-don't-communicate claim
                              carried over to streaming).
+  stream_ragged_sustained_s64 — sustained multi-tenant ingest at 64
+                             concurrent streams with ragged lane heights:
+                             one shape-bucketed ``update_ragged`` round vs
+                             64 serial ``update`` dispatches of the same
+                             traffic; derived: streams/s, the dispatch
+                             amortization ratio (must be >= 5x), p99
+                             ingest latency through the async IngestQueue,
+                             and whether ragged stayed bitwise-equal to
+                             serial.
 """
 from __future__ import annotations
 
@@ -90,6 +99,97 @@ def _local():
     err = float(reconstruction_error(M, sr.reconstruct(rank=rank)))
     us = (time.perf_counter() - t0) * 1e6
     emit("stream_recon_error", us, f"rel_err={err:.3e}")
+
+    _ragged_sustained()
+
+
+def _ragged_sustained():
+    """Sustained shape-bucketed ragged ingest at 64 concurrent streams vs
+    64 serial dispatches of the same traffic (the PR-6 serving row)."""
+    import jax
+    import numpy as np
+
+    from repro.plan import choose_bucket_edges
+    from repro.stream import IngestQueue, SketchService, StreamConfig
+
+    # (n2, r) stay fixed across modes: this row measures DISPATCH
+    # amortization in the many-tenant thin-slab regime, and growing the
+    # contraction just turns it compute-bound (per-lane Omega regen, paid
+    # identically by both sides) — the rowblock/one-shot rows above cover
+    # compute scaling.  Only the stream table height n1 scales.
+    n1, n2, r = pick(1024, 256), 128, 8
+    n_streams = 64
+    # median of samples x rounds: each sample is long enough to reach
+    # pipelined steady state, the median shrugs off host-load spikes
+    samples, rounds = 4, 4
+    rng = np.random.default_rng(0)
+    cfg0 = dict(n1=n1, n2=n2, r=r, corange=False)
+    cfgs = [StreamConfig(seed=s, **cfg0) for s in range(n_streams)]
+    # fixed ragged traffic: mixed heights, per-lane offsets
+    items = []
+    for i in range(n_streams):
+        k = int(2 ** rng.integers(0, 6))          # 1..32 rows
+        items.append((i, rng.standard_normal((k, n2)).astype(np.float32),
+                      int(rng.integers(0, n1 - k + 1))))
+    edges = choose_bucket_edges([k for _, H, _ in items
+                                 for k in (H.shape[0],)], n2, r,
+                                corange=False)
+
+    ragged = SketchService()
+    serial = SketchService()
+    rids = [ragged.open(c) for c in cfgs]
+    sids = [serial.open(c) for c in cfgs]
+    batch = [(rids[i], H, row0) for i, H, row0 in items]
+    # warm: bucket programs, the per-lane read (gather) path, then
+    # re-stack the cohort so the timed loop starts in steady state
+    ragged.update_ragged(batch, bucket_edges=edges)
+    jax.block_until_ready([ragged.sketch(s) for s in rids])
+    ragged.update_ragged(batch, bucket_edges=edges)
+    for _ in range(2):                            # compile + warm heights
+        for i, H, row0 in items:
+            serial.update(sids[i], H, row0=row0)
+    ragged.sync()
+    serial.sync()
+
+    ts = []
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            ragged.update_ragged(batch, bucket_edges=edges)
+        ragged.sync()
+        ts.append((time.perf_counter() - t0) / rounds * 1e6)
+    us_ragged = float(np.median(ts))
+
+    ts = []
+    for _ in range(samples):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for i, H, row0 in items:
+                serial.update(sids[i], H, row0=row0)
+        serial.sync()
+        ts.append((time.perf_counter() - t0) / rounds * 1e6)
+    us_serial = float(np.median(ts))
+
+    bitwise = all(
+        np.array_equal(np.asarray(ragged.sketch(rids[i])),
+                       np.asarray(serial.sketch(sids[i])))
+        for i in range(n_streams))
+    ratio = us_serial / us_ragged
+    # p99 submit->applied latency through the bounded async queue; hold
+    # the worker so one full window drains (a partial first drain would
+    # compile fresh lane-count specializations and pollute the tail)
+    with IngestQueue(ragged, depth=256, window=n_streams,
+                     bucket_edges=edges) as q:
+        q.hold()
+        for i, H, row0 in items:
+            q.submit(rids[i], H, row0)
+        q.release()
+        q.flush(raise_errors=True)
+        p99_ms = q.stats()["latency_p99_s"] * 1e3
+    emit("stream_ragged_sustained_s64", us_ragged,
+         f"streams_per_s={n_streams / us_ragged * 1e6:.3g};"
+         f"serial_us={us_serial:.1f};amortize={ratio:.1f}x;"
+         f"p99_ms={p99_ms:.1f};bitwise={bitwise}")
 
 
 _DIST_SNIPPET = r"""

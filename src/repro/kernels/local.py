@@ -370,24 +370,38 @@ def _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt, scale,
 # same ops on the same operands.
 # ---------------------------------------------------------------------------
 
-def _fold_rows_jnp(y, d, start):
+def _fold_rows_jnp(y, d, start, nvalid=None):
     m, c = y.shape
     pad = jnp.zeros((m, c), d.dtype)
     dpad = jnp.concatenate([pad, d, pad], axis=0)
-    return y + jax.lax.dynamic_slice(dpad, (start, jnp.int32(0)), (m, c))
+    win = jax.lax.dynamic_slice(dpad, (start, jnp.int32(0)), (m, c))
+    if nvalid is None:
+        return y + win
+    # masked fold: only y rows whose frame coordinate lands inside the
+    # first ``nvalid`` rows of d change — every other row keeps y's EXACT
+    # bits (a ragged bucket's padded tail must not even add +0.0, which
+    # would flip a resident -0.0)
+    idx = jnp.int32(start) + jnp.arange(m, dtype=jnp.int32)
+    live = (idx >= m) & (idx < m + jnp.int32(nvalid))
+    return jnp.where(live[:, None], y + win, y)
 
 
-def _fold_rows_body(meta_ref, y_ref, d_ref, o_ref, *, m):
+def _fold_rows_body(meta_ref, y_ref, d_ref, o_ref, *, m, masked):
     start = meta_ref[0]
     y = y_ref[...]
     d = d_ref[...]
     pad = jnp.zeros((m, d.shape[1]), d.dtype)
     dpad = jnp.concatenate([pad, d, pad], axis=0)
     win = jax.lax.dynamic_slice(dpad, (start, 0), (m, d.shape[1]))
-    o_ref[...] = (y + win).astype(o_ref.dtype)
+    if masked:
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+        live = (idx >= m) & (idx < m + meta_ref[1])
+        o_ref[...] = jnp.where(live, y + win, y).astype(o_ref.dtype)
+    else:
+        o_ref[...] = (y + win).astype(o_ref.dtype)
 
 
-def _fold_rows_pallas(y, d, start, interpret, pad_to=None):
+def _fold_rows_pallas(y, d, start, interpret, pad_to=None, nvalid=None):
     import jax.experimental.pallas as pl
     from jax.experimental.pallas import tpu as pltpu
 
@@ -406,8 +420,11 @@ def _fold_rows_pallas(y, d, start, interpret, pad_to=None):
     # mp, so shift by the difference — otherwise row-padding would slide
     # the slab delta mp - m rows down (same padding contract as the
     # sketch kernels: padding never shifts in-range placement).
-    meta = (jnp.asarray(start, jnp.int32) + jnp.int32(mp - m)).reshape(1)
-    kernel = functools.partial(_fold_rows_body, m=mp)
+    masked = nvalid is not None
+    meta = jnp.stack([
+        jnp.asarray(start, jnp.int32) + jnp.int32(mp - m),
+        jnp.asarray(nvalid if masked else k, jnp.int32)])
+    kernel = functools.partial(_fold_rows_body, m=mp, masked=masked)
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(1,),
         in_specs=[pl.BlockSpec((mp, cp), lambda i, m_: (0, 0)),
@@ -421,7 +438,8 @@ def _fold_rows_pallas(y, d, start, interpret, pad_to=None):
     return out[:m, :c]
 
 
-def fold_rows_block(y, d, start, backend: str = "jnp", interpret=None):
+def fold_rows_block(y, d, start, backend: str = "jnp", interpret=None,
+                    nvalid=None):
     """``y + [0_m; d; 0_m][start : start + m]`` — the row-slab Y fold.
 
     ``y``: (m, c) resident shard; ``d``: (k, c) slab delta; ``start`` may
@@ -432,12 +450,22 @@ def fold_rows_block(y, d, start, backend: str = "jnp", interpret=None):
     in-place — 2·m·c accumulate HBM words instead of the jnp body's
     materialized-frame 4·k·c-class traffic (``plan.model``'s
     ``stream_update_cost`` prices both).
+
+    ``nvalid`` (may be traced) restricts the fold to the first ``nvalid``
+    rows of ``d``: y rows fed by rows >= nvalid keep their EXACT input
+    bits — not even a +0.0 is added, which is what makes a ragged bucket's
+    padded tail provably dead (stream/service.py ``update_ragged``; a +0.0
+    add would flip a resident -0.0).  Both backends run the same
+    mask + where on the same operands, so the fold stays bitwise-identical
+    across backends, and this entry point vmaps over a leading lane axis
+    (the batched ragged programs vmap it directly — in interpret mode the
+    lane axis becomes one more grid dimension of the same kernel).
     """
     b = resolve_backend(backend)
     if b == "jnp":
-        return _fold_rows_jnp(y, d, start)
+        return _fold_rows_jnp(y, d, start, nvalid=nvalid)
     interpret = _interpret() if interpret is None else interpret
-    return _fold_rows_pallas(y, d, start, interpret)
+    return _fold_rows_pallas(y, d, start, interpret, nvalid=nvalid)
 
 
 # ---------------------------------------------------------------------------

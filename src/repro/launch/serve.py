@@ -1,8 +1,15 @@
-"""Serving driver: batched decoding with the continuous-batching-lite
-scheduler.
+"""Serving driver for the repo's two request workloads.
+
+LM decoding (continuous-batching-lite):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
       --requests 6 --max-new 16
+
+Multi-tenant sketch ingest (shape-bucketed ragged batching behind the
+bounded async queue):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload sketch \
+      --streams 64 --updates 4 --n1 1024 --n2 512 --r 32
 """
 from __future__ import annotations
 
@@ -16,16 +23,7 @@ from repro.models import get_api
 from repro.serve.engine import BatchedServer, Request
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
-
+def run_lm(args):
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
@@ -40,9 +38,93 @@ def main():
     t0 = time.time()
     server.run()
     dt = time.time() - t0
-    done = args.requests
-    print(f"[serve] {done} requests on {args.slots} slots in {dt:.1f}s")
+    print(f"[serve] {args.requests} requests on {args.slots} slots "
+          f"in {dt:.1f}s")
     return server
+
+
+def run_sketch(args):
+    """Drive N concurrent sketch streams through the async ingest queue
+    and report sustained throughput + tail latency."""
+    import numpy as np
+
+    from repro.serve.engine import make_ingest_queue, make_sketch_service
+    from repro.stream.state import StreamConfig
+
+    rng = np.random.default_rng(0)
+    svc = make_sketch_service(max_resident=args.max_resident or None)
+    sids = [svc.open(StreamConfig(n1=args.n1, n2=args.n2, r=args.r, seed=s))
+            for s in range(args.streams)]
+    ks = [int(rng.integers(1, args.max_rows + 1))
+          for _ in range(args.streams * args.updates)]
+    q = make_ingest_queue(svc, depth=args.depth, window=args.window,
+                          expected_ks=ks)
+    # startup warmup on throwaway streams: compile every (bucket height,
+    # pow2 lane count) pair live traffic can produce — partial drains give
+    # arbitrary per-bucket occupancies, so enumerate counts exactly the
+    # way a real server warms its shape set before taking traffic
+    from repro.stream import snap_bucket
+    tmp = [svc.open(StreamConfig(n1=args.n1, n2=args.n2, r=args.r,
+                                 seed=1_000_000 + s))
+           for s in range(args.streams)]
+    tops = sorted({snap_bucket(k, q.bucket_edges) for k in ks})
+    for kb in tops:
+        c = 1
+        while c <= args.streams:
+            svc.update_ragged(
+                [(tmp[i], np.zeros((kb, args.n2), np.float32), 0)
+                 for i in range(c)], bucket_edges=q.bucket_edges)
+            c *= 2
+    svc.sync()
+    for t in tmp:
+        svc.close(t)
+    print(f"[serve:sketch] warmed {svc.stats()['compiled_updates']} "
+          f"programs over buckets {tops}")
+    t0 = time.perf_counter()
+    it = iter(ks)
+    for u in range(args.updates):
+        for sid in sids:
+            k = next(it)
+            H = rng.standard_normal((k, args.n2)).astype(np.float32)
+            q.submit(sid, H, int(rng.integers(0, args.n1 - k + 1)))
+    q.flush(raise_errors=True)
+    dt = time.perf_counter() - t0
+    st = q.stats()
+    n = args.streams * args.updates
+    print(f"[serve:sketch] {n} updates over {args.streams} streams in "
+          f"{dt:.2f}s — {n / dt:.1f} updates/s, p50 "
+          f"{st['latency_p50_s'] * 1e3:.1f} ms, p99 "
+          f"{st['latency_p99_s'] * 1e3:.1f} ms, pad waste "
+          f"{st['pad_waste']:.1%}, {st['rounds']} fused rounds")
+    q.shutdown()
+    return st
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "sketch"), default="lm")
+    # lm
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    # sketch
+    ap.add_argument("--streams", type=int, default=64)
+    ap.add_argument("--updates", type=int, default=4,
+                    help="updates per stream")
+    ap.add_argument("--n1", type=int, default=1024)
+    ap.add_argument("--n2", type=int, default=512)
+    ap.add_argument("--r", type=int, default=32)
+    ap.add_argument("--max-rows", type=int, default=64,
+                    help="lane heights drawn from [1, max-rows]")
+    ap.add_argument("--depth", type=int, default=256)
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--max-resident", type=int, default=0,
+                    help="admission budget (0 = unlimited)")
+    args = ap.parse_args()
+    return run_sketch(args) if args.workload == "sketch" else run_lm(args)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,8 @@ a versioned on-disk cache; ``explain`` renders the decision.
   explain.py  — reports (regimes, crossovers, bound gaps)
 """
 from .model import (  # noqa: F401
-    Cost, MachineModel, PRESETS, device_kind_tag, hbm_roofline_words,
-    probe_machine,
+    Cost, MachineModel, PRESETS, choose_bucket_edges, device_kind_tag,
+    hbm_roofline_words, probe_machine, ragged_bucket_cost,
 )
 from .planner import (  # noqa: F401
     Candidate, Plan, plan_nystrom, plan_sketch, plan_stream,

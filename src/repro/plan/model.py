@@ -68,6 +68,12 @@ class MachineModel:
     supports_pallas : whether the fused Mosaic/Pallas kernels can run
                       natively (TPU); elsewhere they only run in interpret
                       mode, which is a correctness tool, not a fast path.
+    dispatch_overhead : host-side cost of launching ONE compiled update
+                      (python + runtime + launch latency, seconds).  This
+                      is the term shape-bucketed ragged ingest amortizes:
+                      N streams fused into one bucket pay it once instead
+                      of N times, at the price of padded-lane FLOPs/HBM —
+                      :func:`choose_bucket_edges` trades the two.
     """
     name: str
     alpha: float
@@ -77,6 +83,7 @@ class MachineModel:
     vmem_bytes: int
     hbm_bytes: int
     supports_pallas: bool = False
+    dispatch_overhead: float = 5e-5
 
 
 # Per-chip vendor peaks; the v5e numbers are the roofline module's
@@ -97,7 +104,11 @@ PRESETS = {
     "cpu": MachineModel(
         name="cpu", alpha=5e-6, byte_bw=10e9, flop_rate=5e10,
         hbm_bw=20e9, vmem_bytes=32 * 2 ** 20, hbm_bytes=8 * 2 ** 30,
-        supports_pallas=False),
+        supports_pallas=False,
+        # python + XLA-CPU launch per compiled call (measured order of
+        # magnitude); dominates tiny ragged lanes, so the bucket planner
+        # fuses aggressively on hosts
+        dispatch_overhead=3e-4),
 }
 
 
@@ -391,3 +402,91 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
         psi_hbm = 0.0 if fused else k * l
         hbm += psi_hbm + (2.0 if fused else 4.0) * l * n2 / (p2 * p3)
     return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-ingest bucket planning (padded-lane waste vs dispatch amortization)
+# ---------------------------------------------------------------------------
+
+def ragged_bucket_cost(ks, kb: int, n2: int, r: int, l: int,
+                       corange: bool = True, backend: str = "jnp",
+                       machine: MachineModel = None,
+                       itemsize: int = 4) -> float:
+    """Predicted seconds of ONE fused bucket dispatch ingesting ``len(ks)``
+    ragged lanes padded to height ``kb`` (each ``k in ks`` must be <= kb).
+
+    One host dispatch, then the vmapped lanes execute back to back on the
+    device, each paying the FULL padded-slab work — padded rows are masked,
+    not skipped, so their FLOPs and HBM traffic are real.  That waste is
+    what the dispatch saving has to beat; :func:`choose_bucket_edges` runs
+    the comparison exactly.
+    """
+    machine = machine or probe_machine()
+    lane = stream_update_cost(kb, n2, r, l, corange=corange, backend=backend)
+    return (machine.dispatch_overhead
+            + len(list(ks)) * lane.seconds(machine, itemsize))
+
+
+def choose_bucket_edges(ks, n2: int, r: int, l: int = None,
+                        corange: bool = True, backend: str = "jnp",
+                        machine: MachineModel = None,
+                        itemsize: int = 4) -> list:
+    """Optimal shape-bucket boundaries for a ragged ingest workload.
+
+    ``ks`` is the observed distribution of lane heights (one entry per
+    update).  Returns ascending bucket tops (for
+    ``SketchService.update_ragged(bucket_edges=...)`` /
+    ``IngestQueue(bucket_edges=...)``); every lane is padded up to the
+    smallest edge >= its height.
+
+    Exact DP over the sorted unique heights (buckets are contiguous height
+    ranges in an optimal solution — padding a lane past the next-larger
+    occupied height is never cheaper than stopping there), minimizing
+
+        sum over buckets [ dispatch_overhead
+                           + count(bucket) * lane_seconds(bucket top) ].
+
+    Limits (pinned by tests/test_service_scale.py): zero dispatch overhead
+    degenerates to one bucket per distinct height (no padding is ever
+    free); a dispatch cost dominating the per-lane work collapses to a
+    single bucket at max(ks).
+
+    Height 1, when present, is always its own bucket: ``snap_bucket``
+    refuses to pad single-row slabs (XLA's M=1 gemv reduction order
+    differs from the packed gemm loop, which would break the bitwise
+    lane-vs-solo contract), so the DP plans the remaining heights around
+    a mandatory [1] edge.
+    """
+    machine = machine or probe_machine()
+    if l is None:
+        l = 2 * r + 1
+    ks = sorted(int(k) for k in ks)
+    if not ks:
+        return []
+    if ks[0] <= 1:
+        rest = [k for k in ks if k > 1]
+        return [1] + choose_bucket_edges(
+            rest, n2, r, l, corange=corange, backend=backend,
+            machine=machine, itemsize=itemsize)
+    uniq = sorted(set(ks))
+    counts = [ks.count(u) for u in uniq]
+    lane_s = [stream_update_cost(u, n2, r, l, corange=corange,
+                                 backend=backend).seconds(machine, itemsize)
+              for u in uniq]
+    m = len(uniq)
+    best = [0.0] * (m + 1)          # best[j]: heights uniq[:j] bucketed
+    cut = [0] * (m + 1)
+    for j in range(1, m + 1):
+        best[j] = math.inf
+        tail = 0
+        for i in range(j, 0, -1):   # bucket = uniq[i-1 .. j-1], top uniq[j-1]
+            tail += counts[i - 1]
+            c = best[i - 1] + machine.dispatch_overhead + tail * lane_s[j - 1]
+            if c < best[j]:
+                best[j], cut[j] = c, i - 1
+    edges = []
+    j = m
+    while j > 0:
+        edges.append(uniq[j - 1])
+        j = cut[j]
+    return edges[::-1]

@@ -163,7 +163,9 @@ class BatchedServer:
 def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
                         devices=None, plan=None,
                         shape: Optional[Tuple[int, int, int]] = None,
-                        backend: str = "auto") -> SketchService:
+                        backend: str = "auto",
+                        max_resident: Optional[int] = None,
+                        spill_dir: Optional[str] = None) -> SketchService:
     """The streaming-sketch serving entry point: one mesh, many streams.
 
     grid:
@@ -181,7 +183,12 @@ def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
           ``grid`` (and its backend decision over ``backend``).
     backend: local GEMM body of the distributed updates
           (``"jnp"`` | ``"pallas"`` | ``"auto"`` — kernels/local.py).
+    max_resident / spill_dir: the service's admission budget — at most
+          ``max_resident`` streams keep device state; colder non-pinned
+          streams are checkpointed to host memory (or ``spill_dir``) and
+          restored bitwise on next touch.
     """
+    kw = dict(max_resident=max_resident, spill_dir=spill_dir)
     if plan is None and grid == "auto":
         if shape is None:
             raise ValueError('grid="auto" needs the dominant stream shape: '
@@ -197,11 +204,42 @@ def make_sketch_service(grid: Optional[Tuple[int, int, int]] = None,
                 f"P={plan.n_procs} is analytic-only (no executable grid "
                 f"divides the shape) — no service mesh can host it")
         if plan.grid is None:   # single-device plan -> local mode
-            return SketchService()
+            return SketchService(**kw)
         grid = plan.grid
         backend = getattr(plan, "backend", backend) or backend
     if grid is None:
-        return SketchService()
+        return SketchService(**kw)
     from repro.core.sketch import make_grid_mesh
     return SketchService(mesh=make_grid_mesh(*grid, devices=devices),
-                         backend=backend)
+                         backend=backend, **kw)
+
+
+def make_ingest_queue(service: SketchService, depth: int = 256,
+                      window: int = 64, bucket_edges="auto",
+                      expected_ks=None, **cfg):
+    """Front a local-mode service with the bounded async
+    :class:`repro.stream.IngestQueue`.
+
+    ``bucket_edges="auto"`` prices bucket boundaries with
+    :func:`repro.plan.choose_bucket_edges` from ``expected_ks`` (the
+    anticipated lane-height distribution, e.g. a recent traffic sample);
+    with no sample the queue falls back to pow2 snapping.  Any remaining
+    kwargs go to IngestQueue.
+    """
+    from repro.stream.ingest import IngestQueue
+    if bucket_edges == "auto":
+        if expected_ks:
+            from repro.plan import choose_bucket_edges
+            sample = [cfg_k for cfg_k in expected_ks]
+            any_st = next(iter(service._streams.values()), None)
+            if any_st is not None:
+                c = any_st.cfg
+                bucket_edges = choose_bucket_edges(
+                    sample, c.n2, c.r, c.sketch_l, corange=c.corange,
+                    backend=service.backend)
+            else:
+                bucket_edges = None
+        else:
+            bucket_edges = None
+    return IngestQueue(service, depth=depth, window=window,
+                       bucket_edges=bucket_edges, **cfg)

@@ -8,17 +8,22 @@
                     a repro.plan.Plan in place of a mesh)
   reconstruct.py  — one-pass fixed-rank A ~= Q·(Psi Q)†·W (Tropp et al.)
   service.py      — SketchService: many concurrent streams, one mesh,
-                    incl. fused multi-stream batched ingest (update_batch)
+                    incl. fused multi-stream batched ingest (update_batch),
+                    shape-bucketed ragged ingest (update_ragged) and
+                    QoS-classed admission/eviction with transparent restore
+  ingest.py       — IngestQueue: bounded async request queue with
+                    backpressure fronting a local-mode service
 """
 from .state import (  # noqa: F401
     OMEGA_SALT, PSI_SALT, StreamConfig, StreamingSketch,
-    omega_matrix, psi_cols, psi_matrix,
+    omega_matrix, psi_cols, psi_matrix, pow2_bucket, snap_bucket,
 )
 from .distributed import (  # noqa: F401
     ShardedStreamingSketch, corange_sharding, corange_update,
-    nystrom_finalize,
+    nystrom_finalize, stream_shardings,
 )
 from .reconstruct import (  # noqa: F401
     LowRank, one_pass_reconstruct, reconstruction_error,
 )
-from .service import SketchService  # noqa: F401
+from .service import QOS_CLASSES, SketchService  # noqa: F401
+from .ingest import IngestQueue  # noqa: F401

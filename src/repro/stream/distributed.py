@@ -47,6 +47,18 @@ def corange_sharding(mesh: Mesh, axes=DEFAULT_AXES) -> NamedSharding:
     return NamedSharding(mesh, P(None, (axes[1], axes[2])))
 
 
+def stream_shardings(cfg: StreamConfig, mesh: Mesh,
+                     axes=DEFAULT_AXES) -> dict:
+    """NamedShardings of a stream's accumulator tree ({"Y", "W"?}) — the
+    single source of truth for placement at open, eviction-restore and
+    checkpoint-restore time (service and ShardedStreamingSketch agree by
+    construction)."""
+    sh = {"Y": output_sharding(mesh, axes)}
+    if cfg.corange:
+        sh["W"] = corange_sharding(mesh, axes)
+    return sh
+
+
 def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
                      axes: Tuple[str, str, str] = DEFAULT_AXES,
                      variant: str = "auto", backend: str = "auto"):
@@ -444,12 +456,11 @@ class ShardedStreamingSketch:
         st = cls(cfg, mesh, axes=axes,
                  backend=backend or extra.get("backend", "jnp"))
         tree = {"Y": st.Y}
-        shardings = {"Y": output_sharding(st.mesh, axes)}
         if st.W is not None:
             tree["W"] = st.W
-            shardings["W"] = corange_sharding(st.mesh, axes)
         tree, _, extra = ckpt.restore(directory, tree, step,
-                                      shardings=shardings)
+                                      shardings=stream_shardings(
+                                          cfg, st.mesh, axes))
         st.Y = tree["Y"]
         st.W = tree.get("W")
         st.num_updates = int(extra["num_updates"])

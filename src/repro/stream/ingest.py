@@ -1,0 +1,269 @@
+"""Async multi-tenant ingest queue: the request-facing front half of the
+serving story (ROADMAP item 1).
+
+``IngestQueue`` sits between request handlers and a local-mode
+:class:`~repro.stream.service.SketchService`.  Handlers call
+:meth:`submit` (cheap: validate + enqueue); a single worker thread drains
+the queue in windows, splits each window into rounds with at most one
+update per stream (per-stream FIFO order is preserved — sketch updates
+commute across streams but not within one), and applies every round
+through ONE fused :meth:`SketchService.update_ragged` dispatch.
+
+Overlap model (double buffering): JAX dispatch is asynchronous, so while
+the device executes round R's fused update the worker is already draining,
+bucketing and padding round R+1 on the host — host-side request handling,
+H staging and device compute overlap without any explicit stream
+management.  The queue is BOUNDED: when the device falls behind, ``submit``
+blocks (backpressure) rather than dropping updates, and raises
+``queue.Full`` only when the caller's timeout expires.
+
+Fault model (pinned by tests/test_service_scale.py):
+
+  * non-finite payloads are rejected at submit time, before anything can
+    touch (Y, W);
+  * closing a stream with updates in flight drains them first —
+    ``close_stream`` returns the final state with every accepted update
+    applied;
+  * worker-side failures (e.g. racing an already-closed sid) are recorded
+    per-request and surfaced by ``flush(raise_errors=True)`` / ``stats()``,
+    never silently swallowed — and never abort the rest of the round.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .state import snap_bucket
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+class IngestQueue:
+    """Bounded async ingest front-end for a local-mode SketchService.
+
+    Parameters
+    ----------
+    service : SketchService (local mode)
+    depth : int — queue capacity; a full queue blocks ``submit`` (backpressure)
+    window : int — max requests fused per drain (one or more rounds)
+    bucket_edges : optional ascending bucket tops forwarded to
+        ``update_ragged`` (e.g. from ``repro.plan.choose_bucket_edges``)
+    validate_payloads : bool — reject non-finite H at submit time
+    """
+
+    def __init__(self, service, depth: int = 256, window: int = 64,
+                 bucket_edges: Optional[Sequence[int]] = None,
+                 validate_payloads: bool = True):
+        if service.mesh is not None:
+            raise ValueError("IngestQueue fronts local-mode services only")
+        if depth < 1 or window < 1:
+            raise ValueError("depth and window must be >= 1")
+        self.service = service
+        self.window = int(window)
+        self.bucket_edges = (None if bucket_edges is None
+                             else tuple(sorted(int(e) for e in bucket_edges)))
+        self.validate_payloads = validate_payloads
+        self._q: "queue.Queue[Tuple]" = queue.Queue(maxsize=depth)
+        self._lock = threading.Lock()
+        self._done = threading.Condition(self._lock)
+        self._inflight: Dict[int, int] = {}
+        self._closed_sids: set = set()
+        self._errors: List[Tuple[int, Exception]] = []
+        self._lat: List[float] = []         # submit->applied seconds
+        self._submitted = 0
+        self._applied = 0
+        self._rejected = 0
+        self._rounds = 0
+        self._real_rows = 0
+        self._padded_rows = 0
+        self._gate = threading.Event()      # test hook: hold() stalls drain
+        self._gate.set()
+        self._stop = False
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="sketch-ingest")
+        self._worker.start()
+
+    # -- producer side -----------------------------------------------------
+
+    def submit(self, sid: int, H, row0: int = 0,
+               timeout: Optional[float] = None) -> None:
+        """Enqueue one row-slab update.  Blocks while the queue is full
+        (backpressure); raises ``queue.Full`` only if ``timeout`` expires.
+        Non-finite payloads raise ValueError HERE — before the request can
+        ever reach the service's (Y, W) accumulators."""
+        if self._stop:
+            raise RuntimeError("ingest queue is shut down")
+        H = np.asarray(H)
+        if self.validate_payloads and not np.all(np.isfinite(
+                H.astype(np.float32, copy=False))):
+            with self._lock:
+                self._rejected += 1
+            raise ValueError(
+                f"non-finite update payload for stream {sid} rejected at "
+                f"submit (accumulators untouched)")
+        with self._lock:
+            if sid in self._closed_sids:
+                raise ValueError(f"stream {sid} was closed via this queue")
+            self._inflight[sid] = self._inflight.get(sid, 0) + 1
+            self._submitted += 1
+        try:
+            self._q.put((sid, H, int(row0), time.perf_counter()),
+                        timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._inflight[sid] -= 1
+                self._submitted -= 1
+                self._done.notify_all()
+            raise
+
+    # -- worker side -------------------------------------------------------
+
+    def _drain(self) -> List[Tuple]:
+        if not self._gate.is_set():         # held: park without consuming
+            return []
+        try:
+            first = self._q.get(timeout=0.02)
+        except queue.Empty:
+            return []
+        batch = [first]
+        while len(batch) < self.window:
+            try:
+                batch.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        return batch
+
+    def _run(self) -> None:
+        while True:
+            self._gate.wait()
+            if self._stop and self._q.empty():
+                return
+            batch = self._drain()
+            if not batch:
+                if self._stop:
+                    return
+                continue
+            # rounds: the i-th request for a given sid lands in round i, so
+            # per-stream FIFO order survives the fusion
+            rounds: List[List[Tuple]] = []
+            seen: Dict[int, int] = {}
+            for req in batch:
+                i = seen.get(req[0], 0)
+                seen[req[0]] = i + 1
+                if i == len(rounds):
+                    rounds.append([])
+                rounds[i].append(req)
+            for rnd in rounds:
+                self._apply(rnd)
+
+    def _apply(self, rnd: List[Tuple]) -> None:
+        items = [(sid, H, row0) for sid, H, row0, _ in rnd]
+        try:
+            self.service.update_ragged(items,
+                                       bucket_edges=self.bucket_edges)
+            err = None
+        except Exception as e:            # record, don't kill the worker
+            err = e
+        now = time.perf_counter()
+        with self._lock:
+            self._rounds += 1
+            for sid, H, _, t0 in rnd:
+                self._inflight[sid] -= 1
+                if err is None:
+                    self._applied += 1
+                    self._lat.append(now - t0)
+                    k = H.shape[0]
+                    kb = snap_bucket(k, self.bucket_edges)
+                    self._real_rows += k
+                    self._padded_rows += max(kb, k) - k
+                else:
+                    self._errors.append((sid, err))
+            if len(self._lat) > 8192:
+                del self._lat[:4096]
+            self._done.notify_all()
+
+    # -- control plane -----------------------------------------------------
+
+    def hold(self) -> None:
+        """Test hook: stall the worker (queue keeps filling — lets tests
+        exercise backpressure deterministically)."""
+        self._gate.clear()
+
+    def release(self) -> None:
+        self._gate.set()
+
+    def flush(self, raise_errors: bool = False,
+              timeout: Optional[float] = None) -> None:
+        """Block until every accepted update has been applied (or failed)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._done:
+            while any(v for v in self._inflight.values()):
+                left = (None if deadline is None
+                        else max(0.0, deadline - time.monotonic()))
+                if left == 0.0 or not self._done.wait(timeout=left or 1.0):
+                    if deadline is not None and time.monotonic() >= deadline:
+                        raise TimeoutError("flush timed out")
+            if raise_errors and self._errors:
+                sid, err = self._errors[0]
+                raise RuntimeError(
+                    f"{len(self._errors)} ingest failure(s); first: "
+                    f"stream {sid}: {err!r}") from err
+
+    def close_stream(self, sid: int, timeout: Optional[float] = None):
+        """Drain the stream's in-flight updates, then close it on the
+        service — every update accepted before this call lands in the
+        returned (Y, W)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._done:
+            self._closed_sids.add(sid)   # no new submits for this sid
+            while self._inflight.get(sid, 0) > 0:
+                left = (None if deadline is None
+                        else max(0.0, deadline - time.monotonic()))
+                if left == 0.0 or not self._done.wait(timeout=left or 1.0):
+                    if deadline is not None and time.monotonic() >= deadline:
+                        raise TimeoutError(
+                            f"close_stream({sid}) timed out draining")
+        return self.service.close(sid)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work; drain what was accepted, then stop the
+        worker.  Idempotent."""
+        self._stop = True
+        self._gate.set()
+        if wait and self._worker.is_alive():
+            self._worker.join(timeout=30.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    # -- introspection -----------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            lat = list(self._lat)
+            real, padded = self._real_rows, self._padded_rows
+            return {
+                "submitted": self._submitted,
+                "applied": self._applied,
+                "rejected": self._rejected,
+                "errors": len(self._errors),
+                "inflight": sum(self._inflight.values()),
+                "rounds": self._rounds,
+                "latency_p50_s": _percentile(lat, 50),
+                "latency_p99_s": _percentile(lat, 99),
+                "real_rows": real,
+                "padded_rows": padded,
+                "pad_waste": padded / max(1, real + padded),
+            }

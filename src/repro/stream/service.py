@@ -9,6 +9,25 @@ per-stream seed enters the computation *traced* (as a uint32 key pair, see
 traced too.  Opening stream number 1000 therefore costs a dict insert, not
 an XLA compile, which is what makes high stream fan-in viable.
 
+Multi-tenant ingest (local mode):
+
+  * ``update_batch``  — same-shape lanes, one vmapped dispatch.
+  * ``update_ragged`` — heterogeneous row slabs.  Lanes are snapped to
+    shape buckets (pow2 by default, or planner-chosen ``bucket_edges``
+    from ``repro.plan.choose_bucket_edges``), padded-and-masked to the
+    bucket height, and fused through one vmapped masked ``fold_rows_block``
+    update per bucket with DONATED stacked (Y, W) accumulators — batched
+    ingest never holds two copies of the fleet's sketch state.  Lane i is
+    bitwise the result of updating stream i alone, including the
+    padded/masked tail (the fixed oracle; pinned by
+    tests/test_service_scale.py).
+
+Admission/eviction: streams carry a QoS class (``pinned`` > ``standard`` >
+``best_effort``).  With ``max_resident`` set, opening or touching a stream
+beyond the budget evicts the coldest non-pinned resident — its (Y, W) is
+checkpointed to host memory (or to disk under ``spill_dir`` via
+``checkpoint/``) and restored transparently on next touch, bitwise.
+
 Two placement modes:
 
   * ``mesh=None`` — local mode.  Streams live on the default device; updates
@@ -20,38 +39,67 @@ Two placement modes:
     ``distributed.py`` for the exact cost.
 
 The service is the entry point wired into ``serve/engine.py``
-(``make_sketch_service``).
+(``make_sketch_service``); ``stream/ingest.py`` adds the async double-
+buffered request queue on top.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Optional, Tuple
+import os
+import shutil
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.sketch import (
     DEFAULT_AXES,
     input_sharding,
-    output_sharding,
     rand_matmul,
     seed_keys,
 )
 
-from .distributed import corange_sharding, corange_update
+from .distributed import corange_update, stream_shardings
 from .state import (StreamConfig, _local_sig, local_rowblock_batch_prog,
-                    local_rowblock_prog, nystrom_local, validate_row_block)
+                    local_rowblock_prog, local_rowblock_ragged_prog,
+                    nystrom_local, pow2_bucket, snap_bucket,
+                    validate_row_block)
+
+#: QoS classes, strongest first.  ``pinned`` streams are never auto-evicted;
+#: among evictable residents the lowest class goes first, LRU within class.
+QOS_CLASSES = ("pinned", "standard", "best_effort")
+_EVICT_RANK = {"best_effort": 0, "standard": 1}
 
 
 @dataclasses.dataclass
 class _Stream:
     cfg: StreamConfig
-    keys: jax.Array            # (2,) uint32 Philox key pair, traced into updates
+    keys: jax.Array          # (2,) uint32 Philox key pair, traced into updates
     Y: jax.Array
     W: Optional[jax.Array]
     num_updates: int = 0
+    qos: str = "standard"
+    last_touch: int = 0
+    # when set to (group_key, lane), the live (Y, W) rows reside inside the
+    # service's stacked cohort buffer (``_stacks[group_key]``) and Y/W above
+    # are None — see update_ragged's steady-state fast path
+    stack_ref: Optional[Tuple] = None
+
+
+@dataclasses.dataclass
+class _Evicted:
+    """A stream whose accumulators left the device: host-memory copies by
+    default, or a ``checkpoint/`` directory when the service spills to
+    disk.  Everything needed to rebuild the resident ``_Stream`` bitwise."""
+    cfg: StreamConfig
+    keys: np.ndarray
+    qos: str
+    num_updates: int
+    host: Optional[Dict[str, np.ndarray]] = None
+    path: Optional[str] = None
 
 
 def _stream_sig(cfg: StreamConfig) -> Tuple:
@@ -63,41 +111,62 @@ def _stream_sig(cfg: StreamConfig) -> Tuple:
 class SketchService:
     """One mesh, many concurrent sketch streams.
 
-    >>> svc = SketchService()
-    >>> sid = svc.open(StreamConfig(n1=256, n2=512, r=32, seed=7))
+    >>> svc = SketchService(max_resident=1000)
+    >>> sid = svc.open(StreamConfig(n1=256, n2=512, r=32, seed=7),
+    ...                qos="standard")
     >>> svc.update(sid, H, row0=0)          # rows arrive
+    >>> svc.update_ragged([(sid, H2, 64)])  # or fused with other tenants
     >>> svc.sketch(sid)                     # the live Y = A·Omega
     >>> svc.reconstruct(sid, rank=16)       # one-pass low-rank estimate
     """
 
     def __init__(self, mesh: Optional[Mesh] = None,
                  axes: Tuple[str, str, str] = DEFAULT_AXES,
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 max_resident: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
         from repro.kernels.local import resolve_backend
         self.mesh = mesh
         self.axes = axes
-        # the distributed updates' local GEMM body (kernels/local.py);
-        # local-mode row-block ingest keeps its own bitwise xla path
+        # the distributed updates' local GEMM body (kernels/local.py) and
+        # the ragged fold body; single-stream local row-block ingest keeps
+        # its own bitwise xla path
         self.backend = resolve_backend(backend)
+        if max_resident is not None and max_resident < 1:
+            raise ValueError("max_resident must be >= 1")
+        self.max_resident = max_resident
+        self.spill_dir = spill_dir
         self._streams: Dict[int, _Stream] = {}
+        self._evicted: Dict[int, _Evicted] = {}
+        # stacked ragged cohorts: group_key -> (Yb, Wb) so steady-state
+        # ragged ingest feeds each round's donated output straight into the
+        # next round with zero per-lane slicing (see update_ragged)
+        self._stacks: Dict[Tuple, Tuple] = {}
+        self._stack_keys: Dict[Tuple, jax.Array] = {}
         self._fns: Dict[Tuple, any] = {}
         self._sid = itertools.count()
+        self._clock = itertools.count(1)    # LRU clock for eviction
+        self._updates_total = 0             # service-lifetime, survives close
 
     # -- lifecycle ---------------------------------------------------------
 
-    def open(self, cfg: StreamConfig) -> int:
+    def open(self, cfg: StreamConfig, qos: str = "standard") -> int:
+        if qos not in QOS_CLASSES:
+            raise ValueError(f"qos {qos!r} not in {QOS_CLASSES}")
         cfg.validate()
         if self.mesh is not None:
-            ax1, ax2, ax3 = self.axes
             p1, p2, p3 = (self.mesh.shape[a] for a in self.axes)
             if (cfg.n1 % (p1 * p2) or cfg.n2 % (p2 * p3) or cfg.n2 % p2
                     or cfg.r % p3):    # n1 % (p1*p2): Y is P((p1, p2), p3)
                 raise ValueError(f"stream {cfg} not divisible by grid "
                                  f"({p1},{p2},{p3})")
+        self._admit(need=1)
+        if self.mesh is not None:
+            sh = stream_shardings(cfg, self.mesh, self.axes)
             Y = jax.device_put(jnp.zeros((cfg.n1, cfg.r), cfg.dtype),
-                               output_sharding(self.mesh, self.axes))
+                               sh["Y"])
             W = (jax.device_put(jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype),
-                                corange_sharding(self.mesh, self.axes))
+                                sh["W"])
                  if cfg.corange else None)
         else:
             Y = jnp.zeros((cfg.n1, cfg.r), cfg.dtype)
@@ -105,14 +174,152 @@ class SketchService:
                  if cfg.corange else None)
         k0, k1 = seed_keys(cfg.seed)
         sid = next(self._sid)
-        self._streams[sid] = _Stream(cfg, jnp.stack([k0, k1]), Y, W)
+        self._streams[sid] = _Stream(cfg, jnp.stack([k0, k1]), Y, W,
+                                     qos=qos, last_touch=next(self._clock))
         return sid
 
     def close(self, sid: int):
         """Finalize: returns the stream's final (Y, W) state — W is None
-        for corange=False streams — and frees the slot."""
-        st = self._streams.pop(sid)
+        for corange=False streams — and frees the slot (an evicted stream
+        is restored from its checkpoint first, so the returned state is
+        always live arrays)."""
+        ev = self._evicted.pop(sid, None)
+        if ev is not None:
+            st = self._restore(ev)
+            return st.Y, st.W
+        st = self._streams.get(sid)
+        if st is None:
+            raise ValueError(f"unknown stream id {sid} (never opened, or "
+                             f"already closed)")
+        self._materialize(st)
+        del self._streams[sid]
         return st.Y, st.W
+
+    # -- admission / eviction ----------------------------------------------
+
+    def _touch(self, sid: int, protect=frozenset()) -> _Stream:
+        """Resolve ``sid`` to its resident stream, transparently restoring
+        it from its eviction checkpoint if needed, and bump its LRU clock.
+        Raises a clear ValueError for unknown (never-opened/closed) sids."""
+        st = self._streams.get(sid)
+        if st is None:
+            ev = self._evicted.pop(sid, None)
+            if ev is None:
+                raise ValueError(f"unknown stream id {sid} (never opened, "
+                                 f"or already closed)")
+            try:
+                self._admit(need=1, protect=protect)
+            except RuntimeError:
+                self._evicted[sid] = ev     # leave the stream restorable
+                raise
+            self._streams[sid] = self._restore(ev)
+            st = self._streams[sid]
+        st.last_touch = next(self._clock)
+        return st
+
+    def _admit(self, need: int, protect=frozenset()) -> None:
+        """Evict coldest non-pinned residents (LRU within QoS class, lowest
+        class first) until ``need`` more streams fit under ``max_resident``.
+        Raises RuntimeError when the budget cannot be met (everything
+        resident is pinned or belongs to the in-flight batch)."""
+        if self.max_resident is None:
+            return
+        while len(self._streams) + need > self.max_resident:
+            victims = [(sid, st) for sid, st in self._streams.items()
+                       if st.qos != "pinned" and sid not in protect]
+            if not victims:
+                raise RuntimeError(
+                    f"admission refused: all {len(self._streams)} resident "
+                    f"streams are pinned or in-flight and max_resident="
+                    f"{self.max_resident}")
+            sid, _ = min(victims, key=lambda kv: (_EVICT_RANK[kv[1].qos],
+                                                  kv[1].last_touch))
+            self.evict(sid)
+
+    def evict(self, sid: int) -> None:
+        """Checkpoint a resident stream's (Y, W) off-device — to host
+        memory, or to disk when the service has a ``spill_dir`` — and free
+        its device slot.  Next touch restores it bitwise."""
+        st = self._streams.get(sid)
+        if st is None:
+            if sid in self._evicted:
+                return                      # idempotent
+            raise ValueError(f"unknown stream id {sid} (never opened, or "
+                             f"already closed)")
+        self._materialize(st)
+        del self._streams[sid]
+        tree = {"Y": st.Y}
+        if st.W is not None:
+            tree["W"] = st.W
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        ev = _Evicted(cfg=st.cfg, keys=np.asarray(jax.device_get(st.keys)),
+                      qos=st.qos, num_updates=st.num_updates)
+        if self.spill_dir is not None:
+            from repro.checkpoint import ckpt
+            path = os.path.join(self.spill_dir, f"stream_{sid:08d}")
+            ckpt.save(path, step=st.num_updates, tree=host,
+                      extra={"config": st.cfg.to_json_dict(),
+                             "qos": st.qos,
+                             "num_updates": st.num_updates}, keep=1)
+            ev.path = path
+        else:
+            ev.host = host
+        self._evicted[sid] = ev
+
+    def _restore(self, ev: _Evicted) -> _Stream:
+        if ev.path is not None:
+            from repro.checkpoint import ckpt
+            cfg = ev.cfg
+            like = {"Y": jnp.zeros((cfg.n1, cfg.r), cfg.dtype)}
+            if cfg.corange:
+                like["W"] = jnp.zeros((cfg.sketch_l, cfg.n2), cfg.dtype)
+            sh = (stream_shardings(cfg, self.mesh, self.axes)
+                  if self.mesh is not None else None)
+            tree, _, _ = ckpt.restore(ev.path, like, shardings=sh)
+            shutil.rmtree(ev.path, ignore_errors=True)
+        elif self.mesh is not None:
+            sh = stream_shardings(ev.cfg, self.mesh, self.axes)
+            tree = {k: jax.device_put(v, sh[k]) for k, v in ev.host.items()}
+        else:
+            tree = {k: jnp.asarray(v) for k, v in ev.host.items()}
+        return _Stream(ev.cfg, jnp.asarray(ev.keys), tree["Y"],
+                       tree.get("W"), num_updates=ev.num_updates, qos=ev.qos)
+
+    # -- stacked-cohort bookkeeping ----------------------------------------
+
+    def _drop_stack(self, gkey: Tuple) -> None:
+        """Unstack a cohort: hand each lane its (Y, W) rows back.  Called
+        the moment any member is touched by a non-ragged path — a lane
+        mutated outside the stack would make the cohort rows stale."""
+        entry = self._stacks.pop(gkey, None)
+        self._stack_keys.pop(gkey, None)
+        if entry is None:
+            return
+        Yb, Wb = entry
+        for i, sid in enumerate(gkey[2]):
+            st = self._streams.get(sid)
+            if st is None or st.stack_ref != (gkey, i):
+                continue
+            st.Y = Yb[i]
+            st.W = None if Wb is None else Wb[i]
+            st.stack_ref = None
+
+    def _materialize(self, st: _Stream) -> None:
+        if st.stack_ref is not None:
+            self._drop_stack(st.stack_ref[0])
+
+    def _lane_Y(self, st: _Stream):
+        if st.stack_ref is None:
+            return st.Y
+        gkey, i = st.stack_ref
+        return self._stacks[gkey][0][i]
+
+    def _lane_W(self, st: _Stream):
+        if st.stack_ref is None:
+            return st.W
+        gkey, i = st.stack_ref
+        Wb = self._stacks[gkey][1]
+        return None if Wb is None else Wb[i]
 
     # -- compiled-update cache ---------------------------------------------
 
@@ -155,7 +362,8 @@ class SketchService:
         ``row0=None`` means a full-shape additive delta.  Distributed mode
         accepts full-shape additive deltas only.
         """
-        st = self._streams[sid]
+        st = self._touch(sid)
+        self._materialize(st)
         cfg = st.cfg
         H = jnp.asarray(H, cfg.dtype)
         if self.mesh is not None:
@@ -176,6 +384,7 @@ class SketchService:
             fn = self._get_update_fn(cfg, H.shape[0])
             st.Y, st.W = fn(st.Y, st.W, H, st.keys, jnp.int32(row0))
         st.num_updates += 1
+        self._updates_total += 1
         return self
 
     def update_batch(self, sids, H, row0=0):
@@ -191,7 +400,8 @@ class SketchService:
         bitwise the result of updating stream i alone (pinned by
         tests/test_stream.py); N streams cost one dispatch instead of N.
         Local mode only — distributed streams batch at the mesh level
-        instead (open one service per grid).
+        instead (open one service per grid).  For heterogeneous lane
+        shapes use :meth:`update_ragged`.
         """
         if self.mesh is not None:
             raise NotImplementedError(
@@ -201,7 +411,10 @@ class SketchService:
         if len(set(sids)) != len(sids):
             raise ValueError("update_batch sids must be distinct (duplicate "
                              "lanes would overwrite each other's update)")
-        sts = [self._streams[s] for s in sids]
+        protect = frozenset(sids)           # a batch lane must not evict
+        sts = [self._touch(s, protect) for s in sids]   # a sibling lane
+        for st in sts:
+            self._materialize(st)
         if not sts:
             raise ValueError("update_batch needs at least one stream")
         cfg0 = sts[0].cfg
@@ -235,22 +448,150 @@ class SketchService:
             if cfg0.corange:
                 st.W = Wb[i]
             st.num_updates += 1
+        self._updates_total += n
+        return self
+
+    def update_ragged(self, items: Sequence[Tuple[int, Any, int]], *,
+                      bucket_edges: Optional[Sequence[int]] = None,
+                      pad_value: float = 0.0,
+                      backend: Optional[str] = None):
+        """Fused HETEROGENEOUS multi-stream ingest (the multi-tenant hot
+        path): each item is ``(sid, H, row0)`` with its own row-slab shape
+        ``(k_i, n2)`` and offset.
+
+        Lanes are grouped by (shape signature, bucket height) — bucket
+        height is ``snap_bucket(k_i, bucket_edges)``: pow2 snap by default,
+        or planner-chosen edges from ``repro.plan.choose_bucket_edges``
+        which prices padded-lane waste against dispatch amortization.  Each
+        bucket runs ONE vmapped masked update (``local_rowblock_ragged_prog``)
+        with the stacked (Y, W) buffers donated, so N streams cost one
+        dispatch per occupied bucket and batched ingest never doubles the
+        fleet's HBM.
+
+        Pad rows are masked dead in-program: lane i's result is bitwise
+        the result of updating stream i alone via :meth:`update`, whatever
+        ``pad_value`` holds (NaN included — that is how the contract is
+        tested).  Local mode only.
+
+        The LANE COUNT is snapped to pow2 as well (dummy lanes carry
+        ``kvalid=0`` — all-masked, provably no-ops — and zero scratch
+        accumulators): without it, every distinct bucket occupancy under
+        live traffic would compile a fresh program, a multi-second stall
+        per new count; with it, compiles are bounded at log2(window) per
+        bucket.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "update_ragged is local-mode only; distributed streams "
+                "already amortize dispatch through the shared mesh program")
+        items = list(items)
+        if not items:
+            raise ValueError("update_ragged needs at least one item")
+        sids = [it[0] for it in items]
+        if len(set(sids)) != len(sids):
+            raise ValueError("update_ragged sids must be distinct (duplicate "
+                             "lanes would overwrite each other's update)")
+        edges = None if bucket_edges is None else sorted(
+            int(e) for e in bucket_edges)
+        protect = frozenset(sids)
+        # validate everything BEFORE mutating any stream: a bad lane must
+        # not leave a half-applied batch behind.  H staging stays on the
+        # HOST (numpy pad into the bucket frame) — per-lane device ops here
+        # would cost a dispatch each and forfeit the amortization.
+        buckets: Dict[Tuple, list] = {}
+        for sid, H, row0 in items:
+            st = self._touch(sid, protect)
+            cfg = st.cfg
+            H = np.asarray(H)
+            row0 = int(row0)
+            validate_row_block(cfg, row0, H.shape)
+            k = H.shape[0]
+            kb = snap_bucket(k, edges)
+            if kb > cfg.n1:
+                kb = k      # never compile a frame taller than the stream
+            buckets.setdefault((_local_sig(cfg), kb), []).append(
+                (sid, st, H, row0, k))
+        for (sig, kb), group in buckets.items():
+            corange = sig[6]
+            dtype = jnp.dtype(sig[5])
+            n = len(group)
+            ns = pow2_bucket(n)
+            fkey = (sig, kb, ns, self.backend if backend is None else backend,
+                    "ragged")
+            fn = self._fns.get(fkey)
+            if fn is None:
+                fn = self._fns[fkey] = local_rowblock_ragged_prog(
+                    sig, kb, ns, backend=fkey[3])
+            shape = (ns, kb, group[0][2].shape[1])
+            Hb = (np.zeros(shape, dtype) if pad_value == 0.0
+                  else np.full(shape, pad_value, dtype))
+            for i, (_, _, H, _, k) in enumerate(group):
+                Hb[i, :k] = H.astype(dtype, copy=False)
+            row0s = np.zeros(ns, np.int32)
+            row0s[:n] = [g[3] for g in group]
+            kvalids = np.zeros(ns, np.int32)   # dummy lanes: all-masked
+            kvalids[:n] = [g[4] for g in group]
+            # steady-state fast path: if this exact cohort (same lanes,
+            # same order, same bucket) ran before and nothing touched its
+            # members since, its stacked (Y, W) is still live — feed it
+            # straight back in (donated!), zero per-lane stack/unstack
+            gkey = (sig, kb, tuple(g[0] for g in group))
+            stack = self._stacks.pop(gkey, None)
+            if stack is not None:
+                Yb, Wb = stack
+                keys = self._stack_keys[gkey]
+            else:
+                for _, st, *_ in group:
+                    self._materialize(st)
+                pad = ns - n
+                Y0, W0 = group[0][1].Y, group[0][1].W
+                Yb = jnp.stack([g[1].Y for g in group]
+                               + [jnp.zeros_like(Y0)] * pad)
+                Wb = (jnp.stack([g[1].W for g in group]
+                                + [jnp.zeros_like(W0)] * pad)
+                      if corange else None)
+                k0 = group[0][1].keys
+                keys = jnp.stack([g[1].keys for g in group]
+                                 + [jnp.zeros_like(k0)] * pad)
+                self._stack_keys[gkey] = keys
+            Yb, Wb = fn(Yb, Wb, Hb, keys, row0s, kvalids)
+            self._stacks[gkey] = (Yb, Wb)
+            for i, (_, st, *_rest) in enumerate(group):
+                st.Y = st.W = None          # rows live in the cohort stack
+                st.stack_ref = (gkey, i)
+                st.num_updates += 1
+            self._updates_total += n
+        return self
+
+    def sync(self):
+        """Block until every in-flight device update has landed — resident
+        lane buffers and stacked ragged cohorts alike.  The serving loop's
+        barrier (benchmarks; graceful drain) without per-lane slicing."""
+        leaves = [e for Yb, Wb in self._stacks.values()
+                  for e in (Yb, Wb) if e is not None]
+        for st in self._streams.values():
+            if st.stack_ref is None:
+                leaves.append(st.Y)
+                if st.W is not None:
+                    leaves.append(st.W)
+        jax.block_until_ready(leaves)
         return self
 
     # -- queries -----------------------------------------------------------
 
     def sketch(self, sid: int):
-        return self._streams[sid].Y
+        return self._lane_Y(self._touch(sid))
 
     def corange(self, sid: int):
-        return self._streams[sid].W
+        return self._lane_W(self._touch(sid))
 
     def reconstruct(self, sid: int, rank: Optional[int] = None, rcond=None):
         from .reconstruct import one_pass_reconstruct
-        st = self._streams[sid]
-        if st.W is None:
+        st = self._touch(sid)
+        W = self._lane_W(st)
+        if W is None:
             raise ValueError("reconstruction needs corange=True")
-        return one_pass_reconstruct(st.Y, st.W, st.cfg, rank=rank,
+        return one_pass_reconstruct(self._lane_Y(st), W, st.cfg, rank=rank,
                                     rcond=rcond)
 
     def nystrom(self, sid: int, variant: str = "auto"):
@@ -259,21 +600,31 @@ class SketchService:
         ``variant`` is ``auto``/``no_redist``/``redist``/``bound_driven``,
         the last running the §5.3 general two-grid second stage; see
         :func:`repro.stream.distributed.nystrom_finalize`)."""
-        st = self._streams[sid]
+        st = self._touch(sid)
         cfg = st.cfg
         if cfg.n1 != cfg.n2:
             raise ValueError("Nyström needs a square stream")
+        Y = self._lane_Y(st)
         if self.mesh is None:
-            return nystrom_local(st.Y, cfg)
+            return nystrom_local(Y, cfg)
         from .distributed import nystrom_finalize
-        return nystrom_finalize(st.Y, cfg, self.mesh, self.axes, variant,
+        return nystrom_finalize(Y, cfg, self.mesh, self.axes, variant,
                                 backend=self.backend)
 
     # -- introspection -----------------------------------------------------
 
     @property
     def num_streams(self) -> int:
+        """Open streams — resident plus evicted-but-restorable."""
+        return len(self._streams) + len(self._evicted)
+
+    @property
+    def num_resident(self) -> int:
         return len(self._streams)
+
+    @property
+    def num_evicted(self) -> int:
+        return len(self._evicted)
 
     @property
     def num_compiled(self) -> int:
@@ -282,5 +633,9 @@ class SketchService:
 
     def stats(self) -> Dict[str, int]:
         return {"streams": self.num_streams,
+                "resident": self.num_resident,
+                "evicted": self.num_evicted,
                 "compiled_updates": self.num_compiled,
-                "updates": sum(s.num_updates for s in self._streams.values())}
+                # service-lifetime count: closing a stream must not make
+                # its ingested updates vanish from the ledger
+                "updates": self._updates_total}

@@ -144,8 +144,10 @@ def nystrom_local(Y, cfg: StreamConfig):
     return Y, om.T @ Y
 
 
+@functools.lru_cache(maxsize=4096)
 def _local_sig(cfg: StreamConfig) -> Tuple:
-    """Executable signature of the local row-block update — NOT the seed."""
+    """Executable signature of the local row-block update — NOT the seed.
+    Cached: it sits on the per-lane hot path of ragged batched ingest."""
     return (cfg.n1, cfg.n2, cfg.r, cfg.sketch_l if cfg.corange else None,
             cfg.kind, jnp.dtype(cfg.dtype).name, cfg.corange,
             cfg.omega_salt, cfg.psi_salt)
@@ -181,6 +183,95 @@ def local_rowblock_prog(sig: Tuple, k: int):
     magnitude more than this cached program — see core/sketch.py.)
     """
     return jax.jit(_local_rowblock_update(sig, k))
+
+
+def pow2_bucket(k: int) -> int:
+    """Smallest power of two >= k — the default ragged bucket snap (keeps
+    the number of distinct compiled bucket programs logarithmic in the
+    spread of lane heights)."""
+    if k <= 1:
+        return 1
+    return 1 << (k - 1).bit_length()
+
+
+def snap_bucket(k: int, edges=None) -> int:
+    """Bucket height for a k-row lane: the smallest edge >= k when
+    ``edges`` (ascending bucket tops, e.g. from
+    ``repro.plan.choose_bucket_edges``) is given — a lane taller than
+    every edge keeps its exact height (its own bucket) — else the pow2
+    snap.
+
+    Height-1 lanes are never padded into a taller bucket: XLA-CPU lowers
+    an M=1 matmul through a gemv kernel whose K-reduction order differs
+    from the packed M>=2 gemm loop, so padding a single-row slab would
+    break the lane-vs-solo bitwise contract at large contractions
+    (pinned by tests/test_service_scale.py)."""
+    if k <= 1:
+        return 1
+    if edges is None:
+        return pow2_bucket(k)
+    for e in edges:
+        if e >= k:
+            return int(e)
+    return k
+
+
+def _local_ragged_update(sig: Tuple, kb: int, backend: str = "jnp"):
+    """One lane of the shape-bucketed ragged update: a (kb, n2) padded slab
+    whose first ``kvalid`` rows are real, folded at traced ``row0``.
+
+    Pad rows are masked dead IN-PROGRAM — the H tail is zeroed before
+    either GEMM (so a NaN pad probe never reaches Y or W) and the Y fold
+    is windowed to ``kvalid`` rows (``fold_rows_block(nvalid=...)``), so
+    rows outside [row0, row0 + kvalid) keep their exact input bits.  For
+    the valid rows the expressions are literally those of
+    :func:`_local_rowblock_update` (native-dtype GEMM against the same
+    regenerated Omega/Psi tiles), which is what makes lane i of a bucketed
+    batch bitwise the result of updating stream i alone (pinned by
+    tests/test_service_scale.py).  ``backend`` dispatches the fold body
+    (kernels/local.py): the pallas fold keeps the padded frame in VMEM
+    and aliases Y in-place; both backends run the same ops on the same
+    operands, so the fold is bitwise across backends.
+    """
+    from repro.kernels.local import fold_rows_block
+    n1, n2, r, l, kind, dtype_name, corange, omega_salt, psi_salt = sig
+    dtype = jnp.dtype(dtype_name)
+
+    def upd(Y, W, H, keys, row0, kvalid):
+        rows = jax.lax.broadcasted_iota(jnp.int32, (kb, 1), 0)
+        Hm = jnp.where(rows < kvalid, H, jnp.zeros_like(H))
+        om = omega_tile(keys, 0, 0, n2, r, kind, dtype, salt=omega_salt)
+        dY = Hm @ om                                  # full contraction
+        start = jnp.int32(n1) - jnp.asarray(row0, jnp.int32)
+        Y = fold_rows_block(Y, dY, start, backend=backend, nvalid=kvalid)
+        if corange:
+            # Psi columns at global rows [row0, row0 + kb): the tail draws
+            # beyond kvalid (possibly beyond n1) multiply zeroed H rows,
+            # so they contribute exact ±0 terms only
+            psi_c = omega_tile(keys, row0, 0, kb, l, kind, dtype,
+                               salt=psi_salt)          # (kb, l)
+            W = W + psi_c.T @ Hm
+        return Y, W
+
+    return upd
+
+
+@functools.lru_cache(maxsize=128)
+def local_rowblock_ragged_prog(sig: Tuple, kb: int, n_streams: int,
+                               backend: str = "jnp"):
+    """Compiled shape-bucketed ragged batch update: ONE call ingests
+    ``n_streams`` heterogeneous lanes padded to bucket height ``kb``, each
+    under its own traced Philox key pair, row offset and valid-row count.
+
+    The stacked (Y, W) accumulator buffers are DONATED: the program
+    updates them in place, so batched ingest never holds two copies of the
+    fleet's sketch state in HBM (the service stacks fresh buffers per
+    call, which is exactly the aliasing-safe donation case).
+    """
+    corange = sig[6]
+    upd = _local_ragged_update(sig, kb, backend)
+    batched = jax.vmap(upd, in_axes=(0, 0 if corange else None, 0, 0, 0, 0))
+    return jax.jit(batched, donate_argnums=(0, 1) if corange else (0,))
 
 
 @functools.lru_cache(maxsize=128)

@@ -1,0 +1,480 @@
+"""Multi-tenant serving harness (PR 6): shape-bucketed ragged ingest,
+QoS admission/eviction, and the bounded async ingest queue.
+
+Contract pillars:
+  (a) THE fixed oracle — lane i of a bucketed ragged batch is bitwise the
+      result of updating stream i alone via ``update``, across bucket
+      mixes × row0 offsets × kinds × dtypes × fold backends, including
+      the padded/masked tail (proved dead with an all-NaN pad probe);
+  (b) fault injection on the async queue — backpressure instead of drops,
+      close-with-inflight drains cleanly, non-finite payloads rejected
+      before touching (Y, W), evicted-then-touched restores bitwise (host
+      memory AND disk spill);
+  (c) service ledger — ``stats()["updates"]`` survives ``close``;
+      ``close``/``evict`` on unknown sids raise clear ValueErrors;
+  (d) the bucket-edge planner's limit behaviors (zero dispatch overhead →
+      one bucket per distinct height; dominant overhead → one bucket).
+
+Uses the shared hypothesis shim (tests/_hypothesis_compat): real
+hypothesis when installed, the deterministic fallback otherwise.
+"""
+import dataclasses
+import queue as pyqueue
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+
+from repro.plan import PRESETS, choose_bucket_edges, ragged_bucket_cost
+from repro.stream import (
+    IngestQueue,
+    SketchService,
+    StreamConfig,
+    pow2_bucket,
+    snap_bucket,
+)
+
+
+def bits_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    return np.array_equal(a.view(np.uint8), b.view(np.uint8))
+
+
+def make_cfg(seed, kind="normal", dtype="float32", n1=96, n2=64, r=8,
+             corange=True):
+    return StreamConfig(n1=n1, n2=n2, r=r, seed=seed, kind=kind,
+                        dtype=dtype, corange=corange)
+
+
+def ragged_traffic(rng, cfgs, max_k=32):
+    """One (sid-index, H, row0) item per config, heights/offsets random."""
+    items = []
+    for i, c in enumerate(cfgs):
+        k = int(rng.integers(1, max_k + 1))
+        row0 = int(rng.integers(0, c.n1 - k + 1))
+        H = rng.standard_normal((k, c.n2)).astype(np.float32)
+        items.append((i, H, row0))
+    return items
+
+
+# ---------------------------------------------------------------------------
+# (a) the fixed oracle: ragged lane == solo update, bitwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       kind=st.sampled_from(["normal", "uniform", "rademacher"]),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       max_k=st.integers(1, 48),
+       n_streams=st.integers(1, 7))
+def test_ragged_lane_bitwise_equals_solo_update(seed, kind, dtype, max_k,
+                                                n_streams):
+    rng = np.random.default_rng(seed)
+    cfgs = [make_cfg(seed + i, kind=kind, dtype=dtype)
+            for i in range(n_streams)]
+    svc, ref = SketchService(), SketchService()
+    sids = [svc.open(c) for c in cfgs]
+    rids = [ref.open(c) for c in cfgs]
+    items = ragged_traffic(rng, cfgs, max_k=max_k)
+    for i, H, row0 in items:
+        ref.update(rids[i], H, row0=row0)
+    svc.update_ragged([(sids[i], H, row0) for i, H, row0 in items],
+                      pad_value=float("nan"))   # the all-NaN pad probe
+    for i in range(n_streams):
+        assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i])), \
+            f"Y lane {i} diverged from solo update"
+        assert bits_equal(svc.corange(sids[i]), ref.corange(rids[i])), \
+            f"W lane {i} diverged from solo update"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       kind=st.sampled_from(["normal", "rademacher"]))
+def test_ragged_lane_bitwise_pallas_fold_backend(seed, kind):
+    """The vmapped *Pallas* masked fold (interpret mode off-TPU) hits the
+    same bits as the jnp fold and as the solo update — the fold is
+    backend-bitwise by construction (same ops, same operands)."""
+    rng = np.random.default_rng(seed)
+    cfgs = [make_cfg(seed + i, kind=kind) for i in range(3)]
+    ref = SketchService()
+    rids = [ref.open(c) for c in cfgs]
+    items = ragged_traffic(rng, cfgs)
+    for i, H, row0 in items:
+        ref.update(rids[i], H, row0=row0)
+    for backend in ("jnp", "pallas"):
+        svc = SketchService(backend=backend)
+        sids = [svc.open(c) for c in cfgs]
+        svc.update_ragged([(sids[i], H, row0) for i, H, row0 in items],
+                          pad_value=float("nan"))
+        for i in range(3):
+            assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i])), \
+                f"{backend} Y lane {i}"
+            assert bits_equal(svc.corange(sids[i]), ref.corange(rids[i])), \
+                f"{backend} W lane {i}"
+
+
+def test_ragged_mixed_signatures_and_repeat_batches():
+    """Streams with different signatures (corange on/off, dtypes) fuse in
+    one update_ragged call — grouping is by (signature, bucket) — and a
+    second ragged batch composes bitwise on top of the first."""
+    rng = np.random.default_rng(7)
+    cfgs = [make_cfg(1), make_cfg(2, dtype="bfloat16"),
+            make_cfg(3, corange=False), make_cfg(4, kind="rademacher")]
+    svc, ref = SketchService(), SketchService()
+    sids = [svc.open(c) for c in cfgs]
+    rids = [ref.open(c) for c in cfgs]
+    for _ in range(2):
+        items = ragged_traffic(rng, cfgs)
+        for i, H, row0 in items:
+            ref.update(rids[i], H, row0=row0)
+        svc.update_ragged([(sids[i], H, row0) for i, H, row0 in items],
+                          pad_value=float("nan"))
+    for i, c in enumerate(cfgs):
+        assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i]))
+        if c.corange:
+            assert bits_equal(svc.corange(sids[i]), ref.corange(rids[i]))
+
+
+def test_ragged_respects_planner_bucket_edges():
+    """Explicit bucket_edges steer the padding; bits never change."""
+    rng = np.random.default_rng(11)
+    cfgs = [make_cfg(20 + i) for i in range(5)]
+    svc, ref = SketchService(), SketchService()
+    sids = [svc.open(c) for c in cfgs]
+    rids = [ref.open(c) for c in cfgs]
+    items = ragged_traffic(rng, cfgs, max_k=48)
+    for i, H, row0 in items:
+        ref.update(rids[i], H, row0=row0)
+    svc.update_ragged([(sids[i], H, row0) for i, H, row0 in items],
+                      bucket_edges=[8, 48], pad_value=float("nan"))
+    for i in range(5):
+        assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i]))
+
+
+def test_ragged_validates_before_mutating():
+    svc = SketchService()
+    cfg = make_cfg(5)
+    a, b = svc.open(cfg), svc.open(cfg)
+    H = np.ones((4, cfg.n2), np.float32)
+    before = np.asarray(svc.sketch(a)).copy()
+    with pytest.raises(ValueError):
+        svc.update_ragged([(a, H, 0), (b, H, cfg.n1)])   # lane b out of range
+    assert bits_equal(svc.sketch(a), before), \
+        "a bad lane must not leave a half-applied batch"
+    with pytest.raises(ValueError):
+        svc.update_ragged([(a, H, 0), (a, H, 0)])        # duplicate sid
+    with pytest.raises(ValueError):
+        svc.update_ragged([])
+
+
+def test_bucket_snapping_helpers():
+    assert [pow2_bucket(k) for k in (1, 2, 3, 5, 8, 9, 64)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+    assert snap_bucket(5, [4, 16]) == 16
+    assert snap_bucket(17, [4, 16]) == 17    # taller than every edge
+    assert snap_bucket(3, None) == 4
+    # height 1 is never padded, whatever the edges say (see below)
+    assert snap_bucket(1, [8, 32]) == 1
+    assert snap_bucket(1, None) == 1
+
+
+def test_height1_lane_never_padded_and_stays_bitwise_at_large_n2():
+    # XLA-CPU lowers an M=1 matmul through a gemv kernel whose
+    # K-reduction order differs from the packed M>=2 gemm loop, so a
+    # single-row slab padded into a taller bucket loses bitwise equality
+    # with its solo update once the contraction is large (regression:
+    # n2=512 traffic with k=1 lanes under planner edges [8, 32]).
+    # snap_bucket therefore gives height 1 its own bucket, and the
+    # planner emits the mandatory [1] edge.
+    assert choose_bucket_edges([1, 1, 4, 9], 512, 32)[0] == 1
+    n1, n2, r = 64, 512, 32
+    cfgs = [make_cfg(70 + i, n1=n1, n2=n2, r=r) for i in range(3)]
+    svc, ref = SketchService(), SketchService()
+    sids = [svc.open(c) for c in cfgs]
+    rids = [ref.open(c) for c in cfgs]
+    rng = np.random.default_rng(9)
+    hs = [rng.standard_normal((k, n2)).astype(np.float32)
+          for k in (1, 3, 8)]
+    svc.update_ragged([(sids[i], hs[i], 2 * i) for i in range(3)],
+                      bucket_edges=[8])
+    for i in range(3):
+        ref.update(rids[i], hs[i], row0=2 * i)
+    for i in range(3):
+        assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i]))
+        assert bits_equal(svc.corange(sids[i]), ref.corange(rids[i]))
+
+
+# ---------------------------------------------------------------------------
+# (b) fault injection on the async ingest queue
+# ---------------------------------------------------------------------------
+
+def test_queue_applies_updates_bitwise_and_preserves_per_stream_order():
+    rng = np.random.default_rng(3)
+    cfgs = [make_cfg(30 + i) for i in range(3)]
+    svc, ref = SketchService(), SketchService()
+    sids = [svc.open(c) for c in cfgs]
+    rids = [ref.open(c) for c in cfgs]
+    with IngestQueue(svc, depth=32, window=8) as q:
+        for t in range(9):                      # 3 updates per stream:
+            i = t % 3                           # order within a stream matters
+            k = int(rng.integers(1, 17))
+            row0 = int(rng.integers(0, cfgs[i].n1 - k + 1))
+            H = rng.standard_normal((k, cfgs[i].n2)).astype(np.float32)
+            q.submit(sids[i], H, row0)
+            ref.update(rids[i], H, row0=row0)
+        q.flush(raise_errors=True)
+        st = q.stats()
+        assert st["applied"] == 9 and st["errors"] == 0
+        for i in range(3):
+            assert bits_equal(svc.sketch(sids[i]), ref.sketch(rids[i]))
+
+
+def test_queue_full_applies_backpressure_not_drops():
+    svc = SketchService()
+    sid = svc.open(make_cfg(40))
+    q = IngestQueue(svc, depth=4, window=8)
+    try:
+        q.submit(sid, np.ones((2, 64), np.float32), 0)
+        q.flush()
+        q.hold()                      # stall the worker deterministically
+        time.sleep(0.1)               # let its in-flight get() time out
+        for _ in range(4):
+            q.submit(sid, np.ones((2, 64), np.float32), 0)
+        with pytest.raises(pyqueue.Full):
+            q.submit(sid, np.ones((2, 64), np.float32), 0, timeout=0.2)
+        q.release()
+        q.flush(raise_errors=True)
+        assert q.stats()["applied"] == 5, "held updates must not be dropped"
+    finally:
+        q.shutdown()
+
+
+def test_queue_rejects_nonfinite_before_touching_state():
+    svc = SketchService()
+    sid = svc.open(make_cfg(41))
+    with IngestQueue(svc, depth=8, window=4) as q:
+        q.submit(sid, np.ones((2, 64), np.float32), 0)
+        q.flush(raise_errors=True)
+        before = np.asarray(svc.sketch(sid)).copy()
+        for bad in (np.nan, np.inf, -np.inf):
+            with pytest.raises(ValueError):
+                q.submit(sid, np.full((2, 64), bad, np.float32), 0)
+        q.flush(raise_errors=True)
+        assert bits_equal(svc.sketch(sid), before)
+        st = q.stats()
+        assert st["rejected"] == 3 and st["applied"] == 1
+
+
+def test_queue_close_with_inflight_drains_cleanly():
+    rng = np.random.default_rng(5)
+    cfg = make_cfg(42)
+    svc, ref = SketchService(), SketchService()
+    sid, rid = svc.open(cfg), ref.open(cfg)
+    q = IngestQueue(svc, depth=64, window=8)
+    try:
+        q.hold()
+        time.sleep(0.1)
+        for j in range(6):
+            k = int(rng.integers(1, 9))
+            H = rng.standard_normal((k, cfg.n2)).astype(np.float32)
+            q.submit(sid, H, j * 8)
+            ref.update(rid, H, row0=j * 8)
+        q.release()
+        Y, W = q.close_stream(sid)    # must drain all 6 first
+        assert bits_equal(Y, ref.sketch(rid))
+        assert bits_equal(W, ref.corange(rid))
+        with pytest.raises(ValueError):
+            q.submit(sid, np.ones((2, cfg.n2), np.float32), 0)
+        assert q.stats()["errors"] == 0
+    finally:
+        q.shutdown()
+
+
+def test_queue_worker_errors_are_surfaced_not_swallowed():
+    svc = SketchService()
+    cfg = make_cfg(43)
+    sid = svc.open(cfg)
+    with IngestQueue(svc, depth=8, window=4, validate_payloads=False) as q:
+        svc.close(sid)                # race: sid dies under the queue
+        q.submit(sid, np.ones((2, cfg.n2), np.float32), 0)
+        with pytest.raises(RuntimeError, match="ingest failure"):
+            q.flush(raise_errors=True)
+        assert q.stats()["errors"] == 1
+
+
+# ---------------------------------------------------------------------------
+# (b') QoS admission/eviction: transparent bitwise restore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spill", ["host", "disk"])
+def test_evicted_then_touched_restores_bitwise(spill, tmp_path):
+    rng = np.random.default_rng(9)
+    cfg = make_cfg(50)
+    svc = SketchService(max_resident=2,
+                        spill_dir=str(tmp_path) if spill == "disk" else None)
+    ref = SketchService()
+    sid, rid = svc.open(cfg), ref.open(cfg)
+    H = rng.standard_normal((16, cfg.n2)).astype(np.float32)
+    svc.update(sid, H, row0=8)
+    ref.update(rid, H, row0=8)
+    svc.evict(sid)
+    assert svc.num_evicted == 1 and svc.num_resident == 0
+    # touch via a ragged batch: restore must be transparent AND bitwise
+    H2 = rng.standard_normal((5, cfg.n2)).astype(np.float32)
+    svc.update_ragged([(sid, H2, 40)], pad_value=float("nan"))
+    ref.update(rid, H2, row0=40)
+    assert svc.num_evicted == 0 and svc.num_resident == 1
+    assert bits_equal(svc.sketch(sid), ref.sketch(rid))
+    assert bits_equal(svc.corange(sid), ref.corange(rid))
+
+
+def test_admission_evicts_lru_respecting_qos():
+    cfg = make_cfg(51)
+    svc = SketchService(max_resident=2)
+    pinned = svc.open(cfg, qos="pinned")
+    best = svc.open(cfg, qos="best_effort")
+    svc.sketch(best)                        # best_effort is the HOTTEST...
+    std = svc.open(cfg, qos="standard")     # ...but lowest class evicts first
+    assert svc.num_resident == 2
+    assert set(svc._streams) == {pinned, std}
+    # pinned survives even as LRU; standard (colder class wins over recency)
+    svc.sketch(std)
+    again = svc.open(cfg, qos="standard")
+    assert pinned in svc._streams and again in svc._streams
+    # all-pinned refusal is loud, not corrupting
+    svc2 = SketchService(max_resident=1)
+    svc2.open(cfg, qos="pinned")
+    with pytest.raises(RuntimeError, match="admission refused"):
+        svc2.open(cfg, qos="pinned")
+
+
+def test_batch_lanes_are_protected_from_mutual_eviction():
+    cfg = make_cfg(52)
+    svc = SketchService(max_resident=1)
+    a = svc.open(cfg)
+    b = svc.open(cfg)                 # evicts a
+    assert svc.num_evicted == 1
+    rng = np.random.default_rng(0)
+    items = [(s, rng.standard_normal((4, cfg.n2)).astype(np.float32), 0)
+             for s in (a, b)]
+    # both lanes cannot be resident under max_resident=1: the batch must
+    # refuse admission rather than evict its own in-flight sibling
+    with pytest.raises(RuntimeError, match="admission refused"):
+        svc.update_ragged(items)
+
+
+def test_close_works_on_evicted_streams(tmp_path):
+    cfg = make_cfg(53)
+    for spill in (None, str(tmp_path)):
+        svc = SketchService(max_resident=1, spill_dir=spill)
+        ref = SketchService()
+        a, ra = svc.open(cfg), ref.open(cfg)
+        H = np.random.default_rng(1).standard_normal(
+            (8, cfg.n2)).astype(np.float32)
+        svc.update(a, H, row0=0)
+        ref.update(ra, H, row0=0)
+        svc.open(cfg)                 # evicts a
+        Y, W = svc.close(a)
+        assert bits_equal(Y, ref.sketch(ra))
+        assert bits_equal(W, ref.corange(ra))
+        assert svc.num_streams == 1
+
+
+# ---------------------------------------------------------------------------
+# (c) service ledger fixes
+# ---------------------------------------------------------------------------
+
+def test_stats_updates_is_a_lifetime_counter():
+    svc = SketchService()
+    cfg = make_cfg(60)
+    a, b = svc.open(cfg), svc.open(cfg)
+    H = np.ones((4, cfg.n2), np.float32)
+    svc.update(a, H, row0=0)
+    svc.update_ragged([(a, H, 8), (b, H, 0)])
+    assert svc.stats()["updates"] == 3
+    svc.close(a)
+    assert svc.stats()["updates"] == 3, \
+        "closing a stream must not erase its updates from the ledger"
+    svc.close(b)
+    assert svc.stats()["updates"] == 3
+
+
+def test_unknown_sid_raises_clear_value_error():
+    svc = SketchService()
+    sid = svc.open(make_cfg(61))
+    svc.close(sid)
+    for op in (lambda: svc.close(sid),
+               lambda: svc.close(999),
+               lambda: svc.evict(999),
+               lambda: svc.update(sid, np.ones((4, 64), np.float32), row0=0),
+               lambda: svc.sketch(999)):
+        with pytest.raises(ValueError, match="unknown stream id"):
+            op()
+
+
+def test_stats_reports_residency():
+    svc = SketchService(max_resident=1)
+    cfg = make_cfg(62)
+    svc.open(cfg), svc.open(cfg)
+    st = svc.stats()
+    assert st["streams"] == 2 and st["resident"] == 1 and st["evicted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# (d) bucket-edge planner limits
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(1, 12))
+def test_choose_bucket_edges_covers_all_heights(seed, n):
+    rng = np.random.default_rng(seed)
+    ks = [int(rng.integers(1, 65)) for _ in range(n)]
+    edges = choose_bucket_edges(ks, 256, 16, machine=PRESETS["cpu"])
+    assert edges == sorted(edges)
+    assert edges[-1] == max(ks), "tallest lane must fit the last bucket"
+    for k in ks:
+        assert snap_bucket(k, edges) >= k
+
+
+def test_choose_bucket_edges_limit_behaviors():
+    ks = [3, 3, 7, 8, 8, 17, 31, 32]
+    cpu = PRESETS["cpu"]
+    free = dataclasses.replace(cpu, dispatch_overhead=0.0)
+    assert choose_bucket_edges(ks, 256, 16, machine=free) == \
+        sorted(set(ks)), "zero dispatch cost -> padding is never worth it"
+    dominant = dataclasses.replace(cpu, dispatch_overhead=1e3)
+    assert choose_bucket_edges(ks, 256, 16, machine=dominant) == [32], \
+        "dominant dispatch cost -> one fused bucket"
+    assert choose_bucket_edges([], 256, 16, machine=cpu) == []
+    # the DP's objective really is the bucket-cost sum it claims to minimize
+    edges = choose_bucket_edges(ks, 256, 16, machine=cpu)
+    def total(edgeset):
+        groups = {}
+        for k in ks:
+            groups.setdefault(snap_bucket(k, edgeset), []).append(k)
+        return sum(ragged_bucket_cost(g, kb, 256, 16, 33, machine=cpu)
+                   for kb, g in groups.items())
+    assert total(edges) <= total(sorted(set(ks))) + 1e-12
+    assert total(edges) <= total([max(ks)]) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# dtype edge: bf16 lanes through the ragged path keep native accumulation
+# ---------------------------------------------------------------------------
+
+def test_ragged_bf16_matches_solo_bf16_exactly():
+    rng = np.random.default_rng(77)
+    cfg = make_cfg(70, dtype="bfloat16")
+    svc, ref = SketchService(), SketchService()
+    sid, rid = svc.open(cfg), ref.open(cfg)
+    H = rng.standard_normal((12, cfg.n2)).astype(np.float32)
+    svc.update_ragged([(sid, H, 3)], pad_value=float("nan"))
+    ref.update(rid, H, row0=3)
+    assert svc.sketch(sid).dtype == jnp.bfloat16
+    assert bits_equal(svc.sketch(sid), ref.sketch(rid))
+    assert bits_equal(svc.corange(sid), ref.corange(rid))
