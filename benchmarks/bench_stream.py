@@ -25,6 +25,12 @@ Columns:
                              ingest latency through the async IngestQueue,
                              and whether ragged stayed bitwise-equal to
                              serial.
+  stream_obs_overhead      — the same ``update_ragged`` round with the
+                             repro.obs tracer + comm-ledger installed vs
+                             uninstalled (interleaved min-of-pairs);
+                             derived: the traced/untraced ratio — the
+                             PR-7 budget is <= 1.02x (tests/test_obs.py
+                             enforces it; this row trends it).
 """
 from __future__ import annotations
 
@@ -101,6 +107,7 @@ def _local():
     emit("stream_recon_error", us, f"rel_err={err:.3e}")
 
     _ragged_sustained()
+    _obs_overhead()
 
 
 def _ragged_sustained():
@@ -190,6 +197,55 @@ def _ragged_sustained():
          f"streams_per_s={n_streams / us_ragged * 1e6:.3g};"
          f"serial_us={us_serial:.1f};amortize={ratio:.1f}x;"
          f"p99_ms={p99_ms:.1f};bitwise={bitwise}")
+
+
+def _obs_overhead():
+    """Traced (tracer + comm-ledger installed) vs untraced ragged-update
+    rounds, interleaved pairwise so both classes sample the same noise."""
+    import numpy as np
+
+    from repro import obs
+    from repro.stream import SketchService, StreamConfig
+
+    n1, n2, r = pick((1024, 512, 16), (256, 128, 8))
+    n_streams, k = 16, pick(128, 64)
+    svc = SketchService()
+    sids = [svc.open(StreamConfig(n1=n1, n2=n2, r=r, seed=s, corange=False))
+            for s in range(n_streams)]
+    items = [(sid, np.ones((k, n2), np.float32), 0) for sid in sids]
+
+    def one_round():
+        svc.update_ragged(items)
+        svc.sync()
+
+    one_round()                             # compile + warm
+
+    def timed():
+        t0 = time.perf_counter()
+        one_round()
+        return time.perf_counter() - t0
+
+    # reuse one tracer+ledger across pairs and warm the traced path once:
+    # the row trends the steady-state cost, not the first-observe
+    # site-registration cost a fresh ledger would re-bill every round
+    tracer = obs.Tracer(max_spans=1_000_000)
+    ledger = obs.CommLedger()
+    obs.install_tracer(tracer)
+    obs.install_ledger(ledger)
+    one_round()
+    obs.uninstall_observability()
+    untraced = traced = float("inf")
+    for _ in range(pick(40, 10)):
+        untraced = min(untraced, timed())
+        obs.install_tracer(tracer)
+        obs.install_ledger(ledger)
+        try:
+            traced = min(traced, timed())
+        finally:
+            obs.uninstall_observability()
+    emit("stream_obs_overhead", traced * 1e6,
+         f"untraced_us={untraced * 1e6:.1f};"
+         f"overhead={traced / untraced:.3f}x")
 
 
 _DIST_SNIPPET = r"""

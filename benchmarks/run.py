@@ -97,6 +97,10 @@ def main() -> None:
     ap.add_argument("--fail-ratio", type=float, default=None,
                     help="fail when a row slows past this ratio "
                          "(default: wall times informational only)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="run the in-process suites under the repro.obs "
+                         "tracer+ledger and write a Chrome trace_event "
+                         "JSON to FILE (plus the honesty report to stderr)")
     args = ap.parse_args()
     if args.compare and len(args.compare) > 2:
         ap.error("--compare takes at most two JSON paths")
@@ -125,6 +129,13 @@ def main() -> None:
         "stream": bench_stream.main,
         "plan": bench_plan.main,                # predicted vs measured + tune
     }
+
+    tracer = ledger = None
+    if args.trace:
+        # in-process suites only: subprocess benchmarks (fake multi-device
+        # harnesses) run outside this tracer's process
+        from repro import obs
+        tracer, ledger, _ = obs.install_observability()
 
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -157,6 +168,15 @@ def main() -> None:
                 rows.append({"name": parts[0], "us_per_call": us,
                              "derived": parts[2]})
         results[name] = {"ok": ok, "rows": rows}
+
+    if args.trace:
+        from repro import obs
+        tracer.export_chrome(args.trace)
+        print(f"# trace written to {args.trace} ({len(tracer.spans)} spans)",
+              file=sys.stderr)
+        if len(ledger):
+            print(obs.honesty_report(ledger), file=sys.stderr)
+        obs.uninstall_observability()
 
     payload = {"schema": 1, "smoke": args.smoke, "suites": results}
     if args.out:

@@ -50,11 +50,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs import ledger as obs_ledger
+from repro.obs import trace as obs_trace
+
 from .compat import shard_map
 from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, input_sharding,
                      make_grid_mesh, omega_tile, rand_matmul, seed_keys)
 
 X_AXIS = "x"
+
+
+def _fused_audit(n: int, r: int, p, q, backend: str):
+    """(predicted words, Theorem-3 floor) of the fused two-grid program —
+    the ledger's reference numbers.  The prediction is
+    ``plan.model.alg2_fused_cost``: stage collectives plus the in-program
+    §5.2 Redistribute min-cut (stage 1 contributes zero words on the
+    streamed-finalize (P, 1, 1) p-grid)."""
+    from repro.plan import model as M
+    from .lower_bounds import nystrom_lower_bound
+    try:
+        floor = nystrom_lower_bound(n, r, p[0] * p[1] * p[2])
+    except ValueError:                  # paper assumes r < n
+        floor = 0.0
+    return float(M.alg2_fused_cost(n, r, tuple(p), tuple(q),
+                                   backend=backend).words), float(floor)
 
 
 # ---------------------------------------------------------------------------
@@ -689,7 +708,15 @@ def nystrom_second_stage_two_grid_fused(B, seed, r: int,
     # host-mediated cost the cross-mesh path pays on every call).
     B = jax.device_put(B, NamedSharding(shared.mesh, b_p_spec))
     keys = jnp.stack(seed_keys(seed))
-    return fn(B, keys)
+    led = obs_ledger.get_ledger()
+    if led is not None:
+        pred, floor = _fused_audit(n, r, p, q, backend)
+        led.observe("nystrom.stage2_two_grid_fused", fn, (B, keys),
+                    predicted_words=pred, lower_bound_words=floor,
+                    itemsize=jnp.dtype(B.dtype).itemsize)
+    with obs_trace.span("nystrom.stage2_two_grid_fused", cat="nystrom",
+                        n=n, r=r, p=list(p), q=list(q)):
+        return fn(B, keys)
 
 
 def nystrom_two_grid_fused(A, seed, r: int, mesh: Optional[Mesh] = None,
@@ -741,8 +768,16 @@ def nystrom_two_grid_fused(A, seed, r: int, mesh: Optional[Mesh] = None,
         A, NamedSharding(shared.mesh,
                          P(_spec_entry(pa1), _spec_entry(pa2 + pa3))))
     keys = jnp.stack(seed_keys(seed))
-    return _nystrom_two_grid_fused_prog(r, shared, kind, backend,
-                                        blocks)(A, keys)
+    fn = _nystrom_two_grid_fused_prog(r, shared, kind, backend, blocks)
+    led = obs_ledger.get_ledger()
+    if led is not None:
+        pred, floor = _fused_audit(n, r, p, q, backend)
+        led.observe("nystrom.two_grid_fused", fn, (A, keys),
+                    predicted_words=pred, lower_bound_words=floor,
+                    itemsize=jnp.dtype(A.dtype).itemsize)
+    with obs_trace.span("nystrom.two_grid_fused", cat="nystrom",
+                        n=n, r=r, p=list(p), q=list(q)):
+        return fn(A, keys)
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import get_api
+from repro.obs import trace as obs_trace
 from repro.serve.engine import BatchedServer, Request
 
 
@@ -83,10 +84,13 @@ def run_sketch(args):
     t0 = time.perf_counter()
     it = iter(ks)
     for u in range(args.updates):
-        for sid in sids:
-            k = next(it)
-            H = rng.standard_normal((k, args.n2)).astype(np.float32)
-            q.submit(sid, H, int(rng.integers(0, args.n1 - k + 1)))
+        # submit under a round span: the queue worker's apply spans
+        # stitch under it cross-thread in the exported trace
+        with obs_trace.span("client.update_round", cat="client", round=u):
+            for sid in sids:
+                k = next(it)
+                H = rng.standard_normal((k, args.n2)).astype(np.float32)
+                q.submit(sid, H, int(rng.integers(0, args.n1 - k + 1)))
     q.flush(raise_errors=True)
     dt = time.perf_counter() - t0
     st = q.stats()
@@ -123,8 +127,33 @@ def main():
     ap.add_argument("--window", type=int, default=64)
     ap.add_argument("--max-resident", type=int, default=0,
                     help="admission budget (0 = unlimited)")
+    # observability (repro.obs)
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the Prometheus text exposition of the "
+                         "process metrics registry after the run")
+    ap.add_argument("--trace-out", metavar="FILE", default=None,
+                    help="write a Chrome/Perfetto trace (trace_event JSON) "
+                         "of the run to FILE; also prints the comm-ledger "
+                         "honesty report")
     args = ap.parse_args()
-    return run_sketch(args) if args.workload == "sketch" else run_lm(args)
+    tracing = args.trace_out is not None
+    if tracing:
+        from repro import obs
+        tracer, ledger, _ = obs.install_observability()
+    try:
+        out = run_sketch(args) if args.workload == "sketch" else run_lm(args)
+    finally:
+        if tracing:
+            tracer.export_chrome(args.trace_out)
+            print(f"[serve] trace written to {args.trace_out} "
+                  f"({len(tracer.spans)} spans)")
+            if len(ledger):
+                print(obs.honesty_report(ledger))
+            obs.uninstall_observability()
+        if args.metrics:
+            from repro.obs import get_metrics
+            print(get_metrics().prometheus_text(), end="")
+    return out
 
 
 if __name__ == "__main__":

@@ -89,6 +89,16 @@ class AutotuneCache:
         self._entries[key] = value
         self._flush()
 
+    def pop(self, key: str) -> Optional[dict]:
+        """Drop one entry (drift revalidation — see
+        ``repro.obs.report.revalidate_autotune``): the next ``autotune``
+        call at ``key`` misses and re-measures.  Returns the dropped entry,
+        or None when the key was absent (nothing is flushed then)."""
+        hit = self._entries.pop(key, None)
+        if hit is not None:
+            self._flush()
+        return hit
+
     def _flush(self):
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.grid import (
@@ -141,13 +142,35 @@ class Plan:
                 f"plan {self.variant} for dims={self.dims}, P={self.n_procs} "
                 f"is analytic-only (no executable grid divides the shape); "
                 f"pad the shape or change P")
-        if self.task == "sketch":
-            return self._execute_sketch(A, seed, devices)
-        if self.task == "nystrom":
-            return self._execute_nystrom(A, seed, devices)
-        if self.task == "stream":
-            return self._execute_stream(A, seed, devices)
-        raise ValueError(self.task)
+        from repro.obs import ledger as obs_ledger
+        from repro.obs import trace as obs_trace
+        led = obs_ledger.get_ledger()
+        t0 = time.perf_counter() if led is not None else 0.0
+        with obs_trace.span("plan.execute", cat="plan", task=self.task,
+                            variant=self.variant, dims=list(self.dims),
+                            P=self.n_procs):
+            if self.task == "sketch":
+                out = self._execute_sketch(A, seed, devices)
+            elif self.task == "nystrom":
+                out = self._execute_nystrom(A, seed, devices)
+            elif self.task == "stream":
+                out = self._execute_stream(A, seed, devices)
+            else:
+                raise ValueError(self.task)
+        if led is not None:
+            # analytic site: execute dispatches into opaque entry points
+            # (the instrumented layers below contribute the HLO-backed
+            # sites); the cache_key ties drift flags back to plan.autotune
+            from .autotune import cache_key
+            import numpy as np
+            led.record(f"plan.execute[{self.task}/{self.variant}]",
+                       predicted_words=self.predicted_words,
+                       lower_bound_words=self.lower_bound_words,
+                       itemsize=np.dtype(self.dtype).itemsize,
+                       cache_key=cache_key(self),
+                       wall_s=time.perf_counter() - t0,
+                       detail=(self.dims, self.n_procs))
+        return out
 
     def _mesh_1d(self, devices):
         import jax

@@ -49,6 +49,16 @@ _OPERAND = re.compile(r"%[\w.\-]+")
 _GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
+# collective-permute routing: source_target_pairs={{0,1},{1,2},...}
+_ST_PAIRS = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_ST_PAIR = re.compile(r"\{(\d+),(\d+)\}")
+
+#: collective kinds that implement a LAYOUT CHANGE (each device sends its
+#: shard to a different owner) rather than a reduction/broadcast — the
+#: §5.2 Redistribute of the fused two-grid path is emitted as these.
+REDISTRIBUTE_KINDS = ("collective-permute", "all-to-all",
+                      "ragged-all-to-all")
+
 
 def _group_size(line: str):
     """Participants per replica group of a collective (None if unknown)."""
@@ -59,6 +69,21 @@ def _group_size(line: str):
     if m:  # [G,S]<=[N]: G groups of size S
         return int(m.group(2))
     return None
+
+
+def _permute_pairs(line: str):
+    """(moving, identity) source->target pair counts of a
+    collective-permute, or None when the attribute is absent."""
+    m = _ST_PAIRS.search(line)
+    if m is None:
+        return None
+    moving = identity = 0
+    for src, dst in _ST_PAIR.findall(m.group(1)):
+        if src == dst:
+            identity += 1
+        else:
+            moving += 1
+    return moving, identity
 
 
 def _shape_bytes(dtype: str, dims: str) -> float:
@@ -94,10 +119,20 @@ def _operand_span(text: str) -> str:
 
 @dataclass
 class CollectiveBytes:
-    """Per-device collective traffic of one compiled HLO module."""
+    """Per-device collective traffic of one compiled HLO module.
+
+    ``permute_pairs`` / ``permute_identity_pairs`` classify the
+    collective-permute routing tables: moving (src != dst) vs identity
+    pairs summed over all counted permutes.  Permutes whose routing table
+    is entirely identity pairs move nothing and are skipped outright (like
+    group-size-1 collectives) — the partitioner emits them as layout
+    no-ops and counting their operand would overstate the traffic.
+    """
     by_kind: Dict[str, float] = field(default_factory=dict)
     counts: Dict[str, int] = field(default_factory=dict)
     num_partitions: int = 1
+    permute_pairs: int = 0
+    permute_identity_pairs: int = 0
 
     @property
     def total(self) -> float:
@@ -108,6 +143,15 @@ class CollectiveBytes:
     def fleet_total(self) -> float:
         """Across all participating devices."""
         return self.total * self.num_partitions
+
+    @property
+    def redistribute_total(self) -> float:
+        """Per-device bytes of the layout-change collectives
+        (collective-permute + all-to-all + ragged-all-to-all) — the §5.2
+        Redistribute traffic of the fused two-grid path, separated from
+        the reduction/broadcast collectives of the Alg.-1/2 stages."""
+        return float(sum(self.by_kind.get(k, 0.0)
+                         for k in REDISTRIBUTE_KINDS))
 
     def __repr__(self):
         kinds = ", ".join(f"{k}:{v:.4g}B x{self.counts.get(k, 0)}"
@@ -135,18 +179,26 @@ def collective_bytes_of(hlo_text: str) -> CollectiveBytes:
         if base in _KINDS and not op.endswith("-done"):
             if _group_size(line) == 1:
                 continue  # degenerate collective: no traffic
+            pairs = None
+            if base == "collective-permute":
+                pairs = _permute_pairs(line)
+                if pairs is not None and pairs[0] == 0:
+                    continue  # identity-only routing: a layout no-op
             rest = line[dm.end():]
             operands = _OPERAND.findall(_operand_span(rest))
-            pending.append((base, operands, type_text))
+            pending.append((base, operands, type_text, pairs))
 
     # pass 2: resolve operand sizes
-    for kind, operands, type_text in pending:
+    for kind, operands, type_text, pairs in pending:
         nbytes = sum(sizes.get(o, 0.0) for o in operands)
         if nbytes == 0.0:
             # fall back to result size (conservative, e.g. params as operands)
             nbytes = _type_bytes(type_text)
         out.by_kind[kind] = out.by_kind.get(kind, 0.0) + nbytes
         out.counts[kind] = out.counts.get(kind, 0) + 1
+        if pairs is not None:
+            out.permute_pairs += pairs[0]
+            out.permute_identity_pairs += pairs[1]
     return out
 
 

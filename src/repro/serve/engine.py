@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.models import get_api
 from repro.models.common import NULL_CTX, ShardCtx, matmul
 from repro.models import mamba_lm, transformer, whisper as whisper_mod, zamba
+from repro.obs import trace as obs_trace
 from repro.stream.service import SketchService
 
 
@@ -123,8 +124,11 @@ class BatchedServer:
                 self.active[s] = req
                 self.pos[s] = 0
                 # teacher-forced prompt replay into the cache
-                for t in req.prompt:
-                    self._advance_slot(s, t)
+                with obs_trace.span("serve.prefill", cat="serve",
+                                    rid=req.rid, slot=s,
+                                    prompt_len=len(req.prompt)):
+                    for t in req.prompt:
+                        self._advance_slot(s, t)
 
     def _advance_slot(self, s: int, token: int) -> int:
         tok = jnp.zeros((self.slots, 1), jnp.int32).at[s, 0].set(token)
@@ -135,20 +139,21 @@ class BatchedServer:
 
     def step(self) -> bool:
         """One scheduler tick; returns False when idle."""
-        self._fill_slots()
-        busy = False
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            busy = True
-            last = req.out[-1] if req.out else req.prompt[-1]
-            nxt = self._advance_slot(s, last)
-            req.out.append(nxt)
-            if nxt == self.eos or len(req.out) >= req.max_new \
-                    or self.pos[s] >= self.max_len - 1:
-                req.done = True
-                self.active[s] = None
-        return busy or bool(self.queue)
+        with obs_trace.span("serve.step", cat="serve"):
+            self._fill_slots()
+            busy = False
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                busy = True
+                last = req.out[-1] if req.out else req.prompt[-1]
+                nxt = self._advance_slot(s, last)
+                req.out.append(nxt)
+                if nxt == self.eos or len(req.out) >= req.max_new \
+                        or self.pos[s] >= self.max_len - 1:
+                    req.done = True
+                    self.active[s] = None
+            return busy or bool(self.queue)
 
     def run(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):

@@ -38,6 +38,8 @@ from repro.core.sketch import (
     output_sharding,
     rand_matmul,
 )
+from repro.obs import ledger as obs_ledger
+from repro.obs import trace as obs_trace
 
 from .state import StreamConfig, psi_cols, validate_row_block
 
@@ -79,6 +81,12 @@ def nystrom_finalize(Y, cfg: StreamConfig, mesh: Mesh,
     (kernels/local.py) — the pallas backend keeps Omega out of HBM at
     finalize time too.
     """
+    with obs_trace.span("stream.nystrom_finalize", cat="stream",
+                        variant=variant):
+        return _nystrom_finalize(Y, cfg, mesh, axes, variant, backend)
+
+
+def _nystrom_finalize(Y, cfg, mesh, axes, variant, backend):
     ax1, ax2, ax3 = axes
     if cfg.n1 != cfg.n2:
         raise ValueError("Nyström needs a square (symmetric) stream")
@@ -389,6 +397,44 @@ class ShardedStreamingSketch:
         # executable
         self._upd = _sharded_update_prog(cfg, mesh, tuple(axes),
                                          self.backend, self.blocks)
+        self._audits = {}   # slab rows k (or None) -> (pred words, floor)
+
+    def _audit(self, k: Optional[int]) -> Tuple[float, float]:
+        """Ledger reference numbers, memoized per slab height: planner-
+        predicted words and the Theorem-2 floor of the sketch product.
+
+        ``k=None`` prices the full-shape :meth:`update` program — Alg. 1 on
+        this grid plus (when the co-range sketch is on) the psum over p1 of
+        the Psi partial (corange_update).  Integer ``k`` prices the
+        ``update_rows`` slab program via ``stream_update_cost``, whose W
+        update is fully local.
+        """
+        hit = self._audits.get(k)
+        if hit is None:
+            from repro.core.lower_bounds import matmul_lower_bound
+            from repro.plan import model as M
+            cfg = self.cfg
+            grid = tuple(int(self.mesh.shape[a]) for a in self.axes)
+            if k is None:
+                pred = M.alg1_cost(cfg.n1, cfg.n2, cfg.r, grid,
+                                   backend=self.backend).words
+                if cfg.corange:
+                    p1, p2, p3 = grid
+                    pred += (2.0 * (1.0 - 1.0 / p1)
+                             * cfg.sketch_l * cfg.n2 / (p2 * p3))
+                rows = cfg.n1
+            else:
+                pred = M.stream_update_cost(k, cfg.n2, cfg.r, cfg.sketch_l,
+                                            grid=grid, corange=cfg.corange,
+                                            backend=self.backend).words
+                rows = k
+            try:
+                floor = matmul_lower_bound(rows, cfg.n2, cfg.r,
+                                           self.mesh.devices.size)
+            except ValueError:          # paper assumes r < n2
+                floor = 0.0
+            hit = self._audits[k] = (float(pred), float(floor))
+        return hit
 
     def update(self, H):
         """A <- A + H; H must be the full (n1, n2) shape (sharded or host)."""
@@ -397,7 +443,14 @@ class ShardedStreamingSketch:
                              f"({self.cfg.n1}, {self.cfg.n2})")
         H = jax.device_put(jnp.asarray(H, self.cfg.dtype),
                            input_sharding(self.mesh, self.axes))
-        self.Y, self.W = self._upd(self.Y, self.W, H)
+        led = obs_ledger.get_ledger()
+        if led is not None:
+            pred, floor = self._audit(None)
+            led.observe("stream.update", self._upd, (self.Y, self.W, H),
+                        predicted_words=pred, lower_bound_words=floor,
+                        itemsize=jnp.dtype(self.cfg.dtype).itemsize)
+        with obs_trace.span("stream.update", cat="stream"):
+            self.Y, self.W = self._upd(self.Y, self.W, H)
         self.num_updates += 1
         return self
 
@@ -419,7 +472,15 @@ class ShardedStreamingSketch:
             NamedSharding(self.mesh, P(None, (self.axes[1], self.axes[2]))))
         fn = _sharded_rowblock_prog(self.cfg, self.mesh, tuple(self.axes), k,
                                     self.backend, self.blocks)
-        self.Y, self.W = fn(self.Y, self.W, H, jnp.int32(row0))
+        r0 = jnp.int32(row0)
+        led = obs_ledger.get_ledger()
+        if led is not None:
+            pred, floor = self._audit(k)
+            led.observe("stream.update_rows", fn, (self.Y, self.W, H, r0),
+                        predicted_words=pred, lower_bound_words=floor,
+                        itemsize=jnp.dtype(self.cfg.dtype).itemsize)
+        with obs_trace.span("stream.update_rows", cat="stream", k=k):
+            self.Y, self.W = fn(self.Y, self.W, H, r0)
         self.num_updates += 1
         return self
 

@@ -37,13 +37,23 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from .state import snap_bucket
 
 
 def _percentile(xs: Sequence[float], q: float) -> float:
-    if not xs:
+    """Percentile of a latency window; 0.0 on an empty or all-non-finite
+    window (sustained dashboards poll stats() between drains, so the
+    window is legitimately empty/short at any moment — never raise)."""
+    if xs is None or len(xs) == 0:
         return 0.0
-    return float(np.percentile(np.asarray(xs, np.float64), q))
+    a = np.asarray(xs, np.float64)
+    a = a[np.isfinite(a)]
+    if a.size == 0:
+        return 0.0
+    return float(np.percentile(a, q))
 
 
 class IngestQueue:
@@ -71,6 +81,24 @@ class IngestQueue:
         self.bucket_edges = (None if bucket_edges is None
                              else tuple(sorted(int(e) for e in bucket_edges)))
         self.validate_payloads = validate_payloads
+        # published metrics (process-global registry, repro.obs.metrics)
+        m = obs_metrics.get_metrics()
+        self._m_depth = m.gauge(
+            "ingest_queue_depth", "requests waiting in the bounded queue")
+        self._m_backpressure = m.counter(
+            "ingest_backpressure_total",
+            "submits that hit a full queue (queue.Full raised)")
+        self._m_submitted = m.counter(
+            "ingest_submitted_total", "accepted submits")
+        self._m_rejected = m.counter(
+            "ingest_rejected_total", "submits rejected at validation")
+        self._m_applied = m.counter(
+            "ingest_applied_total", "updates applied to the service")
+        self._m_errors = m.counter(
+            "ingest_errors_total", "per-request worker-side failures")
+        self._m_latency = m.histogram(
+            "ingest_drain_latency_seconds",
+            "submit -> applied latency through the queue")
         self._q: "queue.Queue[Tuple]" = queue.Queue(maxsize=depth)
         self._lock = threading.Lock()
         self._done = threading.Condition(self._lock)
@@ -106,6 +134,7 @@ class IngestQueue:
                 H.astype(np.float32, copy=False))):
             with self._lock:
                 self._rejected += 1
+            self._m_rejected.inc()
             raise ValueError(
                 f"non-finite update payload for stream {sid} rejected at "
                 f"submit (accumulators untouched)")
@@ -114,15 +143,21 @@ class IngestQueue:
                 raise ValueError(f"stream {sid} was closed via this queue")
             self._inflight[sid] = self._inflight.get(sid, 0) + 1
             self._submitted += 1
+        # parent span id captured on the SUBMITTING thread: the worker's
+        # apply span re-parents under it across the thread boundary
+        parent = obs_trace.current_span_id()
         try:
-            self._q.put((sid, H, int(row0), time.perf_counter()),
+            self._q.put((sid, H, int(row0), time.perf_counter(), parent),
                         timeout=timeout)
         except queue.Full:
             with self._lock:
                 self._inflight[sid] -= 1
                 self._submitted -= 1
                 self._done.notify_all()
+            self._m_backpressure.inc()
             raise
+        self._m_submitted.inc()
+        self._m_depth.set(self._q.qsize())
 
     # -- worker side -------------------------------------------------------
 
@@ -165,30 +200,39 @@ class IngestQueue:
                 self._apply(rnd)
 
     def _apply(self, rnd: List[Tuple]) -> None:
-        items = [(sid, H, row0) for sid, H, row0, _ in rnd]
+        items = [(sid, H, row0) for sid, H, row0, _, _ in rnd]
+        # parent under the earliest submitter's span (cross-thread): the
+        # timeline shows which request pulled this fused round in
+        parent = next((p for *_, p in rnd if p is not None), None)
         try:
-            self.service.update_ragged(items,
-                                       bucket_edges=self.bucket_edges)
+            with obs_trace.span("ingest.apply_round", cat="ingest",
+                                parent=parent, lanes=len(items)):
+                self.service.update_ragged(items,
+                                           bucket_edges=self.bucket_edges)
             err = None
         except Exception as e:            # record, don't kill the worker
             err = e
         now = time.perf_counter()
         with self._lock:
             self._rounds += 1
-            for sid, H, _, t0 in rnd:
+            for sid, H, _, t0, _ in rnd:
                 self._inflight[sid] -= 1
                 if err is None:
                     self._applied += 1
                     self._lat.append(now - t0)
+                    self._m_applied.inc()
+                    self._m_latency.observe(now - t0)
                     k = H.shape[0]
                     kb = snap_bucket(k, self.bucket_edges)
                     self._real_rows += k
                     self._padded_rows += max(kb, k) - k
                 else:
                     self._errors.append((sid, err))
+                    self._m_errors.inc()
             if len(self._lat) > 8192:
                 del self._lat[:4096]
             self._done.notify_all()
+        self._m_depth.set(self._q.qsize())
 
     # -- control plane -----------------------------------------------------
 
@@ -250,11 +294,18 @@ class IngestQueue:
 
     # -- introspection -----------------------------------------------------
 
-    def stats(self) -> Dict[str, Any]:
+    def stats(self, reset: bool = False) -> Dict[str, Any]:
+        """Queue statistics.  ``reset=True`` additionally clears the
+        WINDOW stats — the latency window and the real/padded row tallies
+        behind ``pad_waste`` — after snapshotting, so a sustained-serving
+        dashboard polling ``stats(reset=True)`` sees per-interval figures
+        instead of an aggregate over the process lifetime.  The lifetime
+        counters (submitted/applied/rejected/errors/rounds) are never
+        reset."""
         with self._lock:
             lat = list(self._lat)
             real, padded = self._real_rows, self._padded_rows
-            return {
+            out = {
                 "submitted": self._submitted,
                 "applied": self._applied,
                 "rejected": self._rejected,
@@ -267,3 +318,8 @@ class IngestQueue:
                 "padded_rows": padded,
                 "pad_waste": padded / max(1, real + padded),
             }
+            if reset:
+                self._lat.clear()
+                self._real_rows = 0
+                self._padded_rows = 0
+            return out

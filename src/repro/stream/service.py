@@ -61,6 +61,9 @@ from repro.core.sketch import (
     rand_matmul,
     seed_keys,
 )
+from repro.obs import ledger as obs_ledger
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .distributed import corange_update, stream_shardings
 from .state import (StreamConfig, _local_sig, local_rowblock_batch_prog,
@@ -147,6 +150,25 @@ class SketchService:
         self._sid = itertools.count()
         self._clock = itertools.count(1)    # LRU clock for eviction
         self._updates_total = 0             # service-lifetime, survives close
+        self._audit: Dict[Tuple, Tuple[float, float]] = {}
+        m = obs_metrics.get_metrics()
+        self._m_updates = m.counter(
+            "sketch_updates_total", "stream updates applied, by ingest path")
+        self._m_evictions = m.counter(
+            "sketch_evictions_total", "streams checkpointed off-device")
+        self._m_spills = m.counter(
+            "sketch_spills_total", "evictions written to disk (spill_dir)")
+        self._m_restores = m.counter(
+            "sketch_restores_total", "evicted streams restored from their "
+            "checkpoint")
+        self._m_resident = m.gauge(
+            "sketch_resident_streams", "streams currently resident on device")
+        self._m_real_rows = m.counter(
+            "sketch_ragged_real_rows_total",
+            "real rows folded by update_ragged")
+        self._m_padded_rows = m.counter(
+            "sketch_ragged_padded_rows_total",
+            "pad rows dispatched by update_ragged (bucket + lane-snap waste)")
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -176,6 +198,7 @@ class SketchService:
         sid = next(self._sid)
         self._streams[sid] = _Stream(cfg, jnp.stack([k0, k1]), Y, W,
                                      qos=qos, last_touch=next(self._clock))
+        self._m_resident.set(len(self._streams))
         return sid
 
     def close(self, sid: int):
@@ -193,6 +216,7 @@ class SketchService:
                              f"already closed)")
         self._materialize(st)
         del self._streams[sid]
+        self._m_resident.set(len(self._streams))
         return st.Y, st.W
 
     # -- admission / eviction ----------------------------------------------
@@ -214,6 +238,7 @@ class SketchService:
                 raise
             self._streams[sid] = self._restore(ev)
             st = self._streams[sid]
+            self._m_resident.set(len(self._streams))
         st.last_touch = next(self._clock)
         return st
 
@@ -246,27 +271,34 @@ class SketchService:
                 return                      # idempotent
             raise ValueError(f"unknown stream id {sid} (never opened, or "
                              f"already closed)")
-        self._materialize(st)
-        del self._streams[sid]
-        tree = {"Y": st.Y}
-        if st.W is not None:
-            tree["W"] = st.W
-        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        ev = _Evicted(cfg=st.cfg, keys=np.asarray(jax.device_get(st.keys)),
-                      qos=st.qos, num_updates=st.num_updates)
-        if self.spill_dir is not None:
-            from repro.checkpoint import ckpt
-            path = os.path.join(self.spill_dir, f"stream_{sid:08d}")
-            ckpt.save(path, step=st.num_updates, tree=host,
-                      extra={"config": st.cfg.to_json_dict(),
-                             "qos": st.qos,
-                             "num_updates": st.num_updates}, keep=1)
-            ev.path = path
-        else:
-            ev.host = host
-        self._evicted[sid] = ev
+        with obs_trace.span("service.evict", cat="service", sid=sid,
+                            spill=self.spill_dir is not None):
+            self._materialize(st)
+            del self._streams[sid]
+            tree = {"Y": st.Y}
+            if st.W is not None:
+                tree["W"] = st.W
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+            ev = _Evicted(cfg=st.cfg,
+                          keys=np.asarray(jax.device_get(st.keys)),
+                          qos=st.qos, num_updates=st.num_updates)
+            if self.spill_dir is not None:
+                from repro.checkpoint import ckpt
+                path = os.path.join(self.spill_dir, f"stream_{sid:08d}")
+                ckpt.save(path, step=st.num_updates, tree=host,
+                          extra={"config": st.cfg.to_json_dict(),
+                                 "qos": st.qos,
+                                 "num_updates": st.num_updates}, keep=1)
+                ev.path = path
+                self._m_spills.inc()
+            else:
+                ev.host = host
+            self._evicted[sid] = ev
+        self._m_evictions.inc()
+        self._m_resident.set(len(self._streams))
 
     def _restore(self, ev: _Evicted) -> _Stream:
+        self._m_restores.inc()
         if ev.path is not None:
             from repro.checkpoint import ckpt
             cfg = ev.cfg
@@ -353,6 +385,33 @@ class SketchService:
 
         return jax.jit(upd)
 
+    def _dist_audit(self, cfg: StreamConfig) -> Tuple[float, float]:
+        """(planner-predicted words, Theorem-2 floor) of ONE full-shape
+        distributed update on this mesh — the ledger's reference numbers
+        for ``service.update[dist]``.  Memoized per stream signature."""
+        key = _stream_sig(cfg)
+        hit = self._audit.get(key)
+        if hit is None:
+            from repro.core.lower_bounds import matmul_lower_bound
+            from repro.plan import model as M
+            grid = tuple(int(self.mesh.shape[a]) for a in self.axes)
+            # the dist program is Alg. 1 plus (corange on) the psum over p1
+            # of the Psi partial — same closed form as
+            # ShardedStreamingSketch._audit(None)
+            pred = M.alg1_cost(cfg.n1, cfg.n2, cfg.r, grid,
+                               backend=self.backend).words
+            if cfg.corange:
+                p1, p2, p3 = grid
+                pred += (2.0 * (1.0 - 1.0 / p1)
+                         * cfg.sketch_l * cfg.n2 / (p2 * p3))
+            try:
+                floor = matmul_lower_bound(cfg.n1, cfg.n2, cfg.r,
+                                           int(np.prod(grid)))
+            except ValueError:          # paper assumes r < n2
+                floor = 0.0
+            hit = self._audit[key] = (float(pred), float(floor))
+        return hit
+
     # -- ingest ------------------------------------------------------------
 
     def update(self, sid: int, H, row0: Optional[int] = None):
@@ -374,7 +433,16 @@ class SketchService:
                 raise ValueError(f"{H.shape} != ({cfg.n1}, {cfg.n2})")
             H = jax.device_put(H, input_sharding(self.mesh, self.axes))
             fn = self._get_update_fn(cfg, -1)
-            st.Y, st.W = fn(st.Y, st.W, H, st.keys, 0)
+            led = obs_ledger.get_ledger()
+            if led is not None:
+                pred, floor = self._dist_audit(cfg)
+                led.observe("service.update[dist]", fn,
+                            (st.Y, st.W, H, st.keys, 0),
+                            predicted_words=pred, lower_bound_words=floor,
+                            itemsize=jnp.dtype(cfg.dtype).itemsize)
+            with obs_trace.span("service.update", cat="service", mode="dist"):
+                st.Y, st.W = fn(st.Y, st.W, H, st.keys, 0)
+            self._m_updates.inc(path="dist")
         else:
             if row0 is None:
                 if H.shape != (cfg.n1, cfg.n2):
@@ -382,7 +450,18 @@ class SketchService:
                 row0 = 0
             validate_row_block(cfg, row0, H.shape)
             fn = self._get_update_fn(cfg, H.shape[0])
-            st.Y, st.W = fn(st.Y, st.W, H, st.keys, jnp.int32(row0))
+            r0 = jnp.int32(row0)
+            led = obs_ledger.get_ledger()
+            if led is not None:
+                # local mode: predicted AND floor are 0 words (P = 1) —
+                # the ledger asserts the compiled program moves nothing
+                led.observe("service.update[local]", fn,
+                            (st.Y, st.W, H, st.keys, r0),
+                            itemsize=jnp.dtype(cfg.dtype).itemsize)
+            with obs_trace.span("service.update", cat="service",
+                                mode="local"):
+                st.Y, st.W = fn(st.Y, st.W, H, st.keys, r0)
+            self._m_updates.inc(path="single")
         st.num_updates += 1
         self._updates_total += 1
         return self
@@ -442,7 +521,14 @@ class SketchService:
         Yb = jnp.stack([st.Y for st in sts])
         Wb = (jnp.stack([st.W for st in sts]) if cfg0.corange else None)
         keys = jnp.stack([st.keys for st in sts])
-        Yb, Wb = fn(Yb, Wb, H, keys, jnp.asarray(row0s, jnp.int32))
+        r0s = jnp.asarray(row0s, jnp.int32)
+        led = obs_ledger.get_ledger()
+        if led is not None:
+            led.observe("service.update_batch", fn, (Yb, Wb, H, keys, r0s),
+                        itemsize=jnp.dtype(cfg0.dtype).itemsize)
+        with obs_trace.span("service.update_batch", cat="service", lanes=n):
+            Yb, Wb = fn(Yb, Wb, H, keys, r0s)
+        self._m_updates.inc(n, path="batch")
         for i, st in enumerate(sts):
             st.Y = Yb[i]
             if cfg0.corange:
@@ -554,7 +640,20 @@ class SketchService:
                 keys = jnp.stack([g[1].keys for g in group]
                                  + [jnp.zeros_like(k0)] * pad)
                 self._stack_keys[gkey] = keys
-            Yb, Wb = fn(Yb, Wb, Hb, keys, row0s, kvalids)
+            led = obs_ledger.get_ledger()
+            if led is not None:
+                # observe BEFORE dispatch: the stacked (Yb, Wb) are DONATED
+                # and the ledger abstractifies its args immediately
+                led.observe("service.update_ragged", fn,
+                            (Yb, Wb, Hb, keys, row0s, kvalids),
+                            itemsize=dtype.itemsize)
+            with obs_trace.span("service.update_ragged", cat="service",
+                                lanes=n, bucket=kb):
+                Yb, Wb = fn(Yb, Wb, Hb, keys, row0s, kvalids)
+            self._m_updates.inc(n, path="ragged")
+            real = int(sum(g[4] for g in group))
+            self._m_real_rows.inc(real)
+            self._m_padded_rows.inc(ns * kb - real)
             self._stacks[gkey] = (Yb, Wb)
             for i, (_, st, *_rest) in enumerate(group):
                 st.Y = st.W = None          # rows live in the cohort stack
