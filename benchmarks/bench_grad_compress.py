@@ -1,6 +1,11 @@
 """Beyond-paper application — sketched gradient compression: collective
 bytes of the compressed DP exchange vs exact pmean (the paper's
-regenerate-don't-communicate trick applied to gradients)."""
+regenerate-don't-communicate trick applied to gradients), plus a
+convergence-vs-wall-clock comparison: a gemma2_2b-class model trained on
+8 DP workers through the planner-priced compressed step
+(``train.make_dp_compressed_step``) vs the exact-pmean baseline — same
+steps, loss reported side by side with per-step wall time and the words
+each exchange puts on the wire (docs/TRAINING.md)."""
 from __future__ import annotations
 
 from .common import run_with_devices
@@ -52,8 +57,97 @@ print(f"RESULT grad_allreduce_model,0.0,exact_words={we};"
 """
 
 
+_TRAIN_SNIPPET = r"""
+import os, time, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.core.compat import shard_map
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import get_api
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.grad_compress import comm_words_exact
+from repro.plan import plan_train_compression
+from repro.train.state import TrainState
+from repro.train.step import init_state, make_dp_compressed_step
+
+smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+dims = dict(n_layers=2, d_model=32, d_ff=64, vocab=64, head_dim=8) \
+    if smoke else dict(n_layers=2, d_model=64, d_ff=128, vocab=256,
+                       head_dim=16)
+steps, seq, rank = (8, 16, 4) if smoke else (40, 64, 8)
+cfg = get_config("gemma2-2b").reduced(**dims)
+api = get_api(cfg)
+run = RunConfig(steps=steps, learning_rate=3e-3, warmup_steps=4,
+                grad_compress_rank=rank, remat=False)
+mesh = Mesh(np.asarray(jax.devices()), ("data",))
+data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=8)
+shapes = jax.eval_shape(lambda k: api.init(k, cfg), jax.random.key(0))
+plan = plan_train_compression(shapes, rank=rank, P=8)
+
+def raw_step_fn():
+    def body(state, batch):
+        def loss_fn(p):
+            return api.loss(p, cfg, batch, remat=False)
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        loss = jax.lax.pmean(loss, "data")
+        grads = jax.lax.pmean(grads, "data")          # m*n words per matrix
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        lr = warmup_cosine(state.step, peak_lr=run.learning_rate,
+                           warmup_steps=run.warmup_steps,
+                           total_steps=run.steps)
+        p, opt = adamw.update(grads, state.opt, state.params, lr,
+                              weight_decay=run.weight_decay)
+        return TrainState(p, opt, state.step + 1, state.error_fb), loss
+    st = init_state(api, cfg, run, jax.random.key(0), world=8,
+                    decisions=plan.decision_tree())
+    sspec = jax.tree_util.tree_map(lambda _: P(), st)
+    sspec = sspec.replace(error_fb=jax.tree_util.tree_map(
+        lambda _: P("data"), st.error_fb))
+    bspec = jax.tree_util.tree_map(lambda _: P("data"),
+                                   next(Pipeline(data)))
+    return st, jax.jit(shard_map(body, mesh=mesh,
+                                 in_specs=(sspec, bspec),
+                                 out_specs=(sspec, P()),
+                                 check_vma=False))
+
+def train(name, st, fn, words):
+    pipe = Pipeline(data)
+    st, l = fn(st, next(pipe))                        # compile
+    jax.block_until_ready(l)
+    losses, t0 = [], time.perf_counter()
+    for _ in range(steps):
+        st, l = fn(st, next(pipe))
+        losses.append(l)
+    jax.block_until_ready(losses[-1])
+    us = (time.perf_counter() - t0) / steps * 1e6
+    tail = float(np.mean([float(x if np.ndim(x) == 0 else
+                                np.asarray(x).item()) for x in losses[-4:]]))
+    print(f"RESULT grad_train_{name},{us:.1f},"
+          f"loss={tail:.4f};steps={steps};exchange_words={words:.0f}")
+    return tail
+
+st0, raw_fn = raw_step_fn()
+raw_loss = train("raw", st0, raw_fn, comm_words_exact(shapes))
+
+comp = make_dp_compressed_step(api, cfg, run, mesh, plan=plan)
+st0c = init_state(api, cfg, run, jax.random.key(0), world=8,
+                  decisions=plan.decision_tree())
+comp_fn = lambda st, b: (lambda o: (o[0], o[1]["loss"]))(comp(st, b))
+comp_loss = train("compressed", st0c, comp_fn, plan.exchange_words)
+ratio = comm_words_exact(shapes) / plan.exchange_words
+print(f"RESULT grad_train_model,0.0,words_ratio={ratio:.1f}x;"
+      f"loss_gap={comp_loss - raw_loss:+.4f}")
+"""
+
+
 def main():
     out = run_with_devices(_SNIPPET, ndev=8)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            print(line[len("RESULT "):])
+    out = run_with_devices(_TRAIN_SNIPPET, ndev=8)
     for line in out.splitlines():
         if line.startswith("RESULT "):
             print(line[len("RESULT "):])

@@ -173,7 +173,11 @@ class RunConfig:
     remat: bool = True
     # paper technique in training: sketched gradient compression
     grad_compress_rank: int = 0            # 0 = off
-    grad_compress_min_dim: int = 1024
+    grad_compress_min_dim: int = 1024      # legacy heuristic (planner wins)
+    # local GEMM bodies of the compressed exchange (kernels/local.py):
+    # "auto" = pallas on TPU, jnp elsewhere; bitwise-identical on untiled
+    # leaves either way (docs/TRAINING.md "Backends")
+    grad_compress_backend: str = "auto"
     # fault tolerance
     checkpoint_every: int = 50
     checkpoint_dir: str = "/tmp/repro_ckpt"

@@ -360,6 +360,105 @@ def _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt, scale,
 
 
 # ---------------------------------------------------------------------------
+# Dense fused GEMM: acc? + alpha·(A·B) with both operands resident in HBM.
+# The gradient-compression backward pass needs two GEMMs whose right-hand
+# side is DATA-DEPENDENT (P̂ᵀ·M and P̂·Qᵀ) — not a Philox-generated tile, so
+# ``sketch_block`` cannot express them.  What the fused backend still buys
+# is the accumulator aliasing: the error-feedback update
+# ``E' = M − P̂·Q_locᵀ`` is exactly ``gemm_block(P̂, Q_loc, acc=M, alpha=-1)``
+# with M aliased in-place — one HBM round trip instead of the jnp body's
+# materialized delta + read-modify-write (``plan.model.grad_compress_cost``
+# prices the 4·m·n → 2·m·n halving).  Bitwise-when-untiled for free: both
+# backends run one identical ``lax.dot`` on the same f32 operands, scale by
+# the same static alpha, then add the accumulator.
+# ---------------------------------------------------------------------------
+
+def _gemm_jnp(A, B, alpha, precision, acc, out_dtype):
+    out = jnp.matmul(A.astype(jnp.float32), B.astype(jnp.float32),
+                     precision=precision)
+    if alpha != 1.0:
+        out = out * jnp.float32(alpha)
+    if acc is not None:
+        out = acc.astype(jnp.float32) + out
+    return out.astype(out_dtype)
+
+
+def _gemm_body(a_ref, b_ref, o_ref, acc_ref, *, nsteps_k, alpha):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        d = acc_ref[...]
+        if alpha != 1.0:
+            d = d * jnp.float32(alpha)
+        o_ref[...] = d.astype(o_ref.dtype)
+
+
+def _gemm_acc_body(a_ref, b_ref, y_ref, o_ref, acc_ref, *, nsteps_k, alpha):
+    import jax.experimental.pallas as pl
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nsteps_k - 1)
+    def _flush():
+        # same association as the jnp body: acc + (dot · alpha) — the
+        # accumulator enters once at the flush and leaves through the
+        # aliased output, one HBM round trip.
+        d = acc_ref[...]
+        if alpha != 1.0:
+            d = d * jnp.float32(alpha)
+        o_ref[...] = (y_ref[...].astype(jnp.float32) + d).astype(o_ref.dtype)
+
+
+def _gemm_pallas(A, B, alpha, acc, out_dtype, blocks, interpret):
+    import jax.experimental.pallas as pl
+    from repro.core.compat import vmem_scratch
+
+    m, k = A.shape
+    _, n = B.shape
+    bm, bn, bk = blocks or default_local_blocks(m, n, k, interpret)
+    bm, bn, bk = min(bm, _round_up(m, 8)), min(bn, _round_up(n, 8)), \
+        min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    Ap, Bp = _pad2(A, mp, kp), _pad2(B, kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    body = _gemm_acc_body if acc is not None else _gemm_body
+    kernel = functools.partial(body, nsteps_k=kp // bk, alpha=alpha)
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+    operands = [Ap, Bp]
+    aliases = {}
+    if acc is not None:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        operands.append(_pad2(acc.astype(out_dtype), mp, np_))
+        aliases = {2: 0}        # acc operand aliases the output in-place
+    out = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[vmem_scratch((bm, bn), jnp.float32)],
+        input_output_aliases=aliases,
+        interpret=interpret)(*operands)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
 # Row-slab fold: Y += zero-padded dY placed at a traced row offset — the
 # streaming ``update_rows`` accumulation (stream/distributed.py).  The jnp
 # body materializes the zero-padded frame in HBM (write + read of
@@ -513,3 +612,30 @@ def sketch_t_block(B, seed, cols: int, *, row0=0, col0=0,
     interpret = _interpret() if interpret is None else interpret
     return _sketch_t_block_pallas(B, seed, cols, row0, col0, kind, salt,
                                   scale, acc, out_dtype, blocks, interpret)
+
+
+def gemm_block(A, B, *, alpha: float = 1.0, precision=None, acc=None,
+               out_dtype=None, backend: str = "jnp", blocks=None,
+               interpret=None):
+    """``acc? + alpha · (A @ B)`` — dense fused local GEMM.
+
+    The data-dependent sibling of :func:`sketch_block` for bodies whose
+    right operand is NOT a Philox tile — the gradient-compression factors
+    ``P̂ᵀ·M``, ``P̂·Qᵀ`` and the error-feedback update
+    ``E' = gemm_block(P̂, Q_loc, acc=M, alpha=-1)`` (the accumulator is
+    aliased in-place on the pallas backend: one HBM round trip, the
+    2·m·n vs 4·m·n term in ``plan.model.grad_compress_cost``).
+
+    ``alpha`` must be static (baked into the kernel body).  Accumulation
+    is f32 on both backends and the association is fixed as
+    ``acc + (dot · alpha)``, so an untiled contraction (the interpret-mode
+    default block policy) is bitwise-identical across backends — the same
+    single ``lax.dot`` on the same operands.
+    """
+    b = resolve_backend(backend)
+    out_dtype = out_dtype or A.dtype
+    alpha = float(alpha)
+    if b == "jnp":
+        return _gemm_jnp(A, B, alpha, precision, acc, out_dtype)
+    interpret = _interpret() if interpret is None else interpret
+    return _gemm_pallas(A, B, alpha, acc, out_dtype, blocks, interpret)

@@ -2,25 +2,40 @@
 
 The paper's core systems insight — a random dense matrix never needs to be
 communicated because every processor regenerates it from a shared
-counter-based seed — applied to the DP gradient all-reduce (PowerSGD-style
-rank-r compression):
+counter-based seed (§6.3; Theorem 2 regime 1) — applied to the DP gradient
+all-reduce (PowerSGD-style rank-r compression):
 
     per DP worker, per weight matrix G (m x n), every step t:
-        Omega  = Phi(key, step=t, leaf)            # regenerated, zero comm
-        P      = (G + E) @ Omega                   # m x r sketch
-        P_hat  = orthonormalize( psum(P) )         # r x m words moved
-        Q      = (G + E)^T @ P_hat                 # n x r
-        Q_sum  = psum(Q)                           # n x r words moved
-        G_hat  = P_hat @ Q_sum^T / world
-        E'     = G + E - G_hat                     # error feedback
+        Omega  = Phi(key(leaf, t))                 # regenerated, zero comm
+        P      = pmean( (G + E) @ Omega )          # m·r words moved
+        P_hat  = orthonormalize(P)                 # thin QR, local
+        Qᵀ     = pmean( P_hatᵀ @ (G + E) )         # r·n words moved
+        G_hat  = P_hat @ Qᵀ                        # rank-r mean estimate
+        E'     = (G + E) - P_hat @ Q_locᵀ          # error feedback, local
 
 Communication per matrix drops from m·n to r·(m+n) words — the same
 regenerate-don't-communicate arithmetic as the paper's Alg. 1 (§4.2: the
-sketch operand moves, Omega never does — the §6.3 counter-based
-regeneration claim applied to the DP axis).  Error feedback keeps SGD
-convergence (Vogels et al., PowerSGD, NeurIPS'19); the sketch itself is the
-paper's B = A·Omega with A = the gradient, and the r·(m+n) vs m·n saving
-is the Theorem-2 regime-1 argument at the granularity of one all-reduce.
+sketch operand moves, Omega never does), with the sketch itself the
+standard B = A·Omega primitive at A = the gradient.  Error feedback keeps
+SGD convergence (Vogels et al., PowerSGD, NeurIPS'19).
+
+Planner integration: which leaves take the sketched exchange is a *priced*
+decision — ``plan.plan_train_compression`` compares ``grad_allreduce_cost``
+vs ``grad_compress_cost`` per leaf (the crossover is r < m·n/(m+n)) and its
+``decision_tree()`` feeds the ``decisions`` argument here.  The legacy
+``min_dim`` size heuristic remains as a fallback for direct callers.
+
+Kernel integration: the two sketch-side GEMMs run through
+``kernels/local.py`` — ``sketch_block`` generates Omega at global Philox
+coordinates (in VMEM on the pallas backend: the n·r HBM stream never
+exists), and the dense factors go through ``gemm_block``, whose fused
+accumulator expresses the error-feedback update ``E' = M - P_hat·Q_locᵀ``
+as an in-place aliased accumulation (one HBM round trip instead of a
+materialized delta + read-modify-write).  Both backends accumulate in f32
+with a fixed association, so untiled leaves (the interpret-mode default
+block policy) are bitwise-identical across ``backend="jnp"|"pallas"`` —
+the same contract ``tests/test_local_backend.py`` pins for the sketch
+entry points, re-pinned for this path by ``tests/test_grad_compress.py``.
 """
 from __future__ import annotations
 
@@ -29,19 +44,51 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.sketch import omega_tile
+from repro.kernels.local import gemm_block, sketch_block
 
 
-def _leaf_salt(idx: int, step) -> jnp.ndarray:
-    return jnp.uint32(idx * 2654435761 % (1 << 31)) + jnp.uint32(step)
+def _leaf_seed(idx: int, step) -> jnp.ndarray:
+    """Traced (2,) uint32 Philox key pair for (leaf, step).
+
+    The leaf index enters key0 (Knuth-hashed so adjacent leaves land far
+    apart in key space); the traced step enters key1.  Keeping the step in
+    the *key pair* rather than the salt is what lets the pallas kernel
+    consume it: the key pair is a scalar-prefetch operand
+    (``kernels/local.py::_meta``) while the salt is baked statically into
+    the kernel body.  Every worker computes the identical pair from shared
+    state, so Omega costs zero communication (§6.3).
+    """
+    k0 = jnp.uint32((0x5EEDED ^ (idx * 2654435761)) & 0xFFFFFFFF)
+    return jnp.stack([k0, jnp.asarray(step, jnp.uint32)])
 
 
 def _compressible(leaf, min_dim: int) -> bool:
+    """Legacy size heuristic: compress matrix leaves with both folded dims
+    >= ``min_dim``.  Superseded by the planner's priced ``decisions`` map
+    (``plan.plan_train_compression``)."""
     if leaf.ndim < 2:
         return False
     m = math.prod(leaf.shape[:-1])
     n = leaf.shape[-1]
     return m >= min_dim and n >= min_dim
+
+
+def _decision_flags(grads_flat, min_dim, decisions):
+    """Per-leaf compress flags: the planner's decision map when given
+    (its True entries clamped to actual matrix leaves), else the legacy
+    ``min_dim`` heuristic."""
+    if decisions is not None:
+        flags = jax.tree_util.tree_leaves(decisions)
+        if len(flags) != len(grads_flat):
+            raise ValueError(
+                f"decisions has {len(flags)} leaves, grads have "
+                f"{len(grads_flat)} — pass plan_train_compression(...)"
+                f".decision_tree() for these params")
+        return [bool(f) and g.ndim >= 2 for f, g in zip(flags, grads_flat)]
+    if min_dim is None:
+        raise ValueError("need either decisions= (planner map) or "
+                         "min_dim= (legacy heuristic)")
+    return [_compressible(g, min_dim) for g in grads_flat]
 
 
 def _orthonormalize(P):
@@ -51,26 +98,43 @@ def _orthonormalize(P):
 
 
 def compress_and_allreduce(grads, error_fb, *, step, rank: int,
-                           min_dim: int, axis_name: str):
+                           min_dim: int = None, axis_name: str,
+                           decisions=None, backend: str = "jnp",
+                           kind: str = "normal", interpret=None):
     """Inside shard_map over the DP axis: replaces pmean(G) with the
     sketched exchange above.  Returns (mean_grads_approx, new_error_fb).
 
-    Per leaf (PowerSGD, NeurIPS'19, with the paper's regenerated Omega):
-        M      = g + e                      (local grad + error feedback)
-        P      = pmean( M @ Omega )         ->  orth -> P_hat
-        Q_loc  = M^T @ P_hat
-        Q      = pmean( Q_loc )
-        g_hat  = P_hat @ Q^T                (~= mean_i M_i, rank r)
-        e'     = M - P_hat @ Q_loc^T        (local projection residual)
+    Per compressed leaf (PowerSGD, NeurIPS'19, with the paper's
+    regenerated Omega — §6.3 / Theorem 2 regime 1):
 
-    ``error_fb`` matches grads (zeros at step 0); leaves too small to
-    benefit use an exact pmean.
+        M      = g + e                       (local grad + error feedback)
+        P      = pmean( sketch_block(M, key(leaf, step), r) )
+        P_hat  = orth(P)                     (thin QR of the m×r mean)
+        Qᵀ_loc = gemm_block(P_hatᵀ, M)       (r×n local factor)
+        Qᵀ     = pmean( Qᵀ_loc )
+        g_hat  = gemm_block(P_hat, Qᵀ)       (≈ mean_i M_i, rank r)
+        e'     = gemm_block(P_hat, Qᵀ_loc, acc=M, alpha=-1)
+
+    Leaves whose decision is raw use an exact pmean and pass their error
+    buffer through untouched.
+
+    ``decisions`` — per-leaf bool pytree from
+    ``plan.plan_train_compression(...).decision_tree()``; when None the
+    legacy ``min_dim`` size heuristic decides.  ``backend`` selects the
+    local GEMM bodies (``kernels/local.py``; ``"auto"`` resolves to
+    pallas on TPU): identical collectives and r·(m+n) words either way,
+    bitwise-identical results on untiled leaves.  ``step`` may be traced;
+    it enters Omega through the Philox key pair, so a checkpoint-restored
+    run regenerates the exact draws of the original (§6.3 reproducibility
+    — the basis of the bitwise-resume contract in ``checkpoint/``).
     """
     flat, treedef = jax.tree_util.tree_flatten(grads)
     fb_flat = jax.tree_util.tree_leaves(error_fb)
+    flags = _decision_flags(flat, min_dim, decisions)
+    kw = dict(backend=backend, interpret=interpret)
     out, fb_out = [], []
-    for idx, (g, e) in enumerate(zip(flat, fb_flat)):
-        if not _compressible(g, min_dim):
+    for idx, (g, e, compress) in enumerate(zip(flat, fb_flat, flags)):
+        if not compress:
             out.append(jax.lax.pmean(g, axis_name))
             fb_out.append(e)
             continue
@@ -81,14 +145,16 @@ def compress_and_allreduce(grads, error_fb, *, step, rank: int,
         M = g.reshape(m, n).astype(jnp.float32) + e.reshape(m, n)
         # Omega regenerated identically on every worker, keyed by
         # (leaf, step) through the Philox counter: NO communication.
-        om = omega_tile(0x5EEDED, 0, 0, n, r, "normal", jnp.float32,
-                        salt=_leaf_salt(idx, step))
-        P = jax.lax.pmean(M @ om, axis_name)          # r*m words on the wire
+        P = jax.lax.pmean(
+            sketch_block(M, _leaf_seed(idx, step), r, kind=kind, **kw),
+            axis_name)                                # m·r words on the wire
         P_hat = _orthonormalize(P)
-        Q_loc = M.T @ P_hat                           # (n, r)
-        Q = jax.lax.pmean(Q_loc, axis_name)           # r*n words on the wire
-        g_hat = P_hat @ Q.T
-        e_new = M - P_hat @ Q_loc.T
+        Qt_loc = gemm_block(P_hat.T, M, **kw)         # (r, n)
+        Qt = jax.lax.pmean(Qt_loc, axis_name)         # r·n words on the wire
+        g_hat = gemm_block(P_hat, Qt, **kw)
+        # error feedback as a fused accumulation: M enters the kernel as
+        # the aliased accumulator, e' = M - P_hat @ Qt_loc in one round trip
+        e_new = gemm_block(P_hat, Qt_loc, acc=M, alpha=-1.0, **kw)
         out.append(g_hat.reshape(shape).astype(g.dtype))
         fb_out.append(e_new.reshape(shape).astype(e.dtype))
     grads_out = jax.tree_util.tree_unflatten(treedef, out)
@@ -97,14 +163,23 @@ def compress_and_allreduce(grads, error_fb, *, step, rank: int,
 
 
 def comm_words_exact(shapes) -> int:
-    """Words a plain psum of these grads would move (per step, per worker)."""
+    """Words a plain psum of these grads would move (per step, per worker)
+    — the m·n side of the Theorem-2 regime-1 comparison."""
     return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
 
 
-def comm_words_compressed(shapes, rank: int, min_dim: int) -> int:
+def comm_words_compressed(shapes, rank: int, min_dim: int = None,
+                          decisions=None) -> int:
+    """Words the sketched exchange moves: r·(m+n) per compressed leaf
+    (the two factor pmeans; Omega contributes zero — §6.3), full size for
+    raw leaves.  Equals ``plan.TrainCompressionPlan.exchange_words`` when
+    ``decisions`` comes from the same plan; the comm ledger audits this
+    prediction at runtime (``train.dp_compressed_step`` site)."""
+    flat = jax.tree_util.tree_leaves(shapes)
+    flags = _decision_flags(flat, min_dim, decisions)
     total = 0
-    for l in jax.tree_util.tree_leaves(shapes):
-        if _compressible(l, min_dim):
+    for l, compress in zip(flat, flags):
+        if compress:
             m = math.prod(l.shape[:-1])
             n = int(l.shape[-1])
             r = min(rank, m, n)
@@ -114,7 +189,8 @@ def comm_words_compressed(shapes, rank: int, min_dim: int) -> int:
     return total
 
 
-def init_error_fb(params, rank: int, min_dim: int, world: int = 1):
+def init_error_fb(params, rank: int, min_dim: int = None, world: int = 1,
+                  decisions=None):
     """Zero error-feedback buffers (f32) for compressible leaves, scalar
     zeros elsewhere (kept tiny).
 
@@ -122,13 +198,55 @@ def init_error_fb(params, rank: int, min_dim: int, world: int = 1):
     own projection residual; only their mean vanishes).  With ``world > 1``
     leaves get a leading world axis — shard it over the DP mesh axis
     (in_specs/out_specs P(dp_axis)) and strip/re-add the local singleton
-    inside the shard_map body (see ``local_fb``/``stack_fb``)."""
-    def make(l):
+    inside the shard_map body (see ``local_fb``/``stack_fb``).  The
+    checkpoint contract (docs/TRAINING.md): the buffer is saved with its
+    world axis and restored onto a different-width mesh via
+    :func:`reshard_error_fb`.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    flags = _decision_flags(flat, min_dim, decisions)
+
+    def make(l, compress):
         shape = (world,) + tuple(l.shape) if world > 1 else tuple(l.shape)
-        if _compressible(l, min_dim):
+        if compress:
             return jnp.zeros(shape, jnp.float32)
         return jnp.zeros((world,) if world > 1 else (), jnp.float32)
-    return jax.tree_util.tree_map(make, params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(l, f) for l, f in zip(flat, flags)])
+
+
+def reshard_error_fb(fb, world_from: int, world_to: int):
+    """Re-lay an error-feedback tree onto a different DP world size,
+    preserving the per-leaf worker MEAN exactly.
+
+    Why the mean is the right invariant: the exchange only ever sees the
+    error state through collectives that are linear in it —
+    ``P = pmean((G+E_i)·Omega)`` and ``Qᵀ = pmean(P_hatᵀ·(G+E_i))`` both
+    depend on ``{E_i}`` solely via ``mean_i E_i`` (pmean and the GEMMs
+    are linear).  Any redistribution of the residuals with the same mean
+    therefore produces the same P/Qᵀ/g_hat trajectory up to f32 reduction
+    order; preserving per-worker bits is impossible anyway when the
+    worker count (and with it the batch sharding) changes.
+
+    Same width: identity (bits preserved — the bitwise-resume contract).
+    Shrink by an integer factor: adjacent groups are averaged.  Grow by
+    an integer factor: residuals are replicated.  Incommensurate widths:
+    every new worker gets the global mean.
+    """
+    if world_from == world_to:
+        return fb
+
+    def one(x):
+        x = x[None] if world_from == 1 else x
+        if world_from % world_to == 0:
+            g = world_from // world_to
+            x = x.reshape((world_to, g) + x.shape[1:]).mean(axis=1)
+        elif world_to % world_from == 0:
+            x = jnp.repeat(x, world_to // world_from, axis=0)
+        else:
+            x = jnp.broadcast_to(x.mean(axis=0), (world_to,) + x.shape[1:])
+        return x[0] if world_to == 1 else x
+    return jax.tree_util.tree_map(one, fb)
 
 
 def local_fb(fb_stacked):

@@ -16,10 +16,12 @@ a versioned on-disk cache; ``explain`` renders the decision.
 """
 from .model import (  # noqa: F401
     Cost, MachineModel, PRESETS, choose_bucket_edges, device_kind_tag,
-    hbm_roofline_words, probe_machine, ragged_bucket_cost,
+    grad_allreduce_cost, grad_compress_cost, hbm_roofline_words,
+    probe_machine, ragged_bucket_cost,
 )
 from .planner import (  # noqa: F401
-    Candidate, Plan, plan_nystrom, plan_sketch, plan_stream,
+    Candidate, LeafDecision, Plan, TrainCompressionPlan, plan_nystrom,
+    plan_sketch, plan_stream, plan_train_compression,
 )
 from .autotune import (  # noqa: F401
     AutotuneCache, PRESET_ENTRIES, autotune, cache_key,
@@ -27,5 +29,6 @@ from .autotune import (  # noqa: F401
     shape_bucket, sweep_records,
 )
 from .explain import (  # noqa: F401
-    explain, nystrom_crossover_P, regime_sweep, sketch_zero_comm_limit,
+    explain, explain_train_compression, nystrom_crossover_P, regime_sweep,
+    sketch_zero_comm_limit,
 )

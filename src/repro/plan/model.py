@@ -405,6 +405,72 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
 
 
 # ---------------------------------------------------------------------------
+# Variant costs — data-parallel gradient exchange (parallel/grad_compress.py)
+# ---------------------------------------------------------------------------
+
+def grad_allreduce_cost(m: int, n: int, world: int) -> Cost:
+    """Raw data-parallel exchange of one (m, n) gradient leaf: a single
+    all-reduce (``pmean`` over the data axis) moving the full operand.
+
+    Words follow the repo's HLO-audit convention (``roofline/hlo.py``
+    counts an all-reduce at its per-device operand size, the same unit
+    the Theorem 2 bounds and the comm ledger use): ``m·n`` words per
+    processor, ``log2(P)`` latency hops.  ``world <= 1`` is free — a
+    pmean over a singleton axis lowers to no collective at all.
+    """
+    if world <= 1:
+        return Cost(words=0.0, messages=0.0, flops=0.0,
+                    hbm_words=2.0 * m * n)
+    return Cost(words=float(m * n), messages=math.log2(world),
+                flops=float(m * n),            # the reduction adds
+                hbm_words=2.0 * m * n)         # leaf read + reduced write
+
+
+def grad_compress_cost(m: int, n: int, r: int, world: int,
+                       backend: str = "jnp") -> Cost:
+    """Sketched exchange of one (m, n) gradient leaf at rank ``r``
+    (``parallel/grad_compress.py``): the Theorem-2 regime-1 trade applied
+    to the DP all-reduce — Omega is regenerated from the counter-based
+    seed on every worker (zero words, the paper's central claim), so only
+    the two data-dependent factors move:
+
+        P  = pmean((G+E)·Omega)      m·r words
+        Qᵀ = pmean(P̂ᵀ·(G+E))         r·n words
+
+    for ``r·(m+n)`` total vs the raw ``m·n`` — the planner's crossover is
+    ``r < m·n/(m+n)`` (docs/TRAINING.md works it out).  Local work added:
+    four rank-r GEMMs (the two sketch GEMMs above plus the decompression
+    ``P̂·Qᵀ`` and the error-feedback update ``E' = M − P̂·Q_locᵀ``),
+    ``2·m·r²`` for the thin QR of P, and the ``M = G+E`` add.
+
+    ``backend`` prices the local bodies through ``kernels/local.py``: the
+    pallas sketch kernel generates Omega in VMEM (the ``n·r`` HBM stream
+    vanishes) and the fused dense kernel (``gemm_block``) aliases the
+    error-feedback accumulator in-place, halving its ``4·m·n`` jnp
+    read-modify-write to ``2·m·n`` — identical network words either way.
+    """
+    r = min(r, m, n)
+    words = float(r * (m + n)) if world > 1 else 0.0
+    msgs = 2.0 * math.log2(world) if world > 1 else 0.0
+    flops = 8.0 * m * n * r + 2.0 * m * r * r + float(m * n)
+    # M = G+E materialization: read both, write M.
+    hbm = 3.0 * m * n
+    # sketch GEMM M·Omega (hbm_roofline_words: pallas drops the n·r
+    # Omega stream), + QR of the m×r pmean result (round trip).
+    hbm += hbm_roofline_words(m, n, r, backend) + 2.0 * m * r
+    # dense P̂ᵀ·M: both operands resident in HBM on either backend.
+    hbm += m * r + float(m * n) + r * n
+    # decompression P̂·Qᵀ writes the g_hat leaf.
+    hbm += m * r + r * n + float(m * n)
+    # error-feedback update E' = M − P̂·Q_locᵀ: jnp materializes the
+    # delta then read-modify-writes (4·m·n); the fused kernel aliases
+    # the accumulator (2·m·n) — same halving as the streaming W update.
+    acc = (2.0 if backend == "pallas" else 4.0) * m * n
+    hbm += m * r + r * n + acc
+    return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
+
+
+# ---------------------------------------------------------------------------
 # Ragged-ingest bucket planning (padded-lane waste vs dispatch amortization)
 # ---------------------------------------------------------------------------
 

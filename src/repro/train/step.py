@@ -5,10 +5,16 @@ Two variants:
     DP reduction emitted by XLA).  Supports gradient accumulation.
   * ``make_dp_compressed_step`` — pure-DP shard_map path where the gradient
     all-reduce is replaced by the paper's sketched compression
-    (parallel/grad_compress.py).
+    (parallel/grad_compress.py): Theorem 2 regime 1 at the DP axis —
+    Omega is regenerated from the counter-based seed (§6.3, zero words),
+    only the r·(m+n) factor words move.  Per-leaf raw-vs-sketch is the
+    planner's priced decision (plan.plan_train_compression) and every
+    dispatch is audited by the comm ledger.  docs/TRAINING.md is the
+    user-facing guide.
 """
 from __future__ import annotations
 
+import time
 
 import jax
 import jax.numpy as jnp
@@ -26,19 +32,34 @@ from .state import TrainState
 
 
 def init_state(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
-               key) -> TrainState:
+               key, world: int = 1, decisions=None) -> TrainState:
+    """Fresh TrainState; with ``run.grad_compress_rank`` set, zero
+    error-feedback buffers ride along (``parallel/grad_compress.py``).
+
+    ``world`` — DP worker count: error-feedback is PER-WORKER state, so
+    sharded runs get a leading world axis (sharded P(axis) by
+    ``make_dp_compressed_step``).  ``decisions`` — the planner's per-leaf
+    compress map (``plan.plan_train_compression(...).decision_tree()``);
+    None falls back to the ``run.grad_compress_min_dim`` heuristic.
+    """
     params = api.init(key, cfg)
     st = TrainState(params=params, opt=adamw.init(params),
                     step=jnp.zeros((), jnp.int32))
     if run.grad_compress_rank:
         st = st.replace(error_fb=init_error_fb(
-            params, run.grad_compress_rank, run.grad_compress_min_dim))
+            params, run.grad_compress_rank, run.grad_compress_min_dim,
+            world=world, decisions=decisions))
     return st
 
 
 def make_train_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
                     ctx: ShardCtx = NULL_CTX, accum_steps: int = 1):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    The GSPMD baseline: XLA emits the DP gradient all-reduce at the full
+    m·n words per weight matrix — the raw side of the Theorem-2 regime-1
+    comparison ``make_dp_compressed_step`` wins by r·(m+n) < m·n.
+    """
 
     def loss_fn(params, batch):
         return api.loss(params, cfg, batch, ctx=ctx, remat=run.remat)
@@ -79,27 +100,52 @@ def make_train_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
 
 
 def make_dp_compressed_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
-                            mesh, axis: str = "data"):
-    """Pure-DP training with the paper's sketched gradient all-reduce.
+                            mesh, axis: str = "data", plan=None,
+                            backend: str = None):
+    """Pure-DP training with the paper's sketched gradient all-reduce
+    (§6.3 regenerate-don't-communicate at the DP axis; docs/TRAINING.md).
 
     Batch is sharded over ``axis``; params/opt replicated.  Inside the
     shard_map body each worker computes grads on its local shard, then the
     cross-replica reduction is the compressed exchange (Omega regenerated
-    per (leaf, step) — zero communication for the random operand).
+    per (leaf, step) — zero communication for the random operand, r·(m+n)
+    words for the data-dependent factors vs the raw m·n).
+
+    Which leaves compress is the PLANNER's per-leaf priced decision:
+    ``plan`` is a ``plan.TrainCompressionPlan`` (computed lazily from the
+    first state's param shapes when None) whose ``decision_tree()`` the
+    body consumes instead of the blanket ``min_dim`` heuristic.  The
+    resolved plan is exposed as ``step.plan`` (feed it to
+    ``plan.explain_train_compression`` for the per-layer word table).
+
+    The shard_map program is built and jitted ONCE (first call) over the
+    flattened arg leaves; each dispatch is observed in the comm ledger
+    (site ``train.dp_compressed_step``) against the plan's exchange-word
+    prediction — the factor-exchange floor, so drift ≈ 0 certifies the
+    schedule moves exactly the words the planner priced.
     """
+    from repro.kernels.local import resolve_backend
+    from repro.obs import ledger as obs_ledger
+    from repro.obs import trace as obs_trace
     from repro.parallel.grad_compress import local_fb, stack_fb
+    from repro.plan.planner import plan_train_compression
+
+    backend = resolve_backend(
+        backend if backend is not None
+        else getattr(run, "grad_compress_backend", "auto"))
+    cache = {"plan": plan, "fn": None, "argdef": None}
 
     def body(state: TrainState, batch):
         def loss_fn(params):
             return api.loss(params, cfg, batch, ctx=NULL_CTX,
                             remat=run.remat)
         loss, grads = jax.value_and_grad(loss_fn)(state.params)
-        loss = jax.lax.pmean(loss, axis)
+        loss = jax.lax.pmean(loss, axis)              # +1 word (the scalar)
         # error-feedback buffers are PER-WORKER (sharded over the DP axis)
         grads, fb = compress_and_allreduce(
             grads, local_fb(state.error_fb), step=state.step,
-            rank=run.grad_compress_rank,
-            min_dim=run.grad_compress_min_dim, axis_name=axis)
+            rank=run.grad_compress_rank, axis_name=axis,
+            decisions=cache["plan"].decision_tree(), backend=backend)
         grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
         lr = warmup_cosine(state.step, peak_lr=run.learning_rate,
                            warmup_steps=run.warmup_steps,
@@ -111,24 +157,55 @@ def make_dp_compressed_step(api: ModelAPI, cfg: ModelConfig, run: RunConfig,
                                stack_fb(fb))
         return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
-    def step(state, batch):
+    def _build(state, batch):
         fb_spec = jax.tree_util.tree_map(lambda _: P(axis), state.error_fb)
-        in_specs = (
-            TrainState(
-                params=jax.tree_util.tree_map(lambda _: P(), state.params),
-                opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
-                step=P(), error_fb=fb_spec),
-            jax.tree_util.tree_map(lambda _: P(axis), batch),
-        )
-        out_specs = (
-            TrainState(
-                params=jax.tree_util.tree_map(lambda _: P(), state.params),
-                opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
-                step=P(), error_fb=fb_spec),
-            {"loss": P(), "grad_norm": P(), "lr": P()},
-        )
-        fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
-        return fn(state, batch)
+        state_spec = TrainState(
+            params=jax.tree_util.tree_map(lambda _: P(), state.params),
+            opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
+            step=P(), error_fb=fb_spec)
+        in_specs = (state_spec,
+                    jax.tree_util.tree_map(lambda _: P(axis), batch))
+        out_specs = (state_spec,
+                     {"loss": P(), "grad_norm": P(), "lr": P()})
+        mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        _, argdef = jax.tree_util.tree_flatten((state, batch))
 
+        # jit over FLAT leaves: compiled once, and the leaf tuple is what
+        # the ledger can signature/abstractify (pytrees are unhashable)
+        @jax.jit
+        def flat_fn(*leaves):
+            st, b = jax.tree_util.tree_unflatten(argdef, leaves)
+            return mapped(st, b)
+        cache["fn"], cache["argdef"] = flat_fn, argdef
+
+    def step(state, batch):
+        if cache["plan"] is None:
+            cache["plan"] = plan_train_compression(
+                state.params, rank=run.grad_compress_rank,
+                P=mesh.shape[axis], backend=backend)
+        step.plan = cache["plan"]
+        if cache["fn"] is None:
+            _build(state, batch)
+        leaves = jax.tree_util.tree_leaves((state, batch))
+        led = obs_ledger.get_ledger()
+        site = None
+        t0 = time.perf_counter() if led is not None else 0.0
+        if led is not None:
+            # observe BEFORE dispatch (donation-safe); predicted = the
+            # per-leaf exchange words + the loss-scalar pmean, which is
+            # also the factor-exchange floor: Omega is free (Thm 2
+            # regime 1), the factors and the loss must move
+            pred = cache["plan"].exchange_words + 1.0
+            site = led.observe("train.dp_compressed_step", cache["fn"],
+                               tuple(leaves), predicted_words=pred,
+                               lower_bound_words=pred, itemsize=4)
+        with obs_trace.span("train.dp_compressed_step", cat="train",
+                            axis=axis, rank=run.grad_compress_rank):
+            out = cache["fn"](*leaves)
+        if site is not None:
+            site.wall_s += time.perf_counter() - t0
+        return out
+
+    step.plan = plan
     return step

@@ -1,0 +1,300 @@
+"""Planner-priced sketched gradient compression (docs/TRAINING.md).
+
+Pins the PR-8 contracts end to end:
+  * planner decision property — compress iff r_eff·(m+n) < m·n, and the
+    plan's exchange_words equals comm_words_compressed under its own
+    decision tree;
+  * gemm_block and the full compressed exchange are bitwise-identical
+    across backend="jnp"|"pallas" on untiled leaves;
+  * reshard_error_fb preserves the per-leaf worker mean (the only
+    statistic the exchange sees — pmean is linear in the error state);
+  * on 8 fake devices the comm ledger measures EXACTLY the words the
+    planner priced (drift 0, bound_fraction 1);
+  * error_fb checkpoints round-trip: bitwise-identical next step on a
+    same-width mesh, matching trajectory (f32 reduction order) on a
+    narrower one.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from dist_helper import run_distributed
+from repro.core.compat import shard_map
+from repro.parallel.grad_compress import (comm_words_compressed,
+                                          comm_words_exact,
+                                          compress_and_allreduce,
+                                          init_error_fb, local_fb,
+                                          reshard_error_fb, stack_fb)
+from repro.plan import (explain_train_compression, grad_allreduce_cost,
+                        grad_compress_cost, plan_train_compression)
+
+
+# ---------------------------------------------------------------- planner
+
+SHAPE_GRID = [(4, 4), (2, 2), (16, 64), (64, 16), (100, 7), (7, 100),
+              (1024, 512), (32, 16), (3, 3, 64)]
+RANK_GRID = [1, 2, 8, 64]
+
+
+def test_planner_decision_property():
+    """Compress exactly when the sketched exchange moves fewer words:
+    r_eff·(m+n) < m·n with r_eff = min(rank, m, n)."""
+    for shape in SHAPE_GRID:
+        for rank in RANK_GRID:
+            tree = {"w": jax.ShapeDtypeStruct(shape, jnp.float32),
+                    "b": jax.ShapeDtypeStruct((shape[-1],), jnp.float32)}
+            plan = plan_train_compression(tree, rank=rank, P=8)
+            by_name = {d.name: d for d in plan.decisions}
+            m = math.prod(shape[:-1])
+            n = shape[-1]
+            r_eff = min(rank, m, n)
+            want = r_eff * (m + n) < m * n
+            d = by_name["w"]
+            assert d.compress == want, (shape, rank, d)
+            assert d.r_eff == r_eff
+            assert not by_name["b"].compress      # vectors never compress
+            # the plan's word total is the runtime's word count
+            assert plan.exchange_words == comm_words_compressed(
+                tree, rank, decisions=plan.decision_tree())
+            assert plan.raw_words == comm_words_exact(tree)
+            assert plan.exchange_words <= plan.raw_words
+            assert plan.lower_bound_words == plan.exchange_words
+
+
+def test_planner_costs_match_paper_arithmetic():
+    # raw all-reduce: m·n words regardless of rank
+    assert grad_allreduce_cost(1024, 1024, world=8).words == 1024 * 1024
+    # sketched: r·(m+n) — Omega costs zero (Thm 2 regime 1)
+    assert grad_compress_cost(1024, 1024, 8, world=8).words == 8 * 2048
+    # single worker: nothing moves either way
+    assert grad_allreduce_cost(64, 64, world=1).words == 0
+    assert grad_compress_cost(64, 64, 8, world=1).words == 0
+
+
+def test_planner_explain_renders_table():
+    tree = {"emb": jax.ShapeDtypeStruct((256, 64), jnp.float32),
+            "scale": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    plan = plan_train_compression(tree, rank=4, P=8)
+    text = explain_train_compression(plan)
+    assert "emb" in text and "scale" in text
+    assert "sketch" in text and "raw" in text
+    assert "totals:" in text        # savings line present
+
+
+# ---------------------------------------------------------------- kernels
+
+@pytest.mark.parametrize("alpha", [1.0, -1.0, 0.5])
+@pytest.mark.parametrize("use_acc", [False, True])
+def test_gemm_block_backend_parity(alpha, use_acc):
+    """Untiled (single exact tile) pallas interpret == jnp, bitwise."""
+    from repro.kernels.local import gemm_block
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    A = jax.random.normal(k1, (17, 9), jnp.float32)
+    B = jax.random.normal(k2, (9, 5), jnp.float32)
+    acc = jax.random.normal(k3, (17, 5), jnp.float32) if use_acc else None
+    ref = gemm_block(A, B, alpha=alpha, acc=acc, backend="jnp")
+    got = gemm_block(A, B, alpha=alpha, acc=acc, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_compressed_exchange_backend_bitwise():
+    """Full compress_and_allreduce, jnp vs pallas: bitwise-identical
+    mean-gradient estimate AND error feedback on untiled leaves."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    key = jax.random.key(7)
+    ks = jax.random.split(key, 3)
+    grads = {"w": jax.random.normal(ks[0], (17, 9), jnp.float32),
+             "v": jax.random.normal(ks[1], (33, 5), jnp.float32),
+             "b": jax.random.normal(ks[2], (9,), jnp.float32)}
+    fb = init_error_fb(grads, rank=3, min_dim=1)
+    # a non-zero residual so the acc-fused path is exercised
+    fb = jax.tree_util.tree_map(
+        lambda e: e + 0.25 if e.ndim else e, fb)
+
+    def run(backend):
+        def body(g, e):
+            return compress_and_allreduce(
+                g, e, step=jnp.int32(5), rank=3, min_dim=1,
+                axis_name="data", backend=backend)
+        specs = jax.tree_util.tree_map(lambda _: P(), (grads, fb))
+        f = shard_map(body, mesh=mesh, in_specs=specs,
+                      out_specs=specs, check_vma=False)
+        return f(grads, fb)
+
+    g_jnp, e_jnp = run("jnp")
+    g_pl, e_pl = run("pallas")
+    for a, b in zip(jax.tree_util.tree_leaves((g_jnp, e_jnp)),
+                    jax.tree_util.tree_leaves((g_pl, e_pl))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- error_fb
+
+def _mean_over_world(fb):
+    return jax.tree_util.tree_map(lambda x: np.asarray(x).mean(axis=0), fb)
+
+
+@pytest.mark.parametrize("world_to", [4, 2, 8, 16, 3, 1])
+def test_reshard_error_fb_preserves_mean(world_to):
+    key = jax.random.key(3)
+    fb = {"w": jax.random.normal(key, (8, 17, 9), jnp.float32),
+          "b": jnp.arange(8, dtype=jnp.float32)}
+    out = reshard_error_fb(fb, 8, world_to)
+    for name in fb:
+        x = np.asarray(out[name])
+        lead = x.shape[0] if world_to > 1 else None
+        if world_to > 1:
+            assert lead == world_to
+            got = x.mean(axis=0)
+        else:
+            got = x
+        np.testing.assert_allclose(got, _mean_over_world(fb)[name],
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_reshard_error_fb_same_width_is_identity():
+    fb = {"w": jnp.arange(8 * 6, dtype=jnp.float32).reshape(8, 6)}
+    out = reshard_error_fb(fb, 8, 8)
+    assert out["w"] is fb["w"]      # bitwise-resume: untouched object
+
+
+def test_local_stack_fb_roundtrip():
+    fb = {"w": jnp.ones((1, 4, 4)), "s": jnp.zeros((1,))}
+    loc = local_fb(fb)
+    assert loc["w"].shape == (4, 4) and loc["s"].shape == ()
+    back = stack_fb(loc)
+    for k in fb:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(fb[k]))
+
+
+def test_decisions_required_error():
+    g = {"w": jnp.zeros((8, 8))}
+    with pytest.raises(ValueError):
+        comm_words_compressed(g, 4)       # neither decisions nor min_dim
+    with pytest.raises(ValueError):
+        comm_words_compressed(g, 4, decisions={"w": True, "extra": True})
+
+
+# ------------------------------------------------- distributed (8 devices)
+
+_COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import get_api
+from repro.plan import plan_train_compression
+from repro.train.step import init_state, make_dp_compressed_step
+
+cfg = get_config("llama3-8b").reduced(n_layers=2, d_model=32, d_ff=64,
+                                      vocab=64, head_dim=8)
+api = get_api(cfg)
+run = RunConfig(steps=10, grad_compress_rank=4, remat=False)
+shapes = jax.eval_shape(lambda k: api.init(k, cfg), jax.random.key(0))
+data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+"""
+
+
+def test_ledger_audits_planned_words_8dev():
+    """Acceptance criterion: the measured collective bytes of the
+    compressed step equal the plan's exchange words + the loss scalar —
+    drift 0, bound_fraction 1 (the factor-exchange floor is tight)."""
+    out = run_distributed(_COMMON + """
+from repro.obs.ledger import install_ledger
+from repro.parallel.grad_compress import comm_words_compressed, \\
+    comm_words_exact
+
+plan = plan_train_compression(shapes, rank=4, P=8)
+assert plan.n_compressed > 0
+assert plan.n_compressed < len(plan.decisions)   # some leaves stay raw
+assert plan.exchange_words == comm_words_compressed(
+    shapes, 4, decisions=plan.decision_tree())
+assert plan.exchange_words < comm_words_exact(shapes)
+
+state = init_state(api, cfg, run, jax.random.key(0), world=8,
+                   decisions=plan.decision_tree())
+led = install_ledger()
+step = make_dp_compressed_step(api, cfg, run, Mesh(
+    np.asarray(jax.devices()), ("data",)), plan=plan)
+pipe = Pipeline(data)
+for _ in range(2):
+    state, metrics = step(state, next(pipe))
+site = led.site("train.dp_compressed_step")
+assert site.calls == 2, site.calls
+assert site.predicted_words == plan.exchange_words + 1.0
+assert site.drift == 0.0, site.drift
+assert site.bound_fraction == 1.0, site.bound_fraction
+assert float(metrics["loss"]) < 20.0
+print("OK drift", site.drift, "words", site.measured_words_per_call)
+""")
+    assert "OK drift 0.0" in out
+
+
+def test_error_fb_checkpoint_resume_8dev():
+    """Save mid-run, restore (fresh jit, same-width mesh): the next step
+    is BITWISE identical.  Restore onto a 4-worker mesh via
+    reshard_error_fb: same trajectory up to f32 reduction order."""
+    out = run_distributed(_COMMON + """
+import tempfile
+from repro.checkpoint import ckpt
+from repro.parallel.grad_compress import reshard_error_fb
+
+plan = plan_train_compression(shapes, rank=4, P=8)
+decisions = plan.decision_tree()
+state0 = init_state(api, cfg, run, jax.random.key(0), world=8,
+                    decisions=decisions)
+mesh8 = Mesh(np.asarray(jax.devices()), ("data",))
+step8 = make_dp_compressed_step(api, cfg, run, mesh8, plan=plan)
+pipe = Pipeline(data)
+batches = [next(pipe) for _ in range(3)]
+
+state = state0
+for b in batches[:2]:
+    state, _ = step8(state, b)
+d = tempfile.mkdtemp()
+ckpt.save(d, 2, state)
+ref, _ = step8(state, batches[2])            # continue in-process
+
+restored, step_i, _ = ckpt.restore(d, state0)
+assert step_i == 2 and int(restored.step) == 2
+for a, b in zip(jax.tree_util.tree_leaves(restored.error_fb),
+                jax.tree_util.tree_leaves(state.error_fb)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# fresh step fn = fresh jit of the same program: must be bitwise
+step8b = make_dp_compressed_step(api, cfg, run, mesh8, plan=plan)
+got, _ = step8b(restored, batches[2])
+for a, b in zip(jax.tree_util.tree_leaves(ref),
+                jax.tree_util.tree_leaves(got)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK bitwise resume")
+
+# --- restore onto a NARROWER mesh (8 -> 4 workers) -------------------
+mesh4 = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+plan4 = plan_train_compression(shapes, rank=4, P=4)
+assert jax.tree_util.tree_leaves(plan4.decision_tree()) == \\
+    jax.tree_util.tree_leaves(decisions)     # decisions are P-invariant
+fb4 = reshard_error_fb(restored.error_fb, 8, 4)
+state4 = restored.replace(error_fb=fb4)
+step4 = make_dp_compressed_step(api, cfg, run, mesh4, plan=plan4)
+got4, _ = step4(state4, batches[2])
+
+upd = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+          for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                          jax.tree_util.tree_leaves(restored.params)))
+diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+          for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                          jax.tree_util.tree_leaves(got4.params)))
+print("OK cross-mesh update", upd, "diff", diff)
+assert upd > 0                                # the step actually moved
+assert diff <= 0.05 * upd + 1e-7, (diff, upd)
+""")
+    assert "OK bitwise resume" in out
+    assert "OK cross-mesh" in out
