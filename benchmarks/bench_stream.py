@@ -31,6 +31,12 @@ Columns:
                              derived: the traced/untraced ratio — the
                              PR-7 budget is <= 1.02x (tests/test_obs.py
                              enforces it; this row trends it).
+  stream_recovery_s{N}     — time-to-recover after the ingest worker is
+                             killed mid-round at N tenants: WAL replay of
+                             the journaled tail onto a fresh service
+                             through the production recovery path
+                             (bitwise verified — the kill-worker chaos
+                             drill); derived: replayed records + words.
 """
 from __future__ import annotations
 
@@ -108,6 +114,7 @@ def _local():
 
     _ragged_sustained()
     _obs_overhead()
+    _stream_recovery()
 
 
 def _ragged_sustained():
@@ -246,6 +253,24 @@ def _obs_overhead():
     emit("stream_obs_overhead", traced * 1e6,
          f"untraced_us={untraced * 1e6:.1f};"
          f"overhead={traced / untraced:.3f}x")
+
+
+def _stream_recovery():
+    """Time-to-recover after the worker is killed mid-round at 64 tenants:
+    the kill-worker chaos drill (WAL replay onto a fresh service, bitwise
+    verified) through the production recovery path."""
+    from repro.stream import faults
+
+    streams = pick(64, 8)
+    n1, n2, r = pick((256, 128, 8), (64, 32, 4))
+    out = faults.run_chaos_scenario("kill-worker", n1=n1, n2=n2, r=r,
+                                    streams=streams, updates=3,
+                                    verbose=False)
+    assert out["recovered"], out
+    emit(f"stream_recovery_s{streams}", out["recover_s"] * 1e6,
+         f"replayed_records={out['replayed_records']};"
+         f"replayed_words={out['replayed_words']};"
+         f"bitwise={out['bitwise']}")
 
 
 _DIST_SNIPPET = r"""

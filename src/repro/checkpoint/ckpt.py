@@ -1,26 +1,45 @@
-"""Sharded, atomic, mesh-agnostic checkpointing.
+"""Sharded, atomic, crash-consistent, mesh-agnostic checkpointing.
 
 Layout:  <dir>/step_<N>/
             manifest.json      — pytree structure, shapes, dtypes, step
             arrays.npz         — flattened leaves (host-gathered)
 
-Writes are atomic (tmp dir + rename); ``keep`` old checkpoints are GC'd.
+Crash-consistency contract (pinned by tests/test_fault_tolerance.py):
+
+  * Writes are atomic: all files are staged into ``step_<N>.tmp`` (fsynced)
+    and the directory is published with one ``os.replace`` — a reader never
+    observes a half-written ``step_<N>``.
+  * A *torn* checkpoint (a process killed between creating the final dir
+    and completing its contents — possible with older writers, copied
+    trees, or the ``ckpt.pre_commit`` chaos fault) is never loaded:
+    ``latest_step`` only reports steps whose manifest parses and whose
+    ``arrays.npz`` holds every manifest leaf; ``restore`` of an explicit
+    torn step raises :class:`TornCheckpointError`; ``torn_steps`` reports
+    them and ``quarantine_torn`` renames them to ``step_<N>.torn`` so they
+    stop shadowing good steps without destroying forensic evidence.
+
 Checkpoints store LOGICAL arrays (no mesh info), so restore works onto any
-device count / mesh — the elastic-scaling path (launch/elastic.py) re-shards
-on load via device_put.
+device count / mesh — the elastic-scaling path (launch/elastic.py,
+stream/elastic.py) re-shards on load via device_put.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
-import tempfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 _RAW_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+class TornCheckpointError(RuntimeError):
+    """An explicitly requested checkpoint step exists but is torn
+    (incomplete manifest or arrays) and will not be loaded."""
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -44,10 +63,21 @@ def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
 
 def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
          keep: int = 3) -> str:
-    """Atomically write a checkpoint; returns its path."""
+    """Atomically write a checkpoint; returns its path.
+
+    Everything is staged into ``step_<N>.tmp`` and fsynced, then published
+    with one ``os.replace`` — a crash at any point leaves either no
+    ``step_<N>`` or a complete one, never a torn directory.  The
+    ``ckpt.pre_commit`` chaos fault point (stream/faults.py) fires between
+    staging and publish so torn-write recovery is testable end to end.
+    """
+    from repro.stream import faults
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):                 # leftover of a crashed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     try:
         named = _flatten_with_names(tree)
         arrays = {}
@@ -62,12 +92,21 @@ def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
             manifest["leaves"].append(
                 {"name": name, "key": key, "shape": list(arr.shape),
                  "dtype": dtype_name})
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        for fname, writer in (
+                ("arrays.npz", lambda f: np.savez(f, **arrays)),
+                ("manifest.json", lambda f: f.write(json.dumps(manifest)))):
+            mode = "wb" if fname.endswith(".npz") else "w"
+            with open(os.path.join(tmp, fname), mode) as f:
+                writer(f)
+                f.flush()
+                os.fsync(f.fileno())
+        # chaos hook: a handler here tears the STAGED files, so the commit
+        # below publishes a torn step exactly the way a non-atomic writer
+        # (or a partial copy) would have
+        faults.fire("ckpt.pre_commit", tmp=tmp, final=final, step=step)
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -75,11 +114,59 @@ def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
     return final
 
 
+def _step_dirs(directory: str) -> List[Tuple[int, str]]:
+    """(step, dirname) of every committed-looking step dir, sorted."""
+    out = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m:
+            out.append((int(m.group(1)), d))
+    return sorted(out)
+
+
 def _gc(directory: str, keep: int):
-    steps = sorted(d for d in os.listdir(directory)
-                   if d.startswith("step_"))
-    for d in steps[:-keep] if keep > 0 else []:
+    steps = _step_dirs(directory)
+    for _, d in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def is_complete(path: str) -> bool:
+    """True iff the checkpoint dir at ``path`` is loadable: its manifest
+    parses and its ``arrays.npz`` opens and holds every manifest leaf key.
+    (The atomic writer can only publish complete dirs; this guards against
+    torn trees from crashes of older writers, partial copies, or chaos.)"""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as arrays:
+            have = set(arrays.files)
+        return all(e["key"] in have for e in manifest["leaves"])
+    except Exception:                     # missing file, bad zip, bad json
+        return False
+
+
+def torn_steps(directory: str) -> List[int]:
+    """Steps present on disk but NOT loadable (skipped by ``latest_step``,
+    refused by ``restore``) — the report half of the quarantine contract."""
+    if not os.path.isdir(directory):
+        return []
+    return [s for s, d in _step_dirs(directory)
+            if not is_complete(os.path.join(directory, d))]
+
+
+def quarantine_torn(directory: str) -> List[int]:
+    """Rename every torn ``step_<N>`` to ``step_<N>.torn`` (idempotent) so
+    it stops shadowing good steps; returns the quarantined step numbers."""
+    out = []
+    for s in torn_steps(directory):
+        src = os.path.join(directory, f"step_{s:08d}")
+        dst = src + ".torn"
+        if os.path.exists(dst):
+            shutil.rmtree(src, ignore_errors=True)
+        else:
+            os.replace(src, dst)
+        out.append(s)
+    return out
 
 
 def load_extra(directory: str,
@@ -97,11 +184,14 @@ def load_extra(directory: str,
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMPLETE step (torn steps are skipped, not loaded — their
+    numbers are available via :func:`torn_steps`)."""
     if not os.path.isdir(directory):
         return None
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_"))
-    return steps[-1] if steps else None
+    for s, d in reversed(_step_dirs(directory)):
+        if is_complete(os.path.join(directory, d)):
+            return s
+    return None
 
 
 def restore(directory: str, tree_like, step: Optional[int] = None,
@@ -111,10 +201,19 @@ def restore(directory: str, tree_like, step: Optional[int] = None,
     Returns (tree, step, extra).  Works across meshes/device counts —
     arrays are logical; ``shardings`` (a matching pytree of NamedSharding)
     re-places them (elastic restore)."""
-    step = step if step is not None else latest_step(directory)
     if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
+        step = latest_step(directory)       # skips torn steps by contract
+        if step is None:
+            torn = torn_steps(directory)
+            raise FileNotFoundError(
+                f"no loadable checkpoints in {directory}"
+                + (f" (torn steps present: {torn})" if torn else ""))
     path = os.path.join(directory, f"step_{step:08d}")
+    if not is_complete(path):
+        raise TornCheckpointError(
+            f"checkpoint step {step} in {directory} is torn (incomplete "
+            f"manifest/arrays) and will not be loaded; see "
+            f"ckpt.torn_steps / ckpt.quarantine_torn")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     arrays = np.load(os.path.join(path, "arrays.npz"))

@@ -10,6 +10,14 @@ bounded async queue):
 
   PYTHONPATH=src python -m repro.launch.serve --workload sketch \
       --streams 64 --updates 4 --n1 1024 --n2 512 --r 32
+
+Chaos harness (stream/faults.py): inject a named failure scenario into
+the serving stack and verify the recovery contract end to end —
+kill-worker (WAL replay, bitwise), torn-write (checkpoint quarantine),
+shrink-restore (live mesh resize, bitwise finalize), eviction-storm:
+
+  PYTHONPATH=src python -m repro.launch.serve --chaos kill-worker
+  PYTHONPATH=src python -m repro.launch.serve --chaos all
 """
 from __future__ import annotations
 
@@ -104,9 +112,33 @@ def run_sketch(args):
     return st
 
 
+def run_chaos(args):
+    """Run one (or all) chaos scenarios and report the recovery verdicts.
+    Exits non-zero if any scenario failed to recover."""
+    from repro.stream import faults
+
+    names = list(faults.SCENARIOS) if args.chaos == "all" else [args.chaos]
+    results = {}
+    for name in names:
+        print(f"[chaos] scenario {name!r} ...")
+        res = faults.run_chaos_scenario(
+            name, streams=min(args.streams, 8), updates=args.updates)
+        results[name] = res
+        print(f"[chaos] {name}: "
+              f"{'RECOVERED' if res.get('recovered') else 'FAILED'} "
+              f"{ {k: v for k, v in res.items() if k != 'recovered'} }")
+    if not all(r.get("recovered") for r in results.values()):
+        raise SystemExit(1)
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=("lm", "sketch"), default="lm")
+    ap.add_argument("--chaos", metavar="SCENARIO", default=None,
+                    help="run a stream/faults.py chaos scenario instead of "
+                         "a workload: kill-worker | torn-write | "
+                         "shrink-restore | eviction-storm | all")
     # lm
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--requests", type=int, default=6)
@@ -141,7 +173,11 @@ def main():
         from repro import obs
         tracer, ledger, _ = obs.install_observability()
     try:
-        out = run_sketch(args) if args.workload == "sketch" else run_lm(args)
+        if args.chaos is not None:
+            out = run_chaos(args)
+        else:
+            out = (run_sketch(args) if args.workload == "sketch"
+                   else run_lm(args))
     finally:
         if tracing:
             tracer.export_chrome(args.trace_out)

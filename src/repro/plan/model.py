@@ -404,6 +404,102 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
     return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
 
 
+def stream_reshard_words(n1: int, r: int, p: Tuple[int, int, int],
+                         q: Tuple[int, int, int], *, l: int = 0,
+                         n2: int = 0, corange: bool = False) -> float:
+    """Per-processor words of the one-hop elastic reshard
+    (``stream/elastic.py reshard_stream``): re-laying a live accumulator's
+    (Y, W) from grid ``p`` onto grid ``q`` in a single resharding hop.
+
+    Exact per-device min-cut over the shared linear device order, the same
+    construction as :func:`fused_redistribute_words`: each device keeps the
+    overlap between its old and new shards and only receives the rest, so
+    the cost is  max over receiving devices of (new-shard words) -
+    (overlap words).  Layouts follow stream/distributed.py: Y (n1 x r) is
+    P((p1, p2), p3) — device d holds row block d // p3 of p1·p2 and column
+    block d % p3 of p3 — and W (l x n2), present when ``corange``, is
+    P(None, (p2, p3)) — replicated over p1, column block d % (p2·p3).
+
+    When device counts differ (grow / shrink) the device order is
+    prefix-shared (``make_grid_mesh`` takes ``devices[:P]``): the first
+    min(P, Q) devices keep their overlap, fresh devices receive their full
+    shards, and shed devices only send.  Identical effective layouts —
+    e.g. (8,1,1) -> (4,2,1), whose Y row blocks coincide — cost zero: the
+    hop is a relabeling, and the compiled relayout emits no collective.
+
+    This min-cut is the hop's *floor* (the ledger's ``lower_bound_words``
+    for the ``stream.reshard`` site); what a compiled relayout actually
+    moves is :func:`stream_reshard_traffic_words` — XLA round-trips full
+    shards, achieving the floor only where the floor is 0 or full-shard.
+    """
+    p1, p2, p3 = p
+    q1, q2, q3 = q
+    P, Q = p1 * p2 * p3, q1 * q2 * q3
+    pr, pc = n1 / (p1 * p2), r / p3          # old Y shard extents
+    qr, qc = n1 / (q1 * q2), r / q3          # new Y shard extents
+    worst = 0.0
+    for d in range(Q):
+        nrb, ncb = divmod(d, q3)
+        need = qr * qc
+        if d < P:
+            rb, cb = divmod(d, p3)
+            ov_r = max(0.0, min(rb * pr + pr, nrb * qr + qr)
+                       - max(rb * pr, nrb * qr))
+            ov_c = max(0.0, min(cb * pc + pc, ncb * qc + qc)
+                       - max(cb * pc, ncb * qc))
+            need -= ov_r * ov_c
+        if corange:
+            wp, wq = n2 / (p2 * p3), n2 / (q2 * q3)   # W col extents
+            nwb = d % (q2 * q3)
+            w_need = l * wq
+            if d < P:
+                wb = d % (p2 * p3)
+                ov_w = max(0.0, min(wb * wp + wp, nwb * wq + wq)
+                           - max(wb * wp, nwb * wq))
+                w_need -= l * ov_w
+            need += w_need
+        worst = max(worst, need)
+    return worst
+
+
+def stream_reshard_traffic_words(n1: int, r: int, p: Tuple[int, int, int],
+                                 q: Tuple[int, int, int], *, l: int = 0,
+                                 n2: int = 0,
+                                 corange: bool = False) -> float:
+    """Per-processor words the COMPILED one-hop relayout actually moves —
+    the ledger's *predicted* words for the ``stream.reshard`` site, next
+    to the :func:`stream_reshard_words` min-cut floor.
+
+    XLA's SPMD partitioner implements a layout change as shard-sized
+    collective traffic: an all-to-all / collective-permute whose operand
+    is the device's full shard, not the overlap-aware min-cut — each
+    device round-trips its whole new shard.  Two exceptions fall out of
+    the layout maps: when the old and new layouts coincide
+    device-for-device (e.g. Y under (8,1,1) -> (4,2,1): both put row
+    block d on device d), the hop compiles away entirely (the parser's
+    identity-permute rule: zero collective bytes); and an axis that never
+    moves contributes nothing.  Exact — pinned at drift = 0 by
+    tests/test_fault_tolerance.py — for relayouts into/out of the 1-D
+    accumulator grids the stream stack uses ((P,1,1) <-> any); a pair
+    that re-splits BOTH Y axes at once may pay one extra shard hop.
+    """
+    p1, p2, p3 = p
+    q1, q2, q3 = q
+    words = 0.0
+    # Y P((p1,p2), p3): device d -> (row block d // p3, col block d % p3);
+    # the maps coincide iff the block counts do
+    same_y = (p1 * p2 == q1 * q2 and p3 == q3
+              and p1 * p2 * p3 == q1 * q2 * q3)
+    if not same_y:
+        words += n1 / (q1 * q2) * (r / q3)         # full new Y shard
+    if corange:
+        # W P(None, (p2,p3)): device d -> col block d % (p2·p3)
+        same_w = (p2 * p3 == q2 * q3 and p1 * p2 * p3 == q1 * q2 * q3)
+        if not same_w:
+            words += l * n2 / (q2 * q3)            # full new W shard
+    return words
+
+
 # ---------------------------------------------------------------------------
 # Variant costs — data-parallel gradient exchange (parallel/grad_compress.py)
 # ---------------------------------------------------------------------------

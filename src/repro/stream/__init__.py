@@ -12,7 +12,14 @@
                     shape-bucketed ragged ingest (update_ragged) and
                     QoS-classed admission/eviction with transparent restore
   ingest.py       — IngestQueue: bounded async request queue with
-                    backpressure fronting a local-mode service
+                    backpressure, worker-death fail-fast (WorkerDied),
+                    retry/backoff and poison-lane excision
+  wal.py          — WriteAheadLog: crash-safe journal of accepted updates;
+                    replay-after-crash reconstructs (Y, W) bitwise
+  elastic.py      — reshard_stream / drain_reshard_resume: live mesh
+                    resize in one hop, bitwise finalize
+  faults.py       — chaos fault-point registry + driver scenarios
+                    (launch/serve.py --chaos)
 """
 from .state import (  # noqa: F401
     OMEGA_SALT, PSI_SALT, StreamConfig, StreamingSketch,
@@ -26,4 +33,8 @@ from .reconstruct import (  # noqa: F401
     LowRank, one_pass_reconstruct, reconstruction_error,
 )
 from .service import QOS_CLASSES, SketchService  # noqa: F401
-from .ingest import IngestQueue  # noqa: F401
+from .ingest import IngestQueue, WorkerDied  # noqa: F401
+from .wal import WalRecord, WriteAheadLog  # noqa: F401
+from .wal import replay as wal_replay  # noqa: F401
+from .elastic import drain_reshard_resume, reshard_stream  # noqa: F401
+from . import faults  # noqa: F401

@@ -1,0 +1,182 @@
+"""Live mesh resize for streaming sketch state (ISSUE 9, ROADMAP item 5).
+
+Sketch state (Y, W) is a *sum of deterministic per-slab updates* — Tropp
+linearity — so it is mesh-agnostic: re-laying the accumulators onto a
+grown or shrunk (p1, p2, p3) grid is ONE resharding hop with **no
+recompute**, and every update applied after the hop folds into exactly the
+numbers it would have folded into on the original grid (the update
+programs regenerate Omega/Psi from *global* coordinates and the fold is an
+elementwise add whose operands are bit-identical either side of the hop).
+``finalize()`` after a resize is therefore bitwise-identical to the
+never-resized run — pinned by tests/test_fault_tolerance.py across
+8 -> 4 -> 8 mid-stream.
+
+The hop's traffic is priced by ``plan.model.stream_reshard_traffic_words``
+(what the compiled relayout actually moves: full per-device shards, or
+nothing when the layouts coincide — pinned at drift = 0) over the
+``plan.model.stream_reshard_words`` min-cut floor (each device keeps the
+overlap between its old and new shards and only needs the rest), charged
+to the CommLedger site ``stream.reshard``:
+
+  * same device set (relayout, e.g. (8,1,1) -> (4,2,1) or a p3 split):
+    the hop compiles to a jitted identity with ``out_shardings`` — the
+    ledger parses its HLO, so measured bytes sit next to the prediction
+    (drift pinned at 0 for the coinciding-layout pairs, where the
+    partitioner emits no collective at all).
+  * different device count (grow / shrink — the elastic case): the hop is
+    a ``jax.device_put`` across device sets, which XLA does not expose as
+    one parseable executable; the site is analytic (``CommLedger.record``)
+    with the same min-cut prediction.
+
+``reshard_stream`` moves one live :class:`ShardedStreamingSketch`;
+``SketchService.reshard`` (service.py) moves every resident stream of a
+distributed service through the same helpers; ``drain_reshard_resume``
+is the degraded-mode recovery arc — quiesce the ingest queue, reshard the
+service onto the surviving grid, resume — driven on simulated device loss
+by the chaos harness (stream/faults.py) and ``launch/serve.py --chaos``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import DEFAULT_AXES, make_grid_mesh
+from repro.obs import ledger as obs_ledger
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+from . import faults
+from .state import StreamConfig
+
+LEDGER_SITE = "stream.reshard"
+
+
+def _grid_of(mesh, axes) -> Tuple[int, int, int]:
+    return tuple(int(mesh.shape[a]) for a in axes)
+
+
+def _check_divisible(cfg: StreamConfig, grid: Tuple[int, int, int]) -> None:
+    p1, p2, p3 = grid
+    if (cfg.n1 % (p1 * p2) or cfg.n2 % (p2 * p3) or cfg.n2 % p2
+            or cfg.r % p3):        # n1 % (p1*p2): Y is P((p1, p2), p3)
+        raise ValueError(f"stream shape ({cfg.n1},{cfg.n2},r={cfg.r}) "
+                         f"not divisible by grid ({p1},{p2},{p3})")
+
+
+@functools.lru_cache(maxsize=64)
+def _relayout_prog(out_shardings: Tuple):
+    """Jitted identity pinning its outputs to ``out_shardings`` — the
+    compiled one-hop relayout (same device set).  NamedShardings are
+    hashable, so every stream resharding between the same layout pair
+    shares one executable."""
+    return jax.jit(lambda *t: t, out_shardings=out_shardings)
+
+
+def reshard_tree(arrays: Tuple, shardings: Tuple, *,
+                 predicted_words: float, lower_bound_words: float,
+                 itemsize: int,
+                 old_grid: Tuple[int, int, int],
+                 new_grid: Tuple[int, int, int]) -> Tuple:
+    """Move a tuple of live arrays onto ``shardings`` in one hop, charging
+    the ``stream.reshard`` ledger site and tracer span.  Chooses the
+    HLO-measurable jit path when old and new shardings share one device
+    set, ``jax.device_put`` otherwise (grow/shrink)."""
+    m = obs_metrics.get_metrics()
+    m.counter("stream_reshard_total",
+              "live accumulator resharding hops (elastic resize)").inc()
+    led = obs_ledger.get_ledger()
+    old_devs = arrays[0].sharding.mesh.devices.flatten().tolist() \
+        if hasattr(arrays[0].sharding, "mesh") else None
+    new_devs = shardings[0].mesh.devices.flatten().tolist()
+    same_set = old_devs is not None and set(old_devs) == set(new_devs)
+    with obs_trace.span("stream.reshard", cat="stream",
+                        old="x".join(map(str, old_grid)),
+                        new="x".join(map(str, new_grid)),
+                        path="jit" if same_set else "device_put"):
+        if same_set:
+            fn = _relayout_prog(tuple(shardings))
+            if led is not None:
+                led.observe(LEDGER_SITE, fn, tuple(arrays),
+                            predicted_words=predicted_words,
+                            lower_bound_words=lower_bound_words,
+                            itemsize=itemsize)
+            return fn(*arrays)
+        if led is not None:
+            led.record(LEDGER_SITE, predicted_words=predicted_words,
+                       lower_bound_words=lower_bound_words,
+                       itemsize=itemsize)
+        return tuple(jax.device_put(a, s)
+                     for a, s in zip(arrays, shardings))
+
+
+def reshard_words(cfg: StreamConfig, old_grid,
+                  new_grid) -> Tuple[float, float]:
+    """The hop's per-device (schedule words, min-cut floor) for this
+    stream, from the planner (plan/model.py)."""
+    from repro.plan import model as M
+    kw = dict(l=cfg.sketch_l, n2=cfg.n2, corange=cfg.corange)
+    return (M.stream_reshard_traffic_words(cfg.n1, cfg.r, tuple(old_grid),
+                                           tuple(new_grid), **kw),
+            M.stream_reshard_words(cfg.n1, cfg.r, tuple(old_grid),
+                                   tuple(new_grid), **kw))
+
+
+def reshard_stream(sk, new_grid: Tuple[int, int, int], *,
+                   devices: Optional[Sequence] = None):
+    """Re-lay a LIVE :class:`ShardedStreamingSketch` onto ``new_grid``.
+
+    Returns a sketch on the new mesh whose (Y, W) are the SAME accumulated
+    numbers, moved in one resharding hop — no recompute, no replay.
+    Updates keep flowing afterwards; ``finalize()`` is bitwise the
+    never-resized run.  ``devices`` defaults to ``jax.devices()`` (grow
+    re-adopts returned devices, shrink keeps the surviving prefix).
+    """
+    from .distributed import ShardedStreamingSketch, stream_shardings
+
+    new_grid = tuple(int(g) for g in new_grid)
+    cfg, axes = sk.cfg, tuple(sk.axes)
+    old_grid = _grid_of(sk.mesh, axes)
+    _check_divisible(cfg, new_grid)
+    # device-loss simulation hook: arm to fail the hop itself
+    faults.fire("elastic.reshard", old_grid=old_grid, new_grid=new_grid)
+    new_mesh = make_grid_mesh(*new_grid, axis_names=axes, devices=devices)
+    out = ShardedStreamingSketch(cfg, new_mesh, axes=axes,
+                                 backend=sk.backend, blocks=sk.blocks)
+    sh = stream_shardings(cfg, new_mesh, axes)
+    arrays, shardings = (sk.Y,), (sh["Y"],)
+    if cfg.corange:
+        arrays, shardings = (sk.Y, sk.W), (sh["Y"], sh["W"])
+    pred, floor = reshard_words(cfg, old_grid, new_grid)
+    moved = reshard_tree(
+        arrays, shardings, predicted_words=pred, lower_bound_words=floor,
+        itemsize=jnp.dtype(cfg.dtype).itemsize,
+        old_grid=old_grid, new_grid=new_grid)
+    out.Y = moved[0]
+    out.W = moved[1] if cfg.corange else None
+    out.num_updates = sk.num_updates
+    return out
+
+
+def drain_reshard_resume(queue, new_grid: Tuple[int, int, int], *,
+                         devices: Optional[Sequence] = None,
+                         timeout: Optional[float] = None) -> dict:
+    """Degraded-mode recovery arc on simulated device loss:
+
+      1. **drain** — quiesce the ingest queue (every accepted request is
+         applied; in-flight rounds finish on the old mesh),
+      2. **reshard** — move every resident stream of the queue's service
+         onto the surviving ``new_grid`` in one hop each,
+      3. **resume** — the queue keeps accepting; subsequent rounds compile
+         against the new mesh.
+
+    Returns ``{"drained": n_applied, "resharded": n_streams}``.  The queue
+    stays usable throughout — this is a pause, not a restart.
+    """
+    with obs_trace.span("stream.drain_reshard_resume", cat="stream",
+                        new="x".join(map(str, new_grid))):
+        drained = queue.flush(timeout=timeout)
+        resharded = queue.service.reshard(new_grid, devices=devices)
+    return {"drained": drained, "resharded": resharded}

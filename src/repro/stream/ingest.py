@@ -1,13 +1,16 @@
 """Async multi-tenant ingest queue: the request-facing front half of the
-serving story (ROADMAP item 1).
+serving story (ROADMAP item 1), hardened into the fault-tolerance layer
+(ISSUE 9).
 
-``IngestQueue`` sits between request handlers and a local-mode
+``IngestQueue`` sits between request handlers and a
 :class:`~repro.stream.service.SketchService`.  Handlers call
-:meth:`submit` (cheap: validate + enqueue); a single worker thread drains
-the queue in windows, splits each window into rounds with at most one
-update per stream (per-stream FIFO order is preserved — sketch updates
-commute across streams but not within one), and applies every round
-through ONE fused :meth:`SketchService.update_ragged` dispatch.
+:meth:`submit` (cheap: validate + journal + enqueue); a single worker
+thread drains the queue in windows, splits each window into rounds with at
+most one update per stream (per-stream FIFO order is preserved — sketch
+updates commute across streams but not within one), and applies every
+round through ONE fused :meth:`SketchService.update_ragged` dispatch
+(local mode) or per-lane sharded updates (distributed mode, which enables
+the drain -> reshard -> resume arc of ``stream/elastic.py``).
 
 Overlap model (double buffering): JAX dispatch is asynchronous, so while
 the device executes round R's fused update the worker is already draining,
@@ -17,30 +20,56 @@ management.  The queue is BOUNDED: when the device falls behind, ``submit``
 blocks (backpressure) rather than dropping updates, and raises
 ``queue.Full`` only when the caller's timeout expires.
 
-Fault model (pinned by tests/test_service_scale.py):
+Fault model (pinned by tests/test_service_scale.py and
+tests/test_fault_tolerance.py; taxonomy in docs/FAULT_MODEL.md):
 
   * non-finite payloads are rejected at submit time, before anything can
     touch (Y, W);
-  * closing a stream with updates in flight drains them first —
-    ``close_stream`` returns the final state with every accepted update
-    applied;
-  * worker-side failures (e.g. racing an already-closed sid) are recorded
-    per-request and surfaced by ``flush(raise_errors=True)`` / ``stats()``,
-    never silently swallowed — and never abort the rest of the round.
+  * with a :class:`~repro.stream.wal.WriteAheadLog` attached (``wal=``),
+    every accepted submit is journaled (fsynced) before it is enqueued —
+    a crash between accept and apply is recoverable by ``wal.replay``
+    onto a fresh service, BITWISE (update determinism);
+  * an unexpected worker-thread death (a real crash, or the chaos
+    harness's ``WorkerKilled``) fails fast: ``submit`` / ``flush`` /
+    ``close_stream`` raise :class:`WorkerDied` carrying the original
+    traceback instead of blocking forever, and ``shutdown`` stays
+    idempotent;
+  * transient round failures are retried with exponential backoff under a
+    deadline (``ingest_retries_total``); when retries exhaust, the round
+    falls back to per-lane application and only the poison lane is
+    excised from the cohort (``ingest_quarantined_total``) — the other
+    tenants' updates land;
+  * worker-side failures are recorded per-request and surfaced by
+    ``flush(raise_errors=True)`` / ``stats()``, never silently swallowed.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import traceback
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
+from . import faults
 from .state import snap_bucket
+
+
+class WorkerDied(RuntimeError):
+    """The ingest worker thread died unexpectedly.  Raised (fast) by
+    ``submit`` / ``flush`` / ``close_stream`` instead of blocking on a
+    queue nobody will ever drain.  ``traceback_text`` carries the worker's
+    original traceback; it is also appended to ``str(exc)``."""
+
+    def __init__(self, msg: str, traceback_text: str = ""):
+        self.traceback_text = traceback_text
+        if traceback_text:
+            msg = f"{msg}\n--- worker traceback ---\n{traceback_text}"
+        super().__init__(msg)
 
 
 def _percentile(xs: Sequence[float], q: float) -> float:
@@ -57,30 +86,53 @@ def _percentile(xs: Sequence[float], q: float) -> float:
 
 
 class IngestQueue:
-    """Bounded async ingest front-end for a local-mode SketchService.
+    """Bounded async ingest front-end for a SketchService.
 
     Parameters
     ----------
-    service : SketchService (local mode)
-    depth : int — queue capacity; a full queue blocks ``submit`` (backpressure)
+    service : SketchService.  Local mode gets the fused ragged hot path;
+        distributed mode applies lanes through the sharded per-stream
+        update (full-shape additive, ``row0=0`` only).
+    depth : int — queue capacity; a full queue blocks ``submit``
+        (backpressure)
     window : int — max requests fused per drain (one or more rounds)
     bucket_edges : optional ascending bucket tops forwarded to
         ``update_ragged`` (e.g. from ``repro.plan.choose_bucket_edges``)
     validate_payloads : bool — reject non-finite H at submit time
+    wal : optional :class:`~repro.stream.wal.WriteAheadLog` — journal
+        every accepted submit before enqueue (crash-safe ingest); the
+        applied watermark advances as rounds land and the journal is
+        truncated every ``wal_truncate_every`` drained batches
+    max_retries : int — whole-round retries on transient failure before
+        the per-lane poison-excision fallback
+    backoff_base : float — first retry sleeps ``backoff_base`` seconds,
+        doubling per attempt (exponential backoff)
+    retry_deadline : optional float — wall-clock budget (seconds) for one
+        round's retries; when exceeded, remaining retries are forfeited
+        and the fallback runs immediately
     """
 
     def __init__(self, service, depth: int = 256, window: int = 64,
                  bucket_edges: Optional[Sequence[int]] = None,
-                 validate_payloads: bool = True):
-        if service.mesh is not None:
-            raise ValueError("IngestQueue fronts local-mode services only")
+                 validate_payloads: bool = True,
+                 wal=None, max_retries: int = 2,
+                 backoff_base: float = 0.05,
+                 retry_deadline: Optional[float] = None,
+                 wal_truncate_every: int = 16):
         if depth < 1 or window < 1:
             raise ValueError("depth and window must be >= 1")
+        if max_retries < 0 or backoff_base < 0:
+            raise ValueError("max_retries and backoff_base must be >= 0")
         self.service = service
         self.window = int(window)
         self.bucket_edges = (None if bucket_edges is None
                              else tuple(sorted(int(e) for e in bucket_edges)))
         self.validate_payloads = validate_payloads
+        self.wal = wal
+        self.max_retries = int(max_retries)
+        self.backoff_base = float(backoff_base)
+        self.retry_deadline = retry_deadline
+        self.wal_truncate_every = max(1, int(wal_truncate_every))
         # published metrics (process-global registry, repro.obs.metrics)
         m = obs_metrics.get_metrics()
         self._m_depth = m.gauge(
@@ -96,6 +148,13 @@ class IngestQueue:
             "ingest_applied_total", "updates applied to the service")
         self._m_errors = m.counter(
             "ingest_errors_total", "per-request worker-side failures")
+        self._m_retries = m.counter(
+            "ingest_retries_total",
+            "whole-round retries after a transient apply failure")
+        self._m_quarantined = m.counter(
+            "ingest_quarantined_total",
+            "poison lanes excised from their cohort (error recorded, "
+            "round survived)")
         self._m_latency = m.histogram(
             "ingest_drain_latency_seconds",
             "submit -> applied latency through the queue")
@@ -110,25 +169,58 @@ class IngestQueue:
         self._applied = 0
         self._rejected = 0
         self._rounds = 0
+        self._round_index = 0               # monotone, fault-point context
+        self._retries = 0
+        self._quarantined = 0
         self._real_rows = 0
         self._padded_rows = 0
+        self._batches = 0
+        # WAL bookkeeping: resolved-but-not-yet-contiguous seqnos
+        self._wal_done: Set[int] = set()
         self._gate = threading.Event()      # test hook: hold() stalls drain
         self._gate.set()
         self._stop = False
+        self._death: Optional[str] = None   # worker traceback after a crash
+        self._heartbeat = time.monotonic()
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="sketch-ingest")
         self._worker.start()
 
+    # -- failure detection ---------------------------------------------------
+
+    @property
+    def worker_alive(self) -> bool:
+        return self._worker.is_alive()
+
+    def heartbeat_age(self) -> float:
+        """Seconds since the worker last reported progress (liveness
+        signal for external watchdogs; grows unboundedly after a death)."""
+        return time.monotonic() - self._heartbeat
+
+    def _check_worker(self) -> None:
+        """Fail fast when the worker died unexpectedly: nobody will ever
+        drain the queue, so blocking would hang the caller forever."""
+        if self._death is not None or (not self._worker.is_alive()
+                                       and not self._stop):
+            raise WorkerDied("ingest worker thread died unexpectedly "
+                             "(queue will never drain; accepted updates "
+                             "are recoverable from the WAL — see "
+                             "repro.stream.wal.replay)",
+                             self._death or "")
+
     # -- producer side -----------------------------------------------------
 
     def submit(self, sid: int, H, row0: int = 0,
-               timeout: Optional[float] = None) -> None:
-        """Enqueue one row-slab update.  Blocks while the queue is full
+               timeout: Optional[float] = None) -> Optional[int]:
+        """Enqueue one update.  Blocks while the queue is full
         (backpressure); raises ``queue.Full`` only if ``timeout`` expires.
         Non-finite payloads raise ValueError HERE — before the request can
-        ever reach the service's (Y, W) accumulators."""
+        ever reach the service's (Y, W) accumulators.  With a WAL
+        attached, the update is journaled (fsynced — durable) before it is
+        enqueued, and the journal seqno is returned."""
         if self._stop:
             raise RuntimeError("ingest queue is shut down")
+        self._check_worker()
         H = np.asarray(H)
         if self.validate_payloads and not np.all(np.isfinite(
                 H.astype(np.float32, copy=False))):
@@ -146,18 +238,31 @@ class IngestQueue:
         # parent span id captured on the SUBMITTING thread: the worker's
         # apply span re-parents under it across the thread boundary
         parent = obs_trace.current_span_id()
+        seq = None
         try:
-            self._q.put((sid, H, int(row0), time.perf_counter(), parent),
-                        timeout=timeout)
+            if self.wal is not None:
+                # journal-before-enqueue: once submit returns, the update
+                # is durable.  A crash between the fsync here and the
+                # round landing is exactly what wal.replay recovers.
+                seq = self.wal.append(sid, int(row0), H)
+            self._q.put((sid, H, int(row0), time.perf_counter(), parent,
+                         seq), timeout=timeout)
         except queue.Full:
             with self._lock:
                 self._inflight[sid] -= 1
                 self._submitted -= 1
+                if seq is not None:
+                    # journaled but never accepted: resolve the seqno so
+                    # the watermark keeps moving (the caller saw the
+                    # rejection; semantics of a timed-out submit are
+                    # "maybe applied" across a crash, as for any timeout)
+                    self._wal_resolve([seq])
                 self._done.notify_all()
             self._m_backpressure.inc()
             raise
         self._m_submitted.inc()
         self._m_depth.set(self._q.qsize())
+        return seq
 
     # -- worker side -------------------------------------------------------
 
@@ -177,47 +282,113 @@ class IngestQueue:
         return batch
 
     def _run(self) -> None:
-        while True:
-            self._gate.wait()
-            if self._stop and self._q.empty():
-                return
-            batch = self._drain()
-            if not batch:
-                if self._stop:
+        try:
+            while True:
+                self._heartbeat = time.monotonic()
+                self._gate.wait()
+                if self._stop and self._q.empty():
                     return
-                continue
-            # rounds: the i-th request for a given sid lands in round i, so
-            # per-stream FIFO order survives the fusion
-            rounds: List[List[Tuple]] = []
-            seen: Dict[int, int] = {}
-            for req in batch:
-                i = seen.get(req[0], 0)
-                seen[req[0]] = i + 1
-                if i == len(rounds):
-                    rounds.append([])
-                rounds[i].append(req)
-            for rnd in rounds:
-                self._apply(rnd)
+                batch = self._drain()
+                if not batch:
+                    if self._stop:
+                        return
+                    continue
+                # rounds: the i-th request for a given sid lands in round
+                # i, so per-stream FIFO order survives the fusion
+                rounds: List[List[Tuple]] = []
+                seen: Dict[int, int] = {}
+                for req in batch:
+                    i = seen.get(req[0], 0)
+                    seen[req[0]] = i + 1
+                    if i == len(rounds):
+                        rounds.append([])
+                    rounds[i].append(req)
+                for rnd in rounds:
+                    self._apply(rnd)
+                self._batches += 1
+                if (self.wal is not None
+                        and self._batches % self.wal_truncate_every == 0):
+                    self.wal.truncate()
+        except BaseException:   # a real crash (incl. chaos WorkerKilled):
+            # record the corpse's traceback and wake every waiter so
+            # submit/flush/close_stream fail fast instead of hanging
+            self._death = traceback.format_exc()
+            with self._lock:
+                self._done.notify_all()
+
+    def _dispatch(self, items: List[Tuple[int, Any, int]]) -> None:
+        """One round's service dispatch: fused ragged (local mode) or
+        per-lane sharded updates (distributed mode)."""
+        if self.service.mesh is None:
+            self.service.update_ragged(items, bucket_edges=self.bucket_edges)
+        else:
+            for sid, H, _row0 in items:
+                self.service.update(sid, H)
 
     def _apply(self, rnd: List[Tuple]) -> None:
-        items = [(sid, H, row0) for sid, H, row0, _, _ in rnd]
+        items = [(sid, H, row0) for sid, H, row0, _, _, _ in rnd]
         # parent under the earliest submitter's span (cross-thread): the
         # timeline shows which request pulled this fused round in
-        parent = next((p for *_, p in rnd if p is not None), None)
-        try:
-            with obs_trace.span("ingest.apply_round", cat="ingest",
-                                parent=parent, lanes=len(items)):
-                self.service.update_ragged(items,
-                                           bucket_edges=self.bucket_edges)
-            err = None
-        except Exception as e:            # record, don't kill the worker
-            err = e
+        parent = next((p for *_, p, _ in rnd if p is not None), None)
+        self._round_index += 1
+        round_index = self._round_index
+        err = None
+        attempt = 0
+        t_start = time.monotonic()
+        while True:
+            try:
+                # chaos hook: WorkerKilled here simulates the worker dying
+                # mid-round (BaseException — escapes this handler and
+                # kills the thread); a transient exc exercises retry
+                faults.fire("ingest.apply_round", round_index=round_index,
+                            lanes=len(items))
+                with obs_trace.span("ingest.apply_round", cat="ingest",
+                                    parent=parent, lanes=len(items),
+                                    attempt=attempt):
+                    self._dispatch(items)
+                err = None
+                break
+            except Exception as e:        # transient? retry with backoff
+                err = e
+                budget_left = (self.retry_deadline is None
+                               or time.monotonic() - t_start
+                               < self.retry_deadline)
+                if attempt >= self.max_retries or not budget_left:
+                    break
+                attempt += 1
+                with self._lock:
+                    self._retries += 1
+                self._m_retries.inc()
+                time.sleep(self.backoff_base * (2.0 ** (attempt - 1)))
+        lane_err: Dict[int, Exception] = {}
+        if err is not None:
+            # poison excision: the round failed even after retries — fall
+            # back to per-lane application so one bad tenant cannot kill
+            # its cohort.  (update_ragged validates every lane before
+            # mutating any stream, so the failed fused round left no
+            # partial state behind and each lane applies exactly once.)
+            for sid, H, row0 in items:
+                try:
+                    faults.fire("ingest.apply_lane", sid=sid)
+                    with obs_trace.span("ingest.apply_lane", cat="ingest",
+                                        parent=parent, sid=sid):
+                        if self.service.mesh is None:
+                            self.service.update(sid, H, row0=row0)
+                        else:
+                            self.service.update(sid, H)
+                except Exception as e2:
+                    lane_err[sid] = e2
+                    with self._lock:
+                        self._quarantined += 1
+                    self._m_quarantined.inc()
         now = time.perf_counter()
+        resolved: List[int] = []
         with self._lock:
             self._rounds += 1
-            for sid, H, _, t0, _ in rnd:
+            for sid, H, _, t0, _, seq in rnd:
                 self._inflight[sid] -= 1
-                if err is None:
+                failed = err is not None and sid in lane_err
+                if not failed:
                     self._applied += 1
                     self._lat.append(now - t0)
                     self._m_applied.inc()
@@ -227,12 +398,30 @@ class IngestQueue:
                     self._real_rows += k
                     self._padded_rows += max(kb, k) - k
                 else:
-                    self._errors.append((sid, err))
+                    self._errors.append((sid, lane_err[sid]))
                     self._m_errors.inc()
+                if seq is not None:
+                    # a quarantined lane resolves its seqno too: its error
+                    # is recorded and surfaced — replay must not silently
+                    # re-fail it forever
+                    resolved.append(seq)
+            if resolved:
+                self._wal_resolve(resolved)
             if len(self._lat) > 8192:
                 del self._lat[:4096]
             self._done.notify_all()
         self._m_depth.set(self._q.qsize())
+
+    def _wal_resolve(self, seqnos: Sequence[int]) -> None:
+        """Advance the WAL's applied watermark over the contiguous prefix
+        of resolved seqnos (callers hold ``self._lock`` or are
+        single-threaded with respect to it)."""
+        self._wal_done.update(seqnos)
+        w = self.wal.watermark
+        while w + 1 in self._wal_done:
+            w += 1
+            self._wal_done.discard(w)
+        self.wal.mark_applied(w)
 
     # -- control plane -----------------------------------------------------
 
@@ -245,21 +434,27 @@ class IngestQueue:
         self._gate.set()
 
     def flush(self, raise_errors: bool = False,
-              timeout: Optional[float] = None) -> None:
-        """Block until every accepted update has been applied (or failed)."""
+              timeout: Optional[float] = None) -> int:
+        """Block until every accepted update has been applied (or failed).
+        Raises :class:`WorkerDied` (not TimeoutError-after-forever) if the
+        worker crashed.  Returns the lifetime applied count."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._done:
             while any(v for v in self._inflight.values()):
+                self._check_worker()
                 left = (None if deadline is None
                         else max(0.0, deadline - time.monotonic()))
-                if left == 0.0 or not self._done.wait(timeout=left or 1.0):
+                if left == 0.0 or not self._done.wait(
+                        timeout=min(left or 1.0, 1.0)):
                     if deadline is not None and time.monotonic() >= deadline:
                         raise TimeoutError("flush timed out")
+            self._check_worker()
             if raise_errors and self._errors:
                 sid, err = self._errors[0]
                 raise RuntimeError(
                     f"{len(self._errors)} ingest failure(s); first: "
                     f"stream {sid}: {err!r}") from err
+            return self._applied
 
     def close_stream(self, sid: int, timeout: Optional[float] = None):
         """Drain the stream's in-flight updates, then close it on the
@@ -269,9 +464,11 @@ class IngestQueue:
         with self._done:
             self._closed_sids.add(sid)   # no new submits for this sid
             while self._inflight.get(sid, 0) > 0:
+                self._check_worker()
                 left = (None if deadline is None
                         else max(0.0, deadline - time.monotonic()))
-                if left == 0.0 or not self._done.wait(timeout=left or 1.0):
+                if left == 0.0 or not self._done.wait(
+                        timeout=min(left or 1.0, 1.0)):
                     if deadline is not None and time.monotonic() >= deadline:
                         raise TimeoutError(
                             f"close_stream({sid}) timed out draining")
@@ -279,7 +476,8 @@ class IngestQueue:
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; drain what was accepted, then stop the
-        worker.  Idempotent."""
+        worker.  Idempotent — including after a worker crash (joining a
+        corpse is a no-op; the WAL keeps the unapplied tail)."""
         self._stop = True
         self._gate.set()
         if wait and self._worker.is_alive():
@@ -312,6 +510,11 @@ class IngestQueue:
                 "errors": len(self._errors),
                 "inflight": sum(self._inflight.values()),
                 "rounds": self._rounds,
+                "retries": self._retries,
+                "quarantined": self._quarantined,
+                "worker_alive": self._worker.is_alive(),
+                "heartbeat_age_s": self.heartbeat_age(),
+                "wal_depth": 0 if self.wal is None else self.wal.depth,
                 "latency_p50_s": _percentile(lat, 50),
                 "latency_p99_s": _percentile(lat, 99),
                 "real_rows": real,

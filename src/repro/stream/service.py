@@ -676,6 +676,65 @@ class SketchService:
         jax.block_until_ready(leaves)
         return self
 
+    # -- elastic resize ----------------------------------------------------
+
+    def reshard(self, new_grid: Tuple[int, int, int],
+                devices=None) -> int:
+        """Move every RESIDENT stream onto ``new_grid`` in one resharding
+        hop each — the service half of elastic resize (stream/elastic.py).
+
+        Linearity makes this a pure data movement: no recompute, no
+        replay, and every post-hop update folds into bitwise the numbers
+        it would have folded into on the old grid.  Evicted streams are
+        already mesh-agnostic (host / disk copies) and re-land on the new
+        mesh at next touch.  Compiled update executables are mesh-specific
+        and are dropped; the first post-resize update per signature
+        recompiles.  Returns the number of streams moved.
+
+        Callers pausing live ingest should go through
+        ``stream.elastic.drain_reshard_resume`` (drain -> reshard ->
+        resume), which quiesces the IngestQueue first.
+        """
+        if self.mesh is None:
+            raise ValueError("reshard needs a distributed service "
+                             "(mesh=None is single-device)")
+        from repro.core.sketch import make_grid_mesh
+        from . import elastic, faults
+        old_grid = tuple(int(self.mesh.shape[a]) for a in self.axes)
+        new_grid = tuple(int(g) for g in new_grid)
+        faults.fire("elastic.reshard", old_grid=old_grid,
+                    new_grid=new_grid)
+        for st in self._streams.values():
+            elastic._check_divisible(st.cfg, new_grid)
+        for ev in self._evicted.values():
+            elastic._check_divisible(ev.cfg, new_grid)
+        new_mesh = make_grid_mesh(*new_grid, axis_names=self.axes,
+                                  devices=devices)
+        moved = 0
+        with obs_trace.span("service.reshard", cat="service",
+                            old="x".join(map(str, old_grid)),
+                            new="x".join(map(str, new_grid))):
+            self.sync()
+            for st in self._streams.values():
+                self._materialize(st)
+                sh = stream_shardings(st.cfg, new_mesh, self.axes)
+                arrays = (st.Y,) + (() if st.W is None else (st.W,))
+                shards = (sh["Y"],) + (() if st.W is None else (sh["W"],))
+                pred, floor = elastic.reshard_words(st.cfg, old_grid,
+                                                    new_grid)
+                out = elastic.reshard_tree(
+                    arrays, shards, predicted_words=pred,
+                    lower_bound_words=floor,
+                    itemsize=jnp.dtype(st.cfg.dtype).itemsize,
+                    old_grid=old_grid, new_grid=new_grid)
+                st.Y = out[0]
+                st.W = out[1] if st.W is not None else None
+                moved += 1
+        self.mesh = new_mesh
+        self._fns.clear()       # executables were mesh-specific
+        self._audit.clear()
+        return moved
+
     # -- queries -----------------------------------------------------------
 
     def sketch(self, sid: int):

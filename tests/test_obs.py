@@ -606,6 +606,77 @@ def test_ingest_spans_parent_across_threads():
 
 
 # ---------------------------------------------------------------------------
+# recovery observability (ISSUE 9): WAL / replay / reshard / retry signals
+# ---------------------------------------------------------------------------
+
+def test_recovery_metrics_and_spans(tmp_path):
+    """Every fault-tolerance path leaves an audit trail: the WAL depth
+    gauge drains back to 0, replay/reshard/retry count, and the recovery
+    arcs open named spans."""
+    from repro.core.sketch import make_grid_mesh
+    from repro.stream import faults
+    from repro.stream import wal as wal_mod
+    from repro.stream.elastic import drain_reshard_resume
+    from repro.stream.ingest import IngestQueue
+    from repro.stream.service import SketchService
+    from repro.stream.state import StreamConfig
+
+    tracer = obs.install_tracer()
+    cfg = StreamConfig(n1=32, n2=16, r=4, seed=0, corange=False)
+    try:
+        with fresh_metrics() as reg:
+            # journaled ingest: the depth gauge returns to 0 once applied
+            svc = SketchService()
+            sid = svc.open(cfg)
+            wal = wal_mod.WriteAheadLog(str(tmp_path / "ingest.wal"))
+            with IngestQueue(svc, wal=wal) as q:
+                q.submit(sid, np.ones((4, 16), np.float32), 0)
+                q.flush(raise_errors=True)
+            wal.close()
+            assert reg.gauge("stream_wal_depth").value() == 0
+
+            # replay counts each re-applied record
+            svc2 = SketchService()
+            sid2 = svc2.open(cfg)
+            n, _ = wal_mod.replay(wal.path, svc2, sid_map={sid: sid2})
+            assert n == 1
+            assert reg.counter("stream_replays_total").value() == 1
+
+            # a transient round failure counts one retry
+            faults.arm("ingest.apply_round", exc=faults.FaultInjected,
+                       times=1)
+            with IngestQueue(svc, max_retries=1, backoff_base=0.0) as q2:
+                q2.submit(sid, np.ones((4, 16), np.float32), 0)
+                q2.flush(raise_errors=True)
+            faults.clear()
+            assert reg.counter("ingest_retries_total").value() == 1
+
+            # drain -> reshard -> resume counts one hop per stream
+            dsvc = SketchService(mesh=make_grid_mesh(1, 1, 1))
+            dsid = dsvc.open(cfg)
+            with IngestQueue(dsvc) as q3:
+                q3.submit(dsid, np.ones((32, 16), np.float32))
+                out = drain_reshard_resume(q3, (1, 1, 1))
+            assert out["resharded"] == 1
+            assert reg.counter("stream_reshard_total").value() == 1
+
+            text = reg.prometheus_text()
+            for name in ("stream_wal_depth", "stream_replays_total",
+                         "stream_reshard_total", "ingest_retries_total",
+                         "ingest_quarantined_total"):
+                assert name in text, name
+    finally:
+        faults.clear()
+
+    names = {s.name for s in tracer.spans}
+    assert {"stream.wal_replay", "stream.reshard",
+            "stream.drain_reshard_resume"} <= names
+    resh = next(s for s in tracer.spans if s.name == "stream.reshard")
+    assert resh.args["old"] == "1x1x1" and resh.args["new"] == "1x1x1"
+    assert resh.args["path"] == "jit"    # same device set -> measurable
+
+
+# ---------------------------------------------------------------------------
 # overhead budget: tracer + ledger on the jitted ragged-update hot path
 # ---------------------------------------------------------------------------
 
