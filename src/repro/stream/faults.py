@@ -14,6 +14,13 @@ in tests — through named fault points compiled into the hot paths:
   ``ingest.apply_lane``    — fired per lane inside the poison-excision
                              fallback; arm with ``match={"sid": s}`` to
                              poison exactly one tenant.
+  ``ingest.dispatch_lane`` — fired per lane inside the DISTRIBUTED
+                             per-lane dispatch loop, before that lane's
+                             sharded update; arm with ``match={"sid": s}``
+                             to fail a round partway through and exercise
+                             the exactly-once partial-round bookkeeping
+                             (landed lanes must not re-apply on retry or
+                             fallback).
   ``ckpt.pre_commit``      — fired by ``checkpoint.ckpt.save`` between
                              staging the tmp dir and the atomic
                              ``os.replace``; arm with a ``handler`` to

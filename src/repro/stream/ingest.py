@@ -38,7 +38,10 @@ tests/test_fault_tolerance.py; taxonomy in docs/FAULT_MODEL.md):
     deadline (``ingest_retries_total``); when retries exhaust, the round
     falls back to per-lane application and only the poison lane is
     excised from the cohort (``ingest_quarantined_total``) — the other
-    tenants' updates land;
+    tenants' updates land; retries and the fallback touch only the
+    not-yet-applied lanes, so a distributed round that failed partway
+    through its sequential per-lane dispatch never re-applies the lanes
+    that already landed (exactly-once per lane);
   * worker-side failures are recorded per-request and surfaced by
     ``flush(raise_errors=True)`` / ``stats()``, never silently swallowed.
 """
@@ -222,6 +225,17 @@ class IngestQueue:
             raise RuntimeError("ingest queue is shut down")
         self._check_worker()
         H = np.asarray(H)
+        row0 = int(row0)
+        if self.service.mesh is not None and row0 != 0:
+            # distributed streams take full-shape additive updates only:
+            # reject HERE, with service.update's semantics, instead of
+            # silently applying the slab at row 0
+            with self._lock:
+                self._rejected += 1
+            self._m_rejected.inc()
+            raise ValueError(
+                f"stream {sid}: distributed streams take full-shape "
+                f"additive updates only (row0 must be 0, got {row0})")
         if self.validate_payloads and not np.all(np.isfinite(
                 H.astype(np.float32, copy=False))):
             with self._lock:
@@ -244,10 +258,26 @@ class IngestQueue:
                 # journal-before-enqueue: once submit returns, the update
                 # is durable.  A crash between the fsync here and the
                 # round landing is exactly what wal.replay recovers.
-                seq = self.wal.append(sid, int(row0), H)
-            self._q.put((sid, H, int(row0), time.perf_counter(), parent,
-                         seq), timeout=timeout)
-        except queue.Full:
+                seq = self.wal.append(sid, row0, H)
+            item = (sid, H, row0, time.perf_counter(), parent, seq)
+            # bounded put as a loop of short-timeout puts, re-checking
+            # worker liveness between attempts: a worker that dies while
+            # the queue is full can never drain it, and its death cannot
+            # wake a blocked ``queue.Queue.put`` — a single indefinitely
+            # blocking put would hang the producer forever
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while True:
+                self._check_worker()
+                step = (0.05 if deadline is None else
+                        min(0.05, max(0.0, deadline - time.monotonic())))
+                try:
+                    self._q.put(item, timeout=step)
+                    break
+                except queue.Full:
+                    if deadline is not None and time.monotonic() >= deadline:
+                        raise
+        except (queue.Full, WorkerDied) as e:
             with self._lock:
                 self._inflight[sid] -= 1
                 self._submitted -= 1
@@ -258,7 +288,8 @@ class IngestQueue:
                     # "maybe applied" across a crash, as for any timeout)
                     self._wal_resolve([seq])
                 self._done.notify_all()
-            self._m_backpressure.inc()
+            if isinstance(e, queue.Full):
+                self._m_backpressure.inc()
             raise
         self._m_submitted.inc()
         self._m_depth.set(self._q.qsize())
@@ -316,14 +347,29 @@ class IngestQueue:
             with self._lock:
                 self._done.notify_all()
 
-    def _dispatch(self, items: List[Tuple[int, Any, int]]) -> None:
+    def _dispatch(self, pending: List[Tuple[int, Any, int]]) -> None:
         """One round's service dispatch: fused ragged (local mode) or
-        per-lane sharded updates (distributed mode)."""
+        per-lane sharded updates (distributed mode).  ``pending`` is
+        consumed IN PLACE — a lane is removed the moment it has landed —
+        so a mid-dispatch failure leaves exactly the not-yet-applied
+        lanes behind for the retry / poison-excision paths and no lane
+        is ever applied twice.  Local mode is all-or-nothing by
+        construction (``update_ragged`` validates every lane before
+        mutating any stream); distributed mode applies lanes
+        sequentially, so the explicit bookkeeping here is what makes a
+        whole-round retry safe."""
         if self.service.mesh is None:
-            self.service.update_ragged(items, bucket_edges=self.bucket_edges)
+            self.service.update_ragged(list(pending),
+                                       bucket_edges=self.bucket_edges)
+            pending.clear()
         else:
-            for sid, H, _row0 in items:
+            while pending:
+                sid, H, _row0 = pending[0]
+                # chaos hook: fail ONE lane mid-dispatch — exercises the
+                # partial-round bookkeeping above
+                faults.fire("ingest.dispatch_lane", sid=sid)
                 self.service.update(sid, H)
+                pending.pop(0)
 
     def _apply(self, rnd: List[Tuple]) -> None:
         items = [(sid, H, row0) for sid, H, row0, _, _, _ in rnd]
@@ -335,6 +381,7 @@ class IngestQueue:
         err = None
         attempt = 0
         t_start = time.monotonic()
+        pending = list(items)       # lanes not yet applied (exactly-once)
         while True:
             try:
                 # chaos hook: WorkerKilled here simulates the worker dying
@@ -345,7 +392,7 @@ class IngestQueue:
                 with obs_trace.span("ingest.apply_round", cat="ingest",
                                     parent=parent, lanes=len(items),
                                     attempt=attempt):
-                    self._dispatch(items)
+                    self._dispatch(pending)
                 err = None
                 break
             except Exception as e:        # transient? retry with backoff
@@ -364,10 +411,12 @@ class IngestQueue:
         if err is not None:
             # poison excision: the round failed even after retries — fall
             # back to per-lane application so one bad tenant cannot kill
-            # its cohort.  (update_ragged validates every lane before
-            # mutating any stream, so the failed fused round left no
-            # partial state behind and each lane applies exactly once.)
-            for sid, H, row0 in items:
+            # its cohort.  Only the NOT-YET-APPLIED lanes are attempted:
+            # a partially applied distributed round keeps its landed
+            # prefix (removed from ``pending`` by _dispatch), and a
+            # failed local fused round left no partial state behind
+            # (validate-then-mutate), so every lane applies exactly once.
+            for sid, H, row0 in pending:
                 try:
                     faults.fire("ingest.apply_lane", sid=sid)
                     with obs_trace.span("ingest.apply_lane", cat="ingest",

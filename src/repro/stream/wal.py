@@ -127,6 +127,14 @@ class WriteAheadLog:
     ``truncate`` on the ingest worker.  Appends are flushed and fsynced
     before returning — an acknowledged submit is durable by the time the
     caller sees its seqno.
+
+    Reopening an existing journal resumes the seqno sequence past what is
+    durable, but the applied watermark restarts at 0 (the journal does
+    not persist it — every surviving record is pending until proven
+    applied).  Run :func:`replay` on the reopened log before attaching a
+    new ``IngestQueue``: it re-applies the pending records AND advances
+    the watermark past them, so the queue resumes with an accurate depth
+    and ``truncate`` can drop the replayed prefix.
     """
 
     def __init__(self, path: str):
@@ -248,6 +256,19 @@ def replay(source, service, *, sid_map=None,
     (re-opened) service's sids; ``watermark`` skips records already covered
     by the checkpoint the service was restored from.
 
+    A distributed service (``service.mesh`` is not None) takes full-shape
+    additive updates only, so records are applied without a row offset —
+    mirroring what live distributed ingest did — and a record journaled
+    with a nonzero ``row0`` (a local-mode row slab) is refused rather
+    than silently applied at row 0.
+
+    When ``source`` is a :class:`WriteAheadLog`, the applied watermark
+    advances past every record replay handles (applied, or skipped as
+    checkpoint-covered).  A reopened journal restarts its watermark at 0,
+    so without this a queue attached after recovery could never resolve
+    the pre-crash seqnos: the journal and its depth gauge would grow
+    forever.
+
     Because each update is deterministic given ``(seed, row0, H)`` and
     sketch accumulation is an IEEE-754 sum applied in the same per-stream
     order, the replayed (Y, W) is **bitwise** the state of the
@@ -255,12 +276,14 @@ def replay(source, service, *, sid_map=None,
 
     Returns ``(replayed_records, replayed_words)``.
     """
-    if isinstance(source, WriteAheadLog):
-        records: Iterator[WalRecord] = iter(source.pending())
+    wal = source if isinstance(source, WriteAheadLog) else None
+    if wal is not None:
+        records: Iterator[WalRecord] = iter(wal.pending())
     elif isinstance(source, str):
         records = iter(scan(source)[0])
     else:
         records = iter(source)
+    distributed = getattr(service, "mesh", None) is not None
     n = words = 0
     m = obs_metrics.get_metrics()
     replays = m.counter("stream_replays_total",
@@ -268,9 +291,21 @@ def replay(source, service, *, sid_map=None,
     with obs_trace.span("stream.wal_replay", cat="stream"):
         for rec in records:
             if rec.seqno <= watermark:
+                if wal is not None:
+                    wal.mark_applied(rec.seqno)
                 continue
             sid = rec.sid if sid_map is None else sid_map[rec.sid]
-            service.update(sid, rec.H, row0=rec.row0)
+            if distributed:
+                if rec.row0 != 0:
+                    raise ValueError(
+                        f"WAL record seqno={rec.seqno} (stream {rec.sid}) "
+                        f"is a row slab at row0={rec.row0}: distributed "
+                        f"streams take full-shape additive updates only")
+                service.update(sid, rec.H)
+            else:
+                service.update(sid, rec.H, row0=rec.row0)
+            if wal is not None:
+                wal.mark_applied(rec.seqno)
             n += 1
             words += rec.words
             replays.inc()

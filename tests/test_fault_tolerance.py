@@ -20,8 +20,16 @@ Pinned recovery contracts (bitwise where the contract is bitwise):
   * transient-round retry with backoff under a deadline;
   * ``WorkerDied`` fast-fail on submit/flush/close_stream after a worker
     crash (never hang on a queue nobody drains); idempotent shutdown.
+  * distributed rounds are exactly-once per lane: a per-lane dispatch
+    that fails partway through never re-applies its landed prefix on
+    retry or in the poison-excision fallback;
+  * WAL replay onto a distributed service applies records additively
+    (full-shape, no row offset) and refuses local-mode row slabs;
+    replaying a reopened WriteAheadLog advances its applied watermark so
+    a reattached queue can resolve and truncate the recovered prefix.
 """
 import os
+import threading
 import time
 
 import numpy as np
@@ -471,6 +479,214 @@ def test_poison_lane_excised_cohort_survives():
     fsid = fresh.open(cfgs[1])
     np.testing.assert_array_equal(np.asarray(svc.sketch(bad)),
                                   np.asarray(fresh.sketch(fsid)))
+
+
+def test_distributed_partial_round_retry_exactly_once():
+    """A distributed round applies lanes sequentially; when lane k fails
+    mid-round, the retry must re-run ONLY the not-yet-applied suffix —
+    the landed prefix must not double-apply into (Y, W)."""
+    from repro.core.sketch import make_grid_mesh
+
+    rng = np.random.default_rng(6)
+    cfgs = [StreamConfig(n1=32, n2=16, r=4, seed=s, corange=False)
+            for s in range(3)]
+    deltas = [rng.standard_normal((32, 16)).astype("float32")
+              for _ in range(3)]
+
+    ref = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    ref_sids = [ref.open(c) for c in cfgs]
+    for rs, H in zip(ref_sids, deltas):
+        ref.update(rs, H)
+
+    svc = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    sids = [svc.open(c) for c in cfgs]
+    # middle lane fails ONCE: attempt 1 lands lane 0 then dies; the retry
+    # must start at lane 1, not lane 0
+    faults.arm("ingest.dispatch_lane", exc=faults.FaultInjected, times=1,
+               match={"sid": sids[1]})
+    with IngestQueue(svc, max_retries=2, backoff_base=0.0) as q:
+        q.hold()                      # one batch -> one 3-lane round
+        for sid, H in zip(sids, deltas):
+            q.submit(sid, H)
+        q.release()
+        q.flush(raise_errors=True)
+        st = q.stats()
+    assert st["retries"] == 1 and st["quarantined"] == 0
+    assert st["applied"] == 3 and st["errors"] == 0
+    for sid, rs in zip(sids, ref_sids):
+        np.testing.assert_array_equal(np.asarray(svc.sketch(sid)),
+                                      np.asarray(ref.sketch(rs)))
+
+
+def test_distributed_poison_lane_excised_exactly_once():
+    """Retries exhaust on a persistently-poison lane mid-round: the
+    fallback excises only that lane, and the lanes that landed before the
+    first failure are NOT re-applied by the fallback."""
+    from repro.core.sketch import make_grid_mesh
+
+    rng = np.random.default_rng(7)
+    cfgs = [StreamConfig(n1=32, n2=16, r=4, seed=s, corange=False)
+            for s in range(3)]
+    deltas = [rng.standard_normal((32, 16)).astype("float32")
+              for _ in range(3)]
+
+    ref = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    ref_sids = [ref.open(c) for c in cfgs]
+    for rs, H in zip(ref_sids, deltas):
+        ref.update(rs, H)
+
+    svc = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    sids = [svc.open(c) for c in cfgs]
+    bad = sids[1]
+    faults.arm("ingest.dispatch_lane", exc=faults.FaultInjected,
+               times=None, match={"sid": bad})
+    faults.arm("ingest.apply_lane", exc=faults.FaultInjected,
+               times=None, match={"sid": bad})
+    with IngestQueue(svc, max_retries=1, backoff_base=0.0) as q:
+        q.hold()
+        for sid, H in zip(sids, deltas):
+            q.submit(sid, H)
+        q.release()
+        applied = q.flush()
+        st = q.stats()
+    assert applied == 2 and st["quarantined"] == 1 and st["errors"] == 1
+    # healthy lanes land exactly once — bitwise vs the undisturbed run
+    for sid, rs in zip(sids, ref_sids):
+        if sid != bad:
+            np.testing.assert_array_equal(np.asarray(svc.sketch(sid)),
+                                          np.asarray(ref.sketch(rs)))
+    # the poison lane never touched its accumulators
+    fresh = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    fsid = fresh.open(cfgs[1])
+    np.testing.assert_array_equal(np.asarray(svc.sketch(bad)),
+                                  np.asarray(fresh.sketch(fsid)))
+
+
+def test_submit_rejects_row0_on_mesh():
+    """A row-block submit against a distributed service is rejected at
+    submit time with service.update's semantics — never silently applied
+    as an additive delta at row 0."""
+    from repro.core.sketch import make_grid_mesh
+
+    svc = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    sid = svc.open(StreamConfig(n1=32, n2=16, r=4, seed=0, corange=False))
+    with IngestQueue(svc) as q:
+        with pytest.raises(ValueError, match="row0"):
+            q.submit(sid, np.ones((4, 16), np.float32), 3)
+        q.submit(sid, np.ones((32, 16), np.float32))   # row0=0 flows
+        q.flush(raise_errors=True)
+        st = q.stats()
+    assert st["rejected"] == 1 and st["applied"] == 1
+
+
+def test_wal_replay_distributed_additive_and_watermark(tmp_path):
+    """Replay onto a distributed service: records apply as full-shape
+    additive updates (row0 dropped, as live distributed ingest would),
+    bitwise; the reopened journal's watermark advances so the recovered
+    prefix resolves; a journaled local-mode row slab is refused."""
+    from repro.core.sketch import make_grid_mesh
+
+    rng = np.random.default_rng(8)
+    cfg = StreamConfig(n1=32, n2=16, r=4, seed=9, corange=False)
+    deltas = [rng.standard_normal((32, 16)).astype("float32")
+              for _ in range(3)]
+
+    ref = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    rsid = ref.open(cfg)
+    for H in deltas:
+        ref.update(rsid, H)
+
+    path = str(tmp_path / "ingest.wal")
+    with wal_mod.WriteAheadLog(path) as wal:
+        for H in deltas:
+            wal.append(0, 0, H)
+    # crash + reopen: the watermark restarts at 0, every record pending
+    wal2 = wal_mod.WriteAheadLog(path)
+    assert wal2.depth == 3
+    svc = SketchService(mesh=make_grid_mesh(1, 1, 1))
+    sid = svc.open(cfg)
+    nrec, words = wal_mod.replay(wal2, svc, sid_map={0: sid})
+    assert nrec == 3 and words == sum(H.size for H in deltas)
+    assert wal2.watermark == 3 and wal2.depth == 0
+    assert wal2.truncate() == 0       # replayed prefix is droppable
+    np.testing.assert_array_equal(np.asarray(svc.sketch(sid)),
+                                  np.asarray(ref.sketch(rsid)))
+    # a row slab journaled by a LOCAL service cannot be misapplied here
+    wal2.append(0, 5, rng.standard_normal((4, 16)).astype("float32"))
+    with pytest.raises(ValueError, match="row0"):
+        wal_mod.replay(wal2, svc, sid_map={0: sid})
+    wal2.close()
+
+
+def test_wal_reopen_replay_restores_watermark_for_new_queue(tmp_path):
+    """After crash recovery, a NEW IngestQueue attached to the replayed
+    journal must be able to advance the watermark past the pre-crash
+    seqnos: new submits resolve, truncate drops everything, depth
+    returns to 0 (no unbounded journal growth)."""
+    rng = np.random.default_rng(9)
+    cfg = StreamConfig(n1=64, n2=32, r=4, seed=3, corange=False)
+    traffic = _mk_traffic(rng, 1, 4, cfg.n1, cfg.n2)
+    ref_Y = _reference([cfg], traffic)[0]
+
+    path = str(tmp_path / "ingest.wal")
+    with wal_mod.WriteAheadLog(path) as wal:
+        for _, H, row0 in traffic[:3]:      # pre-crash: journaled, unapplied
+            wal.append(0, row0, H)
+
+    wal2 = wal_mod.WriteAheadLog(path)      # recovery: reopen + replay
+    svc = SketchService()
+    sid = svc.open(cfg)
+    nrec, _ = wal_mod.replay(wal2, svc, sid_map={0: sid})
+    assert nrec == 3
+    assert wal2.watermark == 3 and wal2.depth == 0
+    with IngestQueue(svc, wal=wal2, wal_truncate_every=1) as q:
+        _, H, row0 = traffic[3]
+        assert q.submit(sid, H, row0) == 4  # seqnos resume past the prefix
+        q.flush(raise_errors=True)
+    assert wal2.depth == 0                  # watermark caught up
+    assert wal2.truncate() == 0             # journal fully droppable
+    wal2.close()
+    np.testing.assert_array_equal(np.asarray(svc.sketch(sid)), ref_Y)
+
+
+def test_submit_blocked_on_full_queue_fails_fast_on_worker_death():
+    """The fast-fail contract has to hold for a producer ALREADY blocked
+    on a full queue: the worker dying cannot wake queue.Queue.put, so
+    submit must poll liveness between short waits and raise WorkerDied
+    instead of hanging forever."""
+    svc = SketchService()
+    sid = svc.open(StreamConfig(n1=32, n2=16, r=4, seed=0, corange=False))
+    H = np.ones((4, 16), np.float32)
+    entered, block = threading.Event(), threading.Event()
+
+    def killer(**ctx):
+        entered.set()
+        block.wait(timeout=30.0)
+        raise faults.WorkerKilled("chaos: worker dies with the queue full")
+
+    faults.arm("ingest.apply_round", handler=killer, times=None)
+    q = IngestQueue(svc, depth=1)
+    q.submit(sid, H, 0)                  # worker takes it, parks in killer
+    assert entered.wait(30.0)
+    q.submit(sid, H, 0)                  # refills the depth-1 queue
+    result = {}
+
+    def blocked_submit():
+        try:
+            q.submit(sid, H, 0)          # full queue: blocks (backpressure)
+            result["exc"] = None
+        except BaseException as e:
+            result["exc"] = e
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.2)
+    assert t.is_alive()                  # genuinely blocked, not failed
+    block.set()                          # the worker now dies mid-round
+    t.join(30.0)
+    assert not t.is_alive()
+    assert isinstance(result["exc"], WorkerDied)
+    q.shutdown()
 
 
 def test_worker_died_fast_fail_and_idempotent_shutdown():
