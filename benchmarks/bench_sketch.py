@@ -34,6 +34,28 @@ for P in (1, 2, 4, 8):
     print(f"RESULT fig4_scaling_P{P},{us:.1f},"
           f"grid={g.shape};coll_bytes={cb:.0f};thm2_words={W:.0f}")
     assert (cb == 0) == (W == 0), (cb, W)
+
+# PR 10: the O(nnz) sparse family vs the dense Alg.-1 GEMM at 1% density
+# (single device; the distributed sparse bodies are priced-only), with the
+# COO payload the sparse comm model ships instead of dense tiles.
+import numpy as np
+from repro.core.sketch import sketch_sparse_apply
+from repro.plan.model import sparse_payload_words
+
+rng = np.random.default_rng(0)
+nnz = int(0.01 * n1 * n2)
+As = np.zeros((n1, n2), np.float32)
+As.flat[rng.choice(n1 * n2, size=nnz, replace=False)] = 1.0
+As = jnp.asarray(As)
+fs = jax.jit(lambda a: sketch_sparse_apply(a, 7, r, kind="countsketch"))
+jax.block_until_ready(fs(As))
+t0 = time.perf_counter()
+for _ in range(iters):
+    jax.block_until_ready(fs(As))
+us = (time.perf_counter() - t0) / iters * 1e6
+print(f"RESULT sketch_sparse_apply_d1pct,{us:.1f},"
+      f"nnz={nnz};payload_words={sparse_payload_words(nnz):.0f};"
+      f"dense_tile_words={n1 * n2}")
 """
 
 

@@ -113,8 +113,65 @@ def _local():
     emit("stream_recon_error", us, f"rel_err={err:.3e}")
 
     _ragged_sustained()
+    _sparse_ingest()
     _obs_overhead()
     _stream_recovery()
+
+
+def _sparse_ingest():
+    """The PR-10 sparse-family rows: O(nnz) COO slab ingest vs densified
+    row-block updates of the same traffic, and the planner's sparse-vs-
+    dense verdict at the benchmarked density."""
+    import numpy as np
+
+    from repro.core.sketch import omega_tile, sketch_sparse_apply
+    from repro.plan import plan_sketch
+    from repro.stream import SparseRows, StreamConfig, StreamingSketch
+
+    n1, n2, r = pick((2048, 1024, 8), (256, 128, 8))
+    k = pick(256, 64)
+    density = 0.01
+    rng = np.random.default_rng(0)
+    A = np.zeros((n1, n2), np.float32)
+    nnz_total = int(density * n1 * n2)
+    A.flat[rng.choice(n1 * n2, size=nnz_total, replace=False)] = \
+        rng.standard_normal(nnz_total).astype(np.float32)
+
+    for kind in ("countsketch", "rowsample"):
+        cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=7, kind=kind,
+                           corange=False)
+        slabs = [(i, SparseRows.from_dense(A[i:i + k]))
+                 for i in range(0, n1, k)]
+
+        def ingest():
+            st = StreamingSketch(cfg, backend="xla")
+            for row0, sp in slabs:
+                st.update_rows_sparse(row0, sp)
+            return st.Y
+
+        def ingest_dense():
+            st = StreamingSketch(cfg, backend="xla")
+            for i in range(0, n1, k):
+                st.update_rows(i, A[i:i + k])
+            return st.Y
+
+        us = time_us(ingest)
+        us_dense = time_us(ingest_dense)
+        close = bool(np.allclose(np.asarray(ingest()),
+                                 np.asarray(ingest_dense()), atol=1e-4))
+        emit(f"stream_sparse_ingest_{kind}", us / len(slabs),
+             f"nnz_per_s={nnz_total / (us / 1e6):.3g};"
+             f"dense_us_per_upd={us_dense / len(slabs):.1f};"
+             f"match_dense_path={close}")
+
+    # one-shot O(nnz) apply vs the materialized-Omega GEMM
+    us_apply = time_us(lambda: sketch_sparse_apply(A, 7, r,
+                                                   kind="countsketch"))
+    us_gemm = time_us(lambda: A @ omega_tile(7, 0, 0, n2, r, "countsketch"))
+    plan = plan_sketch(n1, n2, r, P=1, nnz=nnz_total)
+    emit("sparse_apply_vs_gemm", us_apply,
+         f"gemm_us={us_gemm:.1f};density={density};"
+         f"planner_pick={plan.variant}")
 
 
 def _ragged_sustained():

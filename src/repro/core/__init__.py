@@ -14,8 +14,11 @@ from .grid import (  # noqa: F401
     two_grid_axis_split, two_grid_shared_mesh,
 )
 from .sketch import (  # noqa: F401
+    DENSE_KINDS, SPARSE_KINDS, VALID_KINDS,
     rand_matmul, rand_matmul_auto, rand_matmul_communicating,
-    sketch_reference, omega_tile, seed_keys, make_grid_mesh,
+    sketch_reference, sketch_sparse_apply, sparse_omega_map,
+    sparse_omega_rows, omega_tile, seed_keys, make_grid_mesh,
+    validate_kind,
 )
 from .nystrom import (  # noqa: F401
     nystrom_reference, nystrom_no_redist, nystrom_redist, nystrom_general,

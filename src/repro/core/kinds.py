@@ -1,0 +1,34 @@
+"""The Omega/Psi kind registry — deliberately jax-free.
+
+``plan/`` consults the registry when scoring sparse-vs-dense candidates,
+and the plan layer imports no jax at module scope (costs are closed-form
+floats); keeping the registry here lets every layer agree on the valid
+kinds without dragging the runtime in.  ``core/sketch.py`` re-exports
+these names, so executable code keeps importing them from there.
+
+Dense kinds draw every entry of Omega i.i.d. (Philox counter grids,
+``core/rng.py``).  Sparse kinds place ONE nonzero per row:
+
+  countsketch — Clarkson-Woodruff: Omega[g, h(g)] = s(g) with h uniform
+                over the r columns and s a random sign, both drawn from
+                the row's Philox counter.
+  rowsample   — coordinated sampling (Daliri-Freire-Li-Musco,
+                arXiv:2501.17836): row g participates iff its uniform
+                draw u_g < p = min(1, r/n); a kept row scatters
+                s(g)/sqrt(p) into column h(g), so E[Omega·Omega^T] = I
+                and every party derives the SAME subset from the seed
+                without communicating it.
+"""
+
+DENSE_KINDS = ("normal", "uniform", "rademacher")
+SPARSE_KINDS = ("countsketch", "rowsample")
+VALID_KINDS = DENSE_KINDS + SPARSE_KINDS
+
+
+def validate_kind(kind: str) -> None:
+    """Eager kind check shared by every public entry point: a typo'd kind
+    fails HERE, with the valid list, not as a shape error three layers
+    down a traced program."""
+    if kind not in VALID_KINDS:
+        raise ValueError(f"unknown omega kind {kind!r}; valid kinds: "
+                         f"{', '.join(VALID_KINDS)}")

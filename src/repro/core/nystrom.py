@@ -54,10 +54,21 @@ from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
 
 from .compat import shard_map
-from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, input_sharding,
-                     make_grid_mesh, omega_tile, rand_matmul, seed_keys)
+from .sketch import (DEFAULT_AXES, _PROG_CACHE_SIZE, SPARSE_KINDS,
+                     input_sharding, make_grid_mesh, omega_tile, rand_matmul,
+                     seed_keys, validate_kind)
 
 X_AXIS = "x"
+
+
+def _check_dense_kind(kind: str) -> None:
+    """Eagerly reject bad/sparse kinds before any tracing or device work."""
+    validate_kind(kind)
+    if kind in SPARSE_KINDS:
+        raise NotImplementedError(
+            f"omega kind {kind!r}: distributed sparse shard_map bodies are "
+            "deferred (ROADMAP item 3); use nystrom_reference, "
+            "sketch_sparse_apply, or the local streaming path")
 
 
 def _fused_audit(n: int, r: int, p, q, backend: str):
@@ -82,6 +93,7 @@ def _fused_audit(n: int, r: int, p, q, backend: str):
 
 def nystrom_reference(A, seed: int, r: int, kind: str = "normal"):
     """(B, C) on one device with the same Philox Omega as distributed runs."""
+    validate_kind(kind)
     n = A.shape[0]
     om = omega_tile(seed, 0, 0, n, r, kind, A.dtype)
     B = A @ om
@@ -170,6 +182,7 @@ def nystrom_second_stage_no_redist(B, seed, r: int, mesh: Mesh,
     ``backend``: local GEMM body (kernels/local.py) — the pallas backend
     keeps Omega_i out of HBM too.
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     Pn = mesh.shape[axis]
     n = B.shape[0]
@@ -217,6 +230,7 @@ def nystrom_second_stage_redist(B, seed, r: int, mesh: Mesh,
     re-layout of B); the product C = Omega^T·B is then entirely local.
     Returns (B column-sharded, C column-sharded).
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     Pn = mesh.shape[axis]
     n = B.shape[0]
@@ -264,6 +278,7 @@ def nystrom_no_redist(A, seed, r: int, mesh: Mesh,
     comm: one Reduce-Scatter of r^2 words (the (1-1/P)·r^2 term).
     backend: local GEMM body for both stages (kernels/local.py).
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     backend = resolve_backend(backend)
     blocks = None if blocks is None else tuple(blocks)
@@ -292,6 +307,7 @@ def nystrom_redist(A, seed, r: int, mesh: Mesh,
     column-shard re-layout), second multiply fully local.
     backend: local GEMM body for both stages (kernels/local.py).
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     backend = resolve_backend(backend)
     blocks = None if blocks is None else tuple(blocks)
@@ -323,6 +339,7 @@ def nystrom_general(A, seed: int, r: int, mesh: Mesh,
     reduce-scatter C over q1.  ``backend`` selects the local GEMM body for
     both stages (kernels/local.py).
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     q_axes = tuple(q_axes or p_axes)
     p_axes = tuple(p_axes)
@@ -418,6 +435,7 @@ def nystrom_second_stage_two_grid(B, seed, r: int, q: Tuple[int, int, int],
     reference (given a bitwise B).  ``backend`` selects the local GEMM
     body (kernels/local.py) — both backends honor the bitwise note.
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     q1, q2, q3 = (int(x) for x in q)
     n = B.shape[0]
@@ -499,6 +517,7 @@ def nystrom_two_grid(A, seed, r: int, mesh: Optional[Mesh] = None,
         raise ValueError("nystrom_two_grid needs explicit p and q grids "
                          "(use nystrom_auto(variant='bound_driven') to pick "
                          "them from the bound)")
+    _check_dense_kind(kind)
     from .grid import alg2_two_grid_executable
     p = tuple(int(x) for x in p)
     q = tuple(int(x) for x in q)
@@ -675,6 +694,7 @@ def nystrom_second_stage_two_grid_fused(B, seed, r: int,
     shared mesh always exists).  Falls back to the cross-mesh path when no
     single device assignment serves both grids.
     """
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     from .grid import two_grid_shared_mesh
     q = tuple(int(x) for x in q)
@@ -741,6 +761,7 @@ def nystrom_two_grid_fused(A, seed, r: int, mesh: Optional[Mesh] = None,
         raise ValueError("nystrom_two_grid_fused needs explicit p and q "
                          "grids (use nystrom_auto(variant='bound_driven') "
                          "to pick them from the bound)")
+    _check_dense_kind(kind)
     from repro.kernels.local import resolve_backend
     from .grid import alg2_two_grid_executable, two_grid_shared_mesh
     p = tuple(int(x) for x in p)
@@ -807,6 +828,7 @@ def nystrom_auto(A, seed: int, r: int, variant: str = "auto", devices=None,
     its backend decision also wins over the ``backend`` arg).
     backend: local GEMM body for every stage (kernels/local.py).
     """
+    _check_dense_kind(kind)
     devices = devices if devices is not None else jax.devices()
     Pn = len(devices)
     n = A.shape[0]

@@ -181,6 +181,100 @@ def philox_normal_grid(key0: jnp.ndarray, key1: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Sparse sketch family draws (CountSketch buckets/signs + coordinated
+# sampling membership).  Same determinism contract as the grids above:
+# pure uint32 Philox on GLOBAL coordinates, zero roundable float ops, so
+# every draw is bitwise invariant to tiling, shard offsets, and fusion
+# context.  Counter-lane budget under one salt: c3 = 0 is the uniform
+# grid, c3 in {1, 2, 3} the Irwin-Hall sub-draws, c3 = 4 the bucket/sign
+# stream, c3 = 5 the sampling-membership stream — the five streams never
+# alias.  Draws are PER ROW (counter (g, 0, salt, c3) with g the global
+# row index), which is what makes a sparse Omega tile-decomposable: any
+# column slice of row g sees the same (bucket, sign, membership).
+# ---------------------------------------------------------------------------
+
+COUNTSKETCH_LANE = 4   # c3 lane of the bucket/sign stream
+ROWSAMPLE_LANE = 5     # c3 lane of the coordinated-membership stream
+
+
+def philox_countsketch_rows(key0: jnp.ndarray, key1: jnp.ndarray,
+                            g, r: int, salt: int = 0):
+    """(bucket, sign) draws for global Omega rows ``g`` (uint32 array or a
+    scalar offset; any shape).
+
+    One Philox invocation per row at counter ``(g, 0, salt, 4)``: bucket
+    is ``r0 mod r`` (uint32 — the ~r/2^32 modulo bias is negligible and
+    deterministic, the same convention scipy's Clarkson-Woodruff transform
+    uses), sign is the low bit of ``r1`` mapped to float32 +-1.  Row g's
+    draw depends only on (key, salt, g) — never on which tile asked.
+    """
+    g = _u32(g)
+    z = jnp.zeros_like(g)
+    r0, r1, r2, r3 = philox_4x32(
+        (g, z, _u32(salt) + z, _u32(COUNTSKETCH_LANE) + z), (key0, key1))
+    del r2, r3
+    bucket = r0 % _u32(r)
+    sign = jnp.where((r1 & 1) == 1, jnp.float32(1.0), jnp.float32(-1.0))
+    return bucket, sign
+
+
+def philox_rowsample_uniform(key0: jnp.ndarray, key1: jnp.ndarray,
+                             g, salt: int = 0) -> jnp.ndarray:
+    """Coordinated membership draw u in [0, 1) for global rows ``g``.
+
+    Counter ``(g, 0, salt, 5)``.  "Coordinated" (Daliri-Freire-Li-Musco,
+    arXiv 2501.17836): u depends only on (key, salt, g), so two parties
+    sketching DIFFERENT matrices under the same seed keep exactly the
+    same row subset ``{g : u_g < p}`` — the property their inner-product
+    estimators need — without exchanging a byte.
+    """
+    g = _u32(g)
+    z = jnp.zeros_like(g)
+    r0, r1, r2, r3 = philox_4x32(
+        (g, z, _u32(salt) + z, _u32(ROWSAMPLE_LANE) + z), (key0, key1))
+    del r1, r2, r3
+    return _uniform_from_u32(r0)
+
+
+def philox_countsketch_grid(key0: jnp.ndarray, key1: jnp.ndarray,
+                            row0, col0, rows: int, cols: int,
+                            r_total: int, salt: int = 0) -> jnp.ndarray:
+    """Materialized (rows, cols) tile of the CountSketch Omega
+    (Clarkson-Woodruff): row g carries a single +-1 at column bucket(g)
+    of the GLOBAL width ``r_total``; this tile sees the part of it that
+    lands in [col0, col0+cols)."""
+    g = _u32(row0) + jax.lax.broadcasted_iota(jnp.uint32, (rows,), 0)
+    bucket, sign = philox_countsketch_rows(key0, key1, g, r_total, salt)
+    gj = _u32(col0) + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    return jnp.where(bucket[:, None] == gj, sign[:, None], jnp.float32(0.0))
+
+
+def philox_rowsample_grid(key0: jnp.ndarray, key1: jnp.ndarray,
+                          row0, col0, rows: int, cols: int,
+                          r_total: int, n_total: int,
+                          salt: int = 0) -> jnp.ndarray:
+    """Materialized (rows, cols) tile of the coordinated row-sampling
+    Omega: row g participates iff its coordinated uniform u_g < p with
+    p = min(1, r_total / n_total) (expected r_total sampled rows out of
+    the global n_total), and a participating row carries
+    sign(g) / sqrt(p) at column bucket(g) — an unbiased sampled
+    CountSketch (E[Omega Omega^T] = I) whose row subset is seed-
+    coordinated across matrices.  p and 1/sqrt(p) are Python-side
+    constants of (r_total, n_total): no traced float op depends on tile
+    shape, so entry bits stay tile/context invariant.
+    """
+    import math
+    p = min(1.0, float(r_total) / float(n_total))
+    scale = np.float32(1.0 / math.sqrt(p))
+    g = _u32(row0) + jax.lax.broadcasted_iota(jnp.uint32, (rows,), 0)
+    bucket, sign = philox_countsketch_rows(key0, key1, g, r_total, salt)
+    u = philox_rowsample_uniform(key0, key1, g, salt)
+    val = jnp.where(u < np.float32(p), sign * scale, jnp.float32(0.0))
+    gj = _u32(col0) + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    return jnp.where(bucket[:, None] == gj, val[:, None], jnp.float32(0.0))
+
+
+# ---------------------------------------------------------------------------
 # JAX-threefry block Omega (used by the distributed shard_map algorithms)
 # ---------------------------------------------------------------------------
 

@@ -33,6 +33,14 @@ from .grid import MatmulGrid, select_matmul_grid
 
 DEFAULT_AXES = ("p1", "p2", "p3")
 
+# The kind registry (DENSE_KINDS dense entry distributions applied by
+# GEMM; SPARSE_KINDS one-nonzero-per-row families applied in O(nnz) by
+# scatter-add) lives in the jax-free core/kinds.py so the plan layer can
+# consult it without importing the runtime; re-exported here because this
+# module is where executable code looks for it.
+from .kinds import (DENSE_KINDS, SPARSE_KINDS,  # noqa: F401,E402
+                    VALID_KINDS, validate_kind)
+
 
 # ---------------------------------------------------------------------------
 # Omega tile generation (shared by local + distributed paths)
@@ -62,13 +70,25 @@ def seed_keys(seed):
 
 
 def omega_tile(seed, row0, col0, rows: int, cols: int,
-               kind: str = "normal", dtype=jnp.float32, salt: int = 0):
+               kind: str = "normal", dtype=jnp.float32, salt: int = 0,
+               r_total: Optional[int] = None,
+               n_total: Optional[int] = None):
     """Tile [row0:row0+rows, col0:col0+cols] of the global Omega.
 
     Entry values depend only on global coordinates + seed, never on the
     tiling, so this is safe to call from any shard with traced offsets.
     ``seed`` may be traced (see :func:`seed_keys`).
+
+    The sparse kinds need the GLOBAL Omega shape, which a tile call does
+    not otherwise carry: ``r_total`` is the global column count (the
+    bucket modulus; defaults to ``cols``, i.e. a full-width tile — pass
+    it explicitly for column sub-tiles) and ``n_total`` the global row
+    count (the ``rowsample`` membership probability r_total/n_total;
+    defaults to ``rows``, i.e. a full-height tile — row-sliced callers
+    like ``stream.state.psi_cols`` pass the stream's n1).  Dense kinds
+    ignore both.
     """
+    validate_kind(kind)
     key0, key1 = seed_keys(seed)
     row0 = jnp.asarray(row0, jnp.uint32)
     col0 = jnp.asarray(col0, jnp.uint32)
@@ -79,14 +99,97 @@ def omega_tile(seed, row0, col0, rows: int, cols: int,
     elif kind == "rademacher":
         u = rng.philox_uniform_grid(key0, key1, row0, col0, rows, cols, salt)
         t = jnp.where(u < 0.5, -1.0, 1.0)
-    else:
-        raise ValueError(f"unknown omega kind {kind!r}")
+    elif kind == "countsketch":
+        t = rng.philox_countsketch_grid(key0, key1, row0, col0, rows, cols,
+                                        r_total if r_total is not None
+                                        else cols, salt)
+    else:  # rowsample
+        t = rng.philox_rowsample_grid(key0, key1, row0, col0, rows, cols,
+                                      r_total if r_total is not None
+                                      else cols,
+                                      n_total if n_total is not None
+                                      else rows, salt)
     return t.astype(dtype)
+
+
+def sparse_omega_map(seed, n_rows: int, width: int, kind: str,
+                     dtype=jnp.float32, salt: int = 0, row0=0,
+                     n_total: Optional[int] = None):
+    """Per-row (bucket, value) arrays defining a sparse Omega row range:
+    ``Omega[row0 + i, bucket[i]] = value[i]`` for i < n_rows (every other
+    entry 0; value 0 means the row was not sampled).  ``width`` is the
+    GLOBAL column count of Omega; ``n_total`` its global row count (the
+    ``rowsample`` membership denominator — defaults to ``n_rows``, i.e. a
+    full-height call; row-sliced callers must pass it); ``row0`` offsets
+    the returned range (may be traced).  This is the O(n) form the
+    scatter-add apply paths consume — materializing the dense tile is
+    :func:`omega_tile`'s job.
+    """
+    validate_kind(kind)
+    if kind not in SPARSE_KINDS:
+        raise ValueError(f"kind {kind!r} is dense; sparse_omega_map serves "
+                         f"{', '.join(SPARSE_KINDS)}")
+    g = (jnp.asarray(row0, jnp.uint32)
+         + jax.lax.broadcasted_iota(jnp.uint32, (n_rows,), 0))
+    return sparse_omega_rows(seed, g, width, kind, dtype, salt,
+                             n_total if n_total is not None else n_rows)
+
+
+def sparse_omega_rows(seed, g, width: int, kind: str, dtype=jnp.float32,
+                      salt: int = 0, n_total: Optional[int] = None):
+    """Gather form of :func:`sparse_omega_map`: (bucket, value) draws at an
+    arbitrary (possibly repeated, possibly traced) array ``g`` of global
+    row indices.  Counter-based, so ``bucket[i]``/``value[i]`` depend only
+    on ``g[i]`` — gathering draws per stored entry of a sparse operand is
+    bitwise-identical to slicing them out of the full map.  ``n_total`` is
+    the global row count of Omega (the rowsample membership denominator;
+    required for ``rowsample``).
+    """
+    validate_kind(kind)
+    if kind not in SPARSE_KINDS:
+        raise ValueError(f"kind {kind!r} is dense; sparse_omega_rows serves "
+                         f"{', '.join(SPARSE_KINDS)}")
+    key0, key1 = seed_keys(seed)
+    g = jnp.asarray(g, jnp.uint32)
+    bucket, sign = rng.philox_countsketch_rows(key0, key1, g, width, salt)
+    if kind == "countsketch":
+        value = sign
+    else:
+        import math
+        if n_total is None:
+            raise ValueError("rowsample draws need n_total (global rows)")
+        p = min(1.0, float(width) / float(n_total))
+        u = rng.philox_rowsample_uniform(key0, key1, g, salt)
+        value = jnp.where(u < np.float32(p),
+                          sign * np.float32(1.0 / math.sqrt(p)),
+                          jnp.float32(0.0))
+    return bucket.astype(jnp.int32), value.astype(dtype)
+
+
+def sketch_sparse_apply(A, seed, r: int, kind: str = "countsketch",
+                        salt: int = 0):
+    """B = A @ Omega for a sparse-structured Omega, WITHOUT materializing
+    it: one scatter-add per stored entry of A (O(nnz) work — the
+    Clarkson-Woodruff property; 2 flops per entry instead of the dense
+    GEMM's 2·r).  Bitwise-equal to ``A @ omega_tile(...)`` up to
+    summation order (the draws themselves are bitwise; the accumulation
+    order differs from a GEMM's), pinned to tolerance by
+    tests/test_sparse.py.
+    """
+    validate_kind(kind)
+    if kind not in SPARSE_KINDS:
+        raise ValueError(f"kind {kind!r} is dense; use sketch_reference "
+                         f"or rand_matmul")
+    n2 = A.shape[-1]
+    bucket, value = sparse_omega_map(seed, n2, r, kind, A.dtype, salt)
+    out = jnp.zeros((*A.shape[:-1], r), A.dtype)
+    return out.at[..., bucket].add(A * value)
 
 
 def sketch_reference(A, seed, r: int, kind: str = "normal",
                      scale: Optional[float] = None):
     """Single-device oracle: B = A @ Omega with the full Omega materialized."""
+    validate_kind(kind)
     n2 = A.shape[-1]
     om = omega_tile(seed, 0, 0, n2, r, kind, A.dtype)
     if scale is not None:
@@ -156,6 +259,12 @@ def rand_matmul(A, seed, r: int, mesh: Mesh,
     Philox graph.)
     """
     from repro.kernels.local import resolve_backend
+    validate_kind(kind)
+    if kind in SPARSE_KINDS:
+        raise NotImplementedError(
+            f"kind {kind!r}: distributed sparse shard_map bodies are "
+            f"deferred (ROADMAP item 3) — use sketch_sparse_apply / the "
+            f"local streaming paths, or a dense kind here")
     ax1, ax2, ax3 = axes
     p1, p2, p3 = (mesh.shape[a] for a in axes)
     n1, n2 = A.shape
@@ -242,6 +351,7 @@ def rand_matmul_auto(A, seed: int, r: int, P_procs: Optional[int] = None,
     """
     from .grid import alg1_bandwidth_words, alg1_latency_hops
     from .lower_bounds import matmul_regime
+    validate_kind(kind)
     devices = devices if devices is not None else jax.devices()
     P_procs = P_procs or len(devices)
     n1, n2 = A.shape

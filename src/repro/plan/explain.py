@@ -70,6 +70,11 @@ def explain(plan: Plan) -> str:
         lines.append("          fused local body: Omega/Psi blocks "
                      "generated in VMEM, never stored in HBM "
                      "(kernels/local.py)")
+    if plan.variant in ("local_sparse", "alg1_sparse", "stream_sparse"):
+        lines.append(f"          sparse family ({plan.kind}): O(nnz) "
+                     "scatter ingest; payload shipped as COO "
+                     "(indices+values) = 2*nnz words, not dense tiles "
+                     "(plan.model.sparse_payload_words)")
     lines.append(f"          predicted {_fmt(plan.predicted_words)} words/proc"
                  f" (gap over bound {_fmt(plan.bound_gap_words)}, "
                  f"ratio {_fmt(plan.bound_ratio)})")

@@ -404,6 +404,105 @@ def stream_update_cost(k: int, n2: int, r: int, l: int,
     return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
 
 
+#: Flop-rate penalty of scalar scatter-adds relative to the dense GEMM's
+#: vectorized FMAs (no tensor cores, gather/scatter addressing, bank
+#: conflicts).  One knob, deliberately pessimistic: the planner should
+#: pick sparse only when the O(nnz) arithmetic saving is decisive, not on
+#: a coin flip the hardware would lose.
+SPARSE_SCATTER_PENALTY = 8.0
+
+
+def sparse_payload_words(nnz: int) -> float:
+    """Wire/storage words of a COO payload: one index + one value per
+    stored entry — what a sparse row slab costs to ship instead of its
+    dense (k, n2) frame (see docs/COMMUNICATION_MODEL.md)."""
+    return 2.0 * float(nnz)
+
+
+def _sparse_participation(n2: int, r: int, kind: str) -> float:
+    """Fraction of input columns a sparse Omega actually touches:
+    CountSketch hits every row of Omega; coordinated row sampling keeps a
+    row with probability r/n2 (seed-coordinated, so every party agrees on
+    the subset without communicating it)."""
+    return min(1.0, r / max(n2, 1)) if kind == "rowsample" else 1.0
+
+
+def sparse_sketch_cost(n1: int, n2: int, r: int, nnz: float,
+                       grid: Tuple[int, int, int] = (1, 1, 1),
+                       kind: str = "countsketch") -> Cost:
+    """B = A·Omega with a SPARSE Omega family (CountSketch / coordinated
+    row sampling) on a stored-sparse A with ``nnz`` nonzeros.
+
+    Arithmetic is O(nnz): each stored entry contributes one scatter-add
+    into its bucket column (times ``SPARSE_SCATTER_PENALTY`` against the
+    dense GEMM's vectorized flop rate).  Communication replaces the dense
+    A-panel All-Gather of Alg. 1 with a COO panel — (indices + values) =
+    ``2·nnz_eff/(p1·p2)`` words over the p3 axis, where ``nnz_eff`` drops
+    to ``nnz·r/n2`` for rowsample because senders filter by the
+    seed-coordinated membership before shipping.  The Reduce-Scatter of
+    the B partial over p2 is the dense Alg.-1 term unchanged: B is dense
+    whatever Omega was.
+    """
+    p1, p2, p3 = grid
+    P = p1 * p2 * p3
+    nnz_eff = float(nnz) * _sparse_participation(n2, r, kind)
+    words = 0.0
+    msgs = 0.0
+    if p3 > 1:
+        words += (1.0 - 1.0 / p3) * sparse_payload_words(nnz_eff) / (p1 * p2)
+        msgs += math.log2(p3)
+    if p2 > 1:
+        words += (1.0 - 1.0 / p2) * n1 * r / (p1 * p3)
+        msgs += math.log2(p2)
+    flops = 2.0 * nnz_eff * SPARSE_SCATTER_PENALTY / P
+    # read the COO panel; one accumulator read-modify-write per scatter
+    # (random buckets — no cache reuse, unlike the GEMM's streaming
+    # access); write the (dense) B shard.  The sparse Omega itself is
+    # generated from counters — never materialized, zero HBM words.
+    hbm = (sparse_payload_words(nnz_eff) + 2.0 * nnz_eff + n1 * r) / P
+    return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
+
+
+def sparse_stream_update_cost(k: int, n2: int, r: int, l: int, nnz: float,
+                              grid: Tuple[int, int, int] = (1, 1, 1),
+                              corange: bool = True,
+                              kind: str = "countsketch") -> Cost:
+    """One ``update_rows_sparse`` step folding a (k, n2) COO slab with
+    ``nnz`` stored entries (``stream/state.py:_local_sparse_update``).
+
+    Local grid: zero network words — the interesting number is the
+    *payload* (priced by :func:`sparse_payload_words` at the service
+    ledger site) and the O(nnz) fold.  Sharded grids ship the COO panel
+    over p3 instead of the dense slab — same substitution as
+    :func:`sparse_sketch_cost`; the dY All-Reduce over p2 is dense.
+
+    A sparse KIND folds one scatter-add per entry into Y (and one into W
+    when corange); a dense kind gathers an r-row of the regenerated Omega
+    per entry (nnz·r flops) and an l-row of Psi likewise.
+    """
+    p1, p2, p3 = grid
+    nnz_eff = float(nnz) * _sparse_participation(n2, r, kind)
+    sparse_om = kind in ("countsketch", "rowsample")
+    words = 0.0
+    msgs = 0.0
+    if p3 > 1:
+        words += (1.0 - 1.0 / p3) * sparse_payload_words(nnz_eff) / p2
+        msgs += math.log2(p3)
+    if p2 > 1:
+        words += 2.0 * (1.0 - 1.0 / p2) * k * r / p3   # all-reduce of dY
+        msgs += 2.0 * math.log2(p2)
+    per_entry = 1.0 if sparse_om else float(r)
+    flops = 2.0 * nnz_eff * per_entry * SPARSE_SCATTER_PENALTY / (p2 * p3)
+    # COO read + one dY read-modify-write per scatter + the Y fold
+    hbm = ((sparse_payload_words(nnz_eff) + 2.0 * nnz_eff) / (p2 * p3)
+           + 4.0 * k * r / p3)
+    if corange:
+        flops += (2.0 * nnz_eff * (1.0 if sparse_om else float(l))
+                  * SPARSE_SCATTER_PENALTY / (p2 * p3))
+        hbm += (2.0 * nnz_eff + 2.0 * l * n2) / (p2 * p3)
+    return Cost(words=words, messages=msgs, flops=flops, hbm_words=hbm)
+
+
 def stream_reshard_words(n1: int, r: int, p: Tuple[int, int, int],
                          q: Tuple[int, int, int], *, l: int = 0,
                          n2: int = 0, corange: bool = False) -> float:
@@ -471,32 +570,51 @@ def stream_reshard_traffic_words(n1: int, r: int, p: Tuple[int, int, int],
     to the :func:`stream_reshard_words` min-cut floor.
 
     XLA's SPMD partitioner implements a layout change as shard-sized
-    collective traffic: an all-to-all / collective-permute whose operand
-    is the device's full shard, not the overlap-aware min-cut — each
-    device round-trips its whole new shard.  Two exceptions fall out of
-    the layout maps: when the old and new layouts coincide
-    device-for-device (e.g. Y under (8,1,1) -> (4,2,1): both put row
-    block d on device d), the hop compiles away entirely (the parser's
-    identity-permute rule: zero collective bytes); and an axis that never
-    moves contributes nothing.  Exact — pinned at drift = 0 by
-    tests/test_fault_tolerance.py — for relayouts into/out of the 1-D
-    accumulator grids the stream stack uses ((P,1,1) <-> any); a pair
-    that re-splits BOTH Y axes at once may pay one extra shard hop.
+    collective traffic — full shards, not the overlap-aware min-cut — and
+    the exact count follows from which axes re-split (calibrated against
+    the compiled HLO of every 8-device grid pair, exhaustively pinned by
+    tests/test_fault_tolerance.py):
+
+    * **Y** (n1 x r, P((p1,p2), p3); device d -> row block d // p3, col
+      block d % p3).  Maps coincide (block counts equal, same device
+      count) -> the hop compiles away: 0 words.  Re-splitting an
+      already-split column axis (p3 > 1 AND q3 > 1 AND p3 != q3) forces
+      TWO full-shard hops — an all-to-all re-splitting the rows plus a
+      collective-permute re-routing the columns — so the device pays 2x
+      its new shard.  Every other layout change folds into a single
+      all-to-all: 1x the new shard.
+    * **W** (l x n2, P(None, (p2,p3)); device d -> col block d % (p2·p3),
+      replicated over the rest).  Same block count -> 0.  Splitting OUT
+      of replicated (p2·p3 == 1) onto the same or fewer devices is a
+      local slice of the replica: 0 words (a grown device set still
+      ships the new shard to each fresh device).  COARSENING the split
+      (q2·q3 < p2·p3) is all-gather traffic counted at its per-device
+      operand — the OLD shard: l·n2/(p2·p3) words into replicated, twice
+      that (gather + permute hop) when the coarser layout is still split.
+      Re-splitting FINER moves 1x the new W shard.
     """
     p1, p2, p3 = p
     q1, q2, q3 = q
+    P, Q = p1 * p2 * p3, q1 * q2 * q3
     words = 0.0
-    # Y P((p1,p2), p3): device d -> (row block d // p3, col block d % p3);
-    # the maps coincide iff the block counts do
-    same_y = (p1 * p2 == q1 * q2 and p3 == q3
-              and p1 * p2 * p3 == q1 * q2 * q3)
+    # Y P((p1,p2), p3): the maps coincide iff the block counts do
+    same_y = (p1 * p2 == q1 * q2 and p3 == q3 and P == Q)
     if not same_y:
-        words += n1 / (q1 * q2) * (r / q3)         # full new Y shard
+        hops = 2.0 if (p3 > 1 and q3 > 1 and p3 != q3) else 1.0
+        words += hops * n1 / (q1 * q2) * (r / q3)  # full new Y shard(s)
     if corange:
         # W P(None, (p2,p3)): device d -> col block d % (p2·p3)
-        same_w = (p2 * p3 == q2 * q3 and p1 * p2 * p3 == q1 * q2 * q3)
-        if not same_w:
-            words += l * n2 / (q2 * q3)            # full new W shard
+        bp, bq = p2 * p3, q2 * q3
+        if bp == bq and P == Q:
+            pass                                   # same map: no traffic
+        elif bp == 1 and Q <= P:
+            pass                                   # slice out of replica
+        elif bq < bp:
+            # all-gather counted at its operand (the OLD shard); a
+            # coarser-but-still-split target adds a permute hop
+            words += (2.0 if bq > 1 else 1.0) * l * n2 / bp
+        else:
+            words += l * n2 / bq                   # full new W shard
     return words
 
 

@@ -44,6 +44,7 @@ from repro.core.lower_bounds import (
     nystrom_lower_bound,
     nystrom_regime,
 )
+from repro.core.kinds import SPARSE_KINDS
 
 from . import model as M
 
@@ -200,6 +201,9 @@ class Plan:
         if self.variant == "local_xla":
             from repro.core.sketch import sketch_reference
             return sketch_reference(A, seed, r, kind=self.kind)
+        if self.variant == "local_sparse":
+            from repro.core.sketch import sketch_sparse_apply
+            return sketch_sparse_apply(A, seed, r, kind=self.kind)
         if self.variant == "pallas_fused":
             from repro.kernels.ops import sketch_matmul
             interpret = jax.default_backend() != "tpu"
@@ -250,6 +254,13 @@ class Plan:
         cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=seed, kind=self.kind,
                            corange=self.corange, l=self.sketch_l)
         k = self.chunk_rows or n1
+        if self.variant == "stream_sparse":
+            from repro.stream.state import SparseRows, StreamingSketch
+            st = StreamingSketch(cfg, backend="xla")
+            for row0 in range(0, n1, k):
+                st.update_rows_sparse(
+                    row0, SparseRows.from_dense(A[row0: row0 + k]))
+            return st
         if self.variant == "stream_local":
             from repro.stream.state import StreamingSketch
             st = StreamingSketch(cfg, backend="xla")
@@ -300,12 +311,22 @@ def _best_executable_alg1_grid(n1: int, n2: int, r: int, P: int):
 def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
                 dtype="float32", kind: str = "normal",
                 machine: Optional[M.MachineModel] = None,
-                allow_pallas: Optional[bool] = None) -> Plan:
+                allow_pallas: Optional[bool] = None,
+                nnz: Optional[int] = None) -> Plan:
     """Plan B = A·Omega for an (n1 x n2) A on P processors.
 
     P defaults to ``len(jax.devices())``.  ``allow_pallas`` overrides the
     machine's capability flag (tests force the fused path on CPU, where it
     runs in interpret mode).
+
+    ``nnz`` declares A stored-sparse with that many nonzeros and adds the
+    sparse sketch family to the candidate list (``local_sparse`` —
+    O(nnz) scatter ingest, COO (indices+values) payload): a sparse
+    ``kind`` is kept, a dense ``kind`` is paired with CountSketch (a
+    different sketch family — the chosen plan's ``kind`` reports what
+    will actually run, and the candidate note says who lost and why).
+    Dense candidates stay in the race at their dense cost: the planner
+    picks per regime and density, it does not assume sparse wins.
     """
     if P is None:
         import jax
@@ -355,8 +376,53 @@ def plan_sketch(n1: int, n2: int, r: int, P: Optional[int] = None,
                 executable=False,
                 note=f"no factorization of P={P} divides the shape"))
 
-    return _finish_plan("sketch", (n1, n2, r), P, dtype, kind, machine,
+    if nnz is not None:
+        skind = kind if kind in SPARSE_KINDS else "countsketch"
+        grid = (1, 1, 1) if P == 1 else (_best_executable_alg1_grid(
+            n1, n2, r, P) or select_matmul_grid(n1, n2, r, P).shape)
+        cs = M.sparse_sketch_cost(n1, n2, r, nnz, grid, skind)
+        cands.append(Candidate(
+            "local_sparse" if P == 1 else "alg1_sparse",
+            cs, cs.seconds(machine, isz),
+            grid=None if P == 1 else grid, executable=(P == 1),
+            note="" if P == 1 else "distributed sparse shard_map body "
+                                   "deferred (ROADMAP item 3)"))
+        cands = _note_sparse_losses(cands, kind, skind, nnz, n1 * n2)
+
+    plan = _finish_plan("sketch", (n1, n2, r), P, dtype, kind, machine,
                         cands, lb, regime)
+    if nnz is not None and plan.variant in ("local_sparse", "alg1_sparse"):
+        plan = dataclasses.replace(plan, kind=skind)
+    return plan
+
+
+def _note_sparse_losses(cands, kind: str, skind: str, nnz: int,
+                        dense_entries: int):
+    """Honest notes on the sparse-vs-dense race: whoever loses gets told
+    why, in words a report reader can check against the cost model."""
+    ex = [c for c in cands if c.executable]
+    if not ex:
+        return cands
+    best = min(ex, key=lambda c: c.seconds)
+    density = nnz / max(dense_entries, 1)
+    out = []
+    for c in cands:
+        sparse = c.variant in ("local_sparse", "alg1_sparse",
+                               "stream_sparse")
+        if sparse and c.executable and c is not best:
+            note = (f"dense wins at density {density:.3g} "
+                    f"({best.seconds:.3g}s vs {c.seconds:.3g}s)")
+            if c.note:
+                note = f"{c.note}; {note}"
+            c = dataclasses.replace(c, note=note)
+        elif sparse and c is best and kind not in SPARSE_KINDS:
+            note = (f"substitutes {skind} for requested {kind!r} "
+                    f"(different sketch family) at density {density:.3g}")
+            if c.note:
+                note = f"{c.note}; {note}"
+            c = dataclasses.replace(c, note=note)
+        out.append(c)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -504,13 +570,20 @@ def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
                 corange: bool = False, dtype="float32",
                 kind: str = "normal",
                 machine: Optional[M.MachineModel] = None,
-                allow_pallas: Optional[bool] = None) -> Plan:
+                allow_pallas: Optional[bool] = None,
+                nnz: Optional[int] = None) -> Plan:
     """Plan a full streaming pass over A in row slabs of ``chunk_rows``.
 
     Scores the local accumulator against the mesh-sharded one; predicted
     cost is the per-update cost times the number of slabs (one full pass).
     Sharded candidates are priced per backend: the fused pallas body drops
     the per-update Omega HBM stream and halves the Y round trips.
+
+    ``nnz`` declares the WHOLE pass stored-sparse with that many nonzeros
+    total and adds the COO ingest candidate (``stream_sparse`` —
+    ``update_rows_sparse``, (indices+values) payload per slab, O(nnz)
+    scatter fold); same kind-substitution and honest-note contract as
+    :func:`plan_sketch`.
     """
     if P is None:
         import jax
@@ -552,8 +625,23 @@ def plan_stream(n1: int, n2: int, r: int, P: Optional[int] = None,
                 note="" if allow_pallas else "needs TPU (interpret-only "
                                              "here)"))
 
+    if nnz is not None:
+        skind = kind if kind in SPARSE_KINDS else "countsketch"
+        nnz_u = nnz / n_upd                      # per-slab payload
+        cs = scaled(M.sparse_stream_update_cost(chunk_rows, n2, r, l_eff,
+                                                nnz_u, (1, 1, 1), corange,
+                                                skind))
+        cands.append(Candidate(
+            "stream_sparse", cs, cs.seconds(machine, isz),
+            executable=(P == 1),
+            note="" if P == 1 else "single-device only (distributed "
+                                   "sparse bodies: ROADMAP item 3)"))
+        cands = _note_sparse_losses(cands, kind, skind, nnz, n1 * n2)
+
     plan = _finish_plan("stream", (n1, n2, r), P, dtype, kind, machine,
                         cands, lb, regime)
+    if nnz is not None and plan.variant == "stream_sparse":
+        plan = dataclasses.replace(plan, kind=skind)
     return dataclasses.replace(plan, chunk_rows=chunk_rows, corange=corange,
                                sketch_l=l)
 

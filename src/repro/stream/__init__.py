@@ -22,7 +22,7 @@
                     (launch/serve.py --chaos)
 """
 from .state import (  # noqa: F401
-    OMEGA_SALT, PSI_SALT, StreamConfig, StreamingSketch,
+    OMEGA_SALT, PSI_SALT, SparseRows, StreamConfig, StreamingSketch,
     omega_matrix, psi_cols, psi_matrix, pow2_bucket, snap_bucket,
 )
 from .distributed import (  # noqa: F401

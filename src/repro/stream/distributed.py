@@ -365,6 +365,12 @@ class ShardedStreamingSketch:
                  backend: str = "auto", blocks=None):
         from repro.kernels.local import resolve_backend
         cfg.validate()
+        from repro.core.sketch import SPARSE_KINDS
+        if cfg.kind in SPARSE_KINDS:
+            raise NotImplementedError(
+                f"kind {cfg.kind!r}: distributed sparse shard_map bodies "
+                "are deferred (ROADMAP item 3) — stream sparse kinds "
+                "through the local StreamingSketch / SketchService")
         if not isinstance(mesh, Mesh):      # a repro.plan.Plan
             from repro.core.sketch import make_grid_mesh
             if getattr(mesh, "grid", None) is None:

@@ -57,6 +57,7 @@ from jax.sharding import Mesh
 
 from repro.core.sketch import (
     DEFAULT_AXES,
+    SPARSE_KINDS,
     input_sharding,
     rand_matmul,
     seed_keys,
@@ -66,10 +67,11 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 from .distributed import corange_update, stream_shardings
-from .state import (StreamConfig, _local_sig, local_rowblock_batch_prog,
-                    local_rowblock_prog, local_rowblock_ragged_prog,
-                    nystrom_local, pow2_bucket, snap_bucket,
-                    validate_row_block)
+from .state import (SparseRows, StreamConfig, _local_sig,
+                    local_rowblock_batch_prog, local_rowblock_prog,
+                    local_rowblock_ragged_prog, local_sparse_batch_prog,
+                    local_sparse_prog, nystrom_local, pow2_bucket,
+                    snap_bucket, validate_row_block)
 
 #: QoS classes, strongest first.  ``pinned`` streams are never auto-evicted;
 #: among evictable residents the lowest class goes first, LRU within class.
@@ -177,6 +179,11 @@ class SketchService:
             raise ValueError(f"qos {qos!r} not in {QOS_CLASSES}")
         cfg.validate()
         if self.mesh is not None:
+            if cfg.kind in SPARSE_KINDS:
+                raise NotImplementedError(
+                    f"kind {cfg.kind!r}: distributed sparse shard_map "
+                    "bodies are deferred (ROADMAP item 3) — open sparse-"
+                    "kind streams on a local (mesh=None) service")
             p1, p2, p3 = (self.mesh.shape[a] for a in self.axes)
             if (cfg.n1 % (p1 * p2) or cfg.n2 % (p2 * p3) or cfg.n2 % p2
                     or cfg.r % p3):    # n1 % (p1*p2): Y is P((p1, p2), p3)
@@ -465,6 +472,131 @@ class SketchService:
         st.num_updates += 1
         self._updates_total += 1
         return self
+
+    def update_sparse(self, sid: int, sp: SparseRows, row0: int = 0):
+        """Apply one COO row-slab update to stream ``sid`` (local mode).
+
+        The payload on the wire is (indices + values) — ``2·nnz`` words,
+        priced at the ``service.update[sparse]`` ledger site by
+        ``plan.model.sparse_payload_words`` — instead of the dense slab's
+        ``k·n2``; the fold is the O(nnz) scatter program of
+        ``stream/state.py:_local_sparse_update`` (bitwise vs the dense
+        path for sparse Omega kinds).  Distributed streams densify and go
+        through :meth:`update` until the sparse shard_map bodies land
+        (ROADMAP item 3).
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "update_sparse is local-mode only: distributed sparse "
+                "shard_map bodies are deferred (ROADMAP item 3) — densify "
+                "and use update(), or open the stream on a local service")
+        st = self._touch(sid)
+        self._materialize(st)
+        cfg = st.cfg
+        sp.validate(cfg, row0)
+        nnz_b = pow2_bucket(max(1, sp.nnz))
+        row, col, val = sp.padded(nnz_b)
+        fn = self._get_sparse_fn(cfg, sp.shape[0], nnz_b)
+        args = (st.Y, st.W, jnp.asarray(row), jnp.asarray(col),
+                jnp.asarray(val, cfg.dtype), st.keys, jnp.int32(row0))
+        led = obs_ledger.get_ledger()
+        if led is not None:
+            from repro.plan.model import sparse_payload_words
+            led.record("service.update[sparse]",
+                       predicted_words=sparse_payload_words(sp.nnz),
+                       lower_bound_words=float(sp.nnz),
+                       itemsize=jnp.dtype(cfg.dtype).itemsize,
+                       detail=("nnz", sp.nnz))
+        with obs_trace.span("service.update", cat="service", mode="sparse"):
+            st.Y, st.W = fn(*args)
+        self._m_updates.inc(path="sparse")
+        st.num_updates += 1
+        self._updates_total += 1
+        return self
+
+    def update_sparse_batch(self, sids, sps, row0=0):
+        """Fused multi-stream sparse ingest: one compiled call folds one
+        COO slab into every stream in ``sids``.
+
+        All lanes share one slab height; payloads are pow2-padded to the
+        tallest lane's nnz bucket (pads are routed into sacrificial
+        rows/columns — bitwise-invisible), so lane i's result is bitwise
+        :meth:`update_sparse` applied to stream i alone.  Local mode only.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "update_sparse_batch is local-mode only (ROADMAP item 3)")
+        sids = list(sids)
+        if len(set(sids)) != len(sids):
+            raise ValueError("update_sparse_batch sids must be distinct")
+        protect = frozenset(sids)
+        sts = [self._touch(s, protect) for s in sids]
+        for st in sts:
+            self._materialize(st)
+        if not sts:
+            raise ValueError("update_sparse_batch needs at least one stream")
+        sps = list(sps)
+        if len(sps) != len(sts):
+            raise ValueError(f"need {len(sts)} payloads, got {len(sps)}")
+        cfg0 = sts[0].cfg
+        sig = _local_sig(cfg0)
+        for st in sts[1:]:
+            if _local_sig(st.cfg) != sig:
+                raise ValueError(
+                    f"streams must share one shape signature; "
+                    f"{_local_sig(st.cfg)} != {sig}")
+        n = len(sts)
+        row0s = ([int(row0)] * n if jnp.ndim(row0) == 0 else
+                 [int(x) for x in row0])
+        if len(row0s) != n:
+            raise ValueError(f"row0 needs {n} entries, got {len(row0s)}")
+        k = sps[0].shape[0]
+        for sp, r0 in zip(sps, row0s):
+            if sp.shape[0] != k:
+                raise ValueError(f"lanes must share one slab height; "
+                                 f"{sp.shape[0]} != {k}")
+            sp.validate(cfg0, r0)
+        nnz_b = pow2_bucket(max(1, max(sp.nnz for sp in sps)))
+        padded = [sp.padded(nnz_b) for sp in sps]
+        rows = jnp.stack([jnp.asarray(p[0]) for p in padded])
+        cols = jnp.stack([jnp.asarray(p[1]) for p in padded])
+        vals = jnp.stack([jnp.asarray(p[2], cfg0.dtype) for p in padded])
+        key = (sig, k, nnz_b, n, "sparse_batch")
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = local_sparse_batch_prog(sig, k, nnz_b, n)
+        Yb = jnp.stack([st.Y for st in sts])
+        Wb = (jnp.stack([st.W for st in sts]) if cfg0.corange else None)
+        keys = jnp.stack([st.keys for st in sts])
+        r0s = jnp.asarray(row0s, jnp.int32)
+        led = obs_ledger.get_ledger()
+        if led is not None:
+            from repro.plan.model import sparse_payload_words
+            tot = sum(sp.nnz for sp in sps)
+            led.record("service.update[sparse]",
+                       predicted_words=sparse_payload_words(tot),
+                       lower_bound_words=float(tot),
+                       itemsize=jnp.dtype(cfg0.dtype).itemsize,
+                       detail=("nnz", tot, "lanes", n))
+        with obs_trace.span("service.update_sparse_batch", cat="service",
+                            lanes=n):
+            Yb, Wb = fn(Yb, Wb, rows, cols, vals, keys, r0s)
+        self._m_updates.inc(n, path="sparse")
+        for i, st in enumerate(sts):
+            st.Y = Yb[i]
+            if cfg0.corange:
+                st.W = Wb[i]
+            st.num_updates += 1
+        self._updates_total += n
+        return self
+
+    def _get_sparse_fn(self, cfg: StreamConfig, k: int, nnz_b: int):
+        key = (_stream_sig(cfg), k, nnz_b, "sparse")
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = local_sparse_prog(_local_sig(cfg), k,
+                                                    nnz_b)
+        return fn
 
     def update_batch(self, sids, H, row0=0):
         """Fused multi-stream ingest: one compiled call applies the same-

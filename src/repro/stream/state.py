@@ -49,8 +49,10 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.sketch import omega_tile, seed_keys
+from repro.core.sketch import (SPARSE_KINDS, omega_tile, seed_keys,
+                               sparse_omega_rows, validate_kind)
 
 OMEGA_SALT = 0   # salt stream for Omega (range sketch)
 PSI_SALT = 1     # salt stream for Psi (co-range sketch); must differ
@@ -66,7 +68,10 @@ class StreamConfig:
              et al.'s l >= 2k+1 guidance, clipped to n1
     seed   : Philox seed; Omega and Psi come from the same seed under
              different salts, so one uint32 pair keys the whole stream
-    kind   : entry distribution ("normal" | "uniform" | "rademacher")
+    kind   : Omega/Psi family — dense entry distributions ("normal" |
+             "uniform" | "rademacher") or the sparse families
+             ("countsketch" | "rowsample", one nonzero per row; see
+             core/sketch.py SPARSE_KINDS)
     corange: track W = Psi·A (needed for general low-rank reconstruction;
              unnecessary for sketch-only and Nyström workloads)
     """
@@ -86,6 +91,7 @@ class StreamConfig:
         return self.l if self.l is not None else min(2 * self.r + 1, self.n1)
 
     def validate(self):
+        validate_kind(self.kind)
         if self.r <= 0 or self.n1 <= 0 or self.n2 <= 0:
             raise ValueError(f"bad stream shape {self}")
         if self.omega_salt == self.psi_salt and self.corange:
@@ -117,15 +123,16 @@ def psi_matrix(cfg: StreamConfig, seed=None):
     row-block updates that consume them (tile-decomposition invariance)."""
     return omega_tile(cfg.seed if seed is None else seed, 0, 0,
                       cfg.n1, cfg.sketch_l, cfg.kind, cfg.dtype,
-                      salt=cfg.psi_salt).T
+                      salt=cfg.psi_salt, n_total=cfg.n1).T
 
 
 def psi_cols(cfg: StreamConfig, row0, rows: int, seed=None):
     """Psi[:, row0:row0+rows] as an (rows, l) tile (pre-transpose layout);
-    row0 may be traced."""
+    row0 may be traced.  ``n_total=cfg.n1`` pins the rowsample membership
+    probability to the stream's global height, row slice or not."""
     return omega_tile(cfg.seed if seed is None else seed, row0, 0,
                       rows, cfg.sketch_l, cfg.kind, cfg.dtype,
-                      salt=cfg.psi_salt)
+                      salt=cfg.psi_salt, n_total=cfg.n1)
 
 
 def validate_row_block(cfg: StreamConfig, row0: int, shape: Tuple[int, int]):
@@ -134,6 +141,71 @@ def validate_row_block(cfg: StreamConfig, row0: int, shape: Tuple[int, int]):
     if n2 != cfg.n2 or row0 < 0 or row0 + k > cfg.n1:
         raise ValueError(f"row block ({row0}, {shape}) outside "
                          f"({cfg.n1}, {cfg.n2})")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseRows:
+    """A sparse row slab in COO form: ``A[row0 + row[e], col[e]] += val[e]``.
+
+    ``shape = (k, n2)`` is the DENSE slab shape the entries live in; the
+    wire format is (indices, values) — ``2·nnz`` words instead of the
+    dense slab's ``k·n2`` — which is exactly what the sparse ledger site
+    and ``plan.model.sparse_payload_words`` price.
+    """
+    row: Any                   # (nnz,) int32, local row within the slab
+    col: Any                   # (nnz,) int32, global column in [0, n2)
+    val: Any                   # (nnz,) values
+    shape: Tuple[int, int]     # (k, n2)
+
+    @property
+    def nnz(self) -> int:
+        return int(np.shape(self.row)[0])
+
+    @classmethod
+    def from_dense(cls, H) -> "SparseRows":
+        """COO of a dense slab (entry order: row-major, as np.nonzero)."""
+        H = np.asarray(H)
+        r, c = np.nonzero(H)
+        return cls(row=np.asarray(r, np.int32), col=np.asarray(c, np.int32),
+                   val=H[r, c], shape=tuple(H.shape))
+
+    def to_dense(self, dtype=None):
+        out = np.zeros(self.shape,
+                       dtype or np.asarray(self.val).dtype)
+        np.add.at(out, (np.asarray(self.row), np.asarray(self.col)),
+                  np.asarray(self.val))
+        return out
+
+    def validate(self, cfg: StreamConfig, row0: int) -> None:
+        validate_row_block(cfg, row0, self.shape)
+        k, n2 = self.shape
+        row = np.asarray(self.row)
+        col = np.asarray(self.col)
+        if row.shape != col.shape or row.shape != np.shape(self.val):
+            raise ValueError(f"ragged COO arrays: {row.shape} / "
+                             f"{col.shape} / {np.shape(self.val)}")
+        if row.size and (row.min() < 0 or row.max() >= k
+                         or col.min() < 0 or col.max() >= n2):
+            raise ValueError(f"COO indices outside slab shape {self.shape}")
+
+    def padded(self, nnz_b: int):
+        """(row, col, val) padded to ``nnz_b`` entries.  Pads carry
+        ``row == k`` / ``col == n2`` / ``val == 0`` and are routed into
+        sacrificial accumulator rows/columns that the update program drops
+        before folding — a pad can never touch a real partial sum, so
+        padding cannot perturb a single result bit."""
+        k, n2 = self.shape
+        nnz = self.nnz
+        if nnz > nnz_b:
+            raise ValueError(f"nnz={nnz} exceeds bucket {nnz_b}")
+        pad = nnz_b - nnz
+        row = np.concatenate([np.asarray(self.row, np.int32),
+                              np.full(pad, k, np.int32)])
+        col = np.concatenate([np.asarray(self.col, np.int32),
+                              np.full(pad, n2, np.int32)])
+        val = np.concatenate([np.asarray(self.val),
+                              np.zeros(pad, np.asarray(self.val).dtype)])
+        return row, col, val
 
 
 def nystrom_local(Y, cfg: StreamConfig):
@@ -165,7 +237,7 @@ def _local_rowblock_update(sig: Tuple, k: int):
         Y = jax.lax.dynamic_update_slice(Y, Yk + dY, (row0, 0))
         if corange:
             psi_c = omega_tile(keys, row0, 0, k, l, kind, dtype,
-                               salt=psi_salt)         # (k, l)
+                               salt=psi_salt, n_total=n1)  # (k, l)
             W = W + psi_c.T @ H
         return Y, W
 
@@ -198,7 +270,11 @@ def snap_bucket(k: int, edges=None) -> int:
     """Bucket height for a k-row lane: the smallest edge >= k when
     ``edges`` (ascending bucket tops, e.g. from
     ``repro.plan.choose_bucket_edges``) is given — a lane taller than
-    every edge keeps its exact height (its own bucket) — else the pow2
+    every edge falls back to the pow2 snap (NOT its exact height, which
+    would compile one ragged program per distinct over-tall height and
+    stall live traffic for seconds per new height; the pow2 fallback
+    keeps the over-tall program count logarithmic, pinned by
+    tests/test_sparse.py::test_snap_bucket_overtall_*) — else the pow2
     snap.
 
     Height-1 lanes are never padded into a taller bucket: XLA-CPU lowers
@@ -213,7 +289,7 @@ def snap_bucket(k: int, edges=None) -> int:
     for e in edges:
         if e >= k:
             return int(e)
-    return k
+    return pow2_bucket(k)
 
 
 def _local_ragged_update(sig: Tuple, kb: int, backend: str = "jnp"):
@@ -249,7 +325,7 @@ def _local_ragged_update(sig: Tuple, kb: int, backend: str = "jnp"):
             # beyond kvalid (possibly beyond n1) multiply zeroed H rows,
             # so they contribute exact ±0 terms only
             psi_c = omega_tile(keys, row0, 0, kb, l, kind, dtype,
-                               salt=psi_salt)          # (kb, l)
+                               salt=psi_salt, n_total=n1)  # (kb, l)
             W = W + psi_c.T @ Hm
         return Y, W
 
@@ -286,6 +362,80 @@ def local_rowblock_batch_prog(sig: Tuple, k: int, n_streams: int):
     corange = sig[6]
     upd = _local_rowblock_update(sig, k)
     batched = jax.vmap(upd, in_axes=(0, 0 if corange else None, 0, 0, 0))
+    return jax.jit(batched)
+
+
+def _local_sparse_update(sig: Tuple, k: int, nnz_b: int):
+    """Pure sparse row-slab update: H arrives as ``nnz_b`` COO entries
+    (row, col, val) of a (k, n2) slab — O(nnz) scatter-adds when the
+    Omega/Psi family is itself sparse, O(nnz·r) gathered FMAs against a
+    regenerated dense Omega otherwise.  Never densifies H.
+
+    Pad entries (``row == k`` / ``col == n2`` / ``val == 0``, appended by
+    :meth:`SparseRows.padded`) scatter into one sacrificial dY row / W
+    column that is dropped before the fold, so they cannot flip even a
+    -0.0 in a real accumulator.
+    """
+    n1, n2, r, l, kind, dtype_name, corange, omega_salt, psi_salt = sig
+    dtype = jnp.dtype(dtype_name)
+    sparse_om = kind in SPARSE_KINDS
+
+    def upd(Y, W, row, col, val, keys, row0):
+        val = val.astype(dtype)
+        if sparse_om:
+            # Omega row ``col`` has ONE nonzero: (bucket, value) drawn at
+            # counter g = col — gathered per stored entry (bitwise equal
+            # to slicing the full map; counter-based draws see only g).
+            b, v = sparse_omega_rows(keys, col, r, kind, dtype,
+                                     salt=omega_salt, n_total=n2)
+            dY = jnp.zeros((k + 1, r), dtype).at[row, b].add(val * v)
+        else:
+            om = omega_tile(keys, 0, 0, n2, r, kind, dtype,
+                            salt=omega_salt)
+            om = jnp.concatenate([om, jnp.zeros((1, r), dtype)])  # col==n2
+            dY = jnp.zeros((k + 1, r), dtype).at[row].add(
+                val[:, None] * om[col])
+        dY = dY[:k]
+        Yk = jax.lax.dynamic_slice(Y, (row0, 0), (k, r))
+        Y = jax.lax.dynamic_update_slice(Y, Yk + dY, (row0, 0))
+        if corange:
+            g = jnp.asarray(row0, jnp.uint32) + row.astype(jnp.uint32)
+            Wp = jnp.concatenate([W, jnp.zeros((l, 1), dtype)], axis=1)
+            if sparse_om:
+                pb, pv = sparse_omega_rows(keys, g, l, kind, dtype,
+                                           salt=psi_salt, n_total=n1)
+                Wp = Wp.at[pb, col].add(pv * val)
+            else:
+                # dense Psi columns at the entries' global rows: (k+1, l)
+                # tile rows gathered by local row (row == k pads gather a
+                # real draw that lands in the dropped column)
+                psi_c = omega_tile(keys, row0, 0, k + 1, l, kind, dtype,
+                                   salt=psi_salt, n_total=n1)
+                Wp = Wp.at[:, col].add((psi_c[row] * val[:, None]).T)
+            W = Wp[:, :n2]
+        return Y, W
+
+    return upd
+
+
+@functools.lru_cache(maxsize=256)
+def local_sparse_prog(sig: Tuple, k: int, nnz_b: int):
+    """Compiled sparse row-slab update, cached per (signature, slab height,
+    nnz bucket) — ``nnz_b`` is pow2-snapped by the callers so the number
+    of distinct compiled programs stays logarithmic in payload spread."""
+    return jax.jit(_local_sparse_update(sig, k, nnz_b))
+
+
+@functools.lru_cache(maxsize=128)
+def local_sparse_batch_prog(sig: Tuple, k: int, nnz_b: int, n_streams: int):
+    """Batched (vmapped) sparse row-slab update: the single-stream sparse
+    program vmapped over a leading lane axis with per-lane keys, offsets
+    and COO payloads — lane i's bits are those of updating stream i alone
+    (counter-based draws see only (keys, global coordinates))."""
+    corange = sig[6]
+    upd = _local_sparse_update(sig, k, nnz_b)
+    batched = jax.vmap(upd,
+                       in_axes=(0, 0 if corange else None, 0, 0, 0, 0, 0))
     return jax.jit(batched)
 
 
@@ -354,6 +504,27 @@ class StreamingSketch:
         self.num_updates += 1
         return self
 
+    def update_rows_sparse(self, row0: int, sp: SparseRows):
+        """Rows [row0, row0+k) arrive as a COO slab (additively).
+
+        Folds exactly the numbers :meth:`update_rows` would fold for the
+        densified slab up to scatter-accumulation order, moves only
+        ``2·nnz`` words of payload, and never materializes the dense slab
+        on device.  The compiled program is cached per (signature, k,
+        pow2(nnz)); the pad entries are routed into sacrificial
+        rows/columns so bucket padding is bitwise-invisible.
+        """
+        cfg = self.cfg
+        sp.validate(cfg, row0)
+        nnz_b = pow2_bucket(max(1, sp.nnz))
+        row, col, val = sp.padded(nnz_b)
+        fn = local_sparse_prog(_local_sig(cfg), sp.shape[0], nnz_b)
+        self.Y, self.W = fn(self.Y, self.W, jnp.asarray(row),
+                            jnp.asarray(col), jnp.asarray(val, cfg.dtype),
+                            self._keys, jnp.int32(row0))
+        self.num_updates += 1
+        return self
+
     def update_cols(self, col0: int, H):
         """Columns [col0, col0+k) arrive (additively)."""
         cfg = self.cfg
@@ -363,7 +534,8 @@ class StreamingSketch:
                              f"({cfg.n1}, {cfg.n2})")
         H = jnp.asarray(H, cfg.dtype)
         om_rows = omega_tile(cfg.seed, col0, 0, k, cfg.r, cfg.kind,
-                             H.dtype, salt=cfg.omega_salt)   # Omega[col0:,:]
+                             H.dtype, salt=cfg.omega_salt,
+                             n_total=cfg.n2)                 # Omega[col0:,:]
         self.Y = self.Y + H @ om_rows
         if self.W is not None:
             self.W = self.W.at[:, col0:col0 + k].add(psi_matrix(cfg) @ H)

@@ -292,8 +292,11 @@ print("OK")
 def test_reshard_ledger_drift_is_zero():
     """Acceptance (d): the reshard hop's measured HLO bytes equal the
     planner's stream_reshard_traffic_words prediction EXACTLY on the
-    pinned pairs — a relayout that moves full new shards, and a
-    coinciding-layout relabel that moves nothing."""
+    pinned pairs — a relayout that moves full new shards, a
+    coinciding-layout relabel that moves nothing, and a both-axes
+    re-split ((4,1,2) -> (2,1,4): the column axis re-splits while
+    already split) that pays TWO full-shard hops (all-to-all +
+    collective-permute) — the pair the old model underpriced 2x."""
     run_distributed(r"""
 import numpy as np
 from repro.core.sketch import make_grid_mesh
@@ -305,27 +308,30 @@ from repro.stream.elastic import LEDGER_SITE, reshard_stream
 cfg = StreamConfig(n1=256, n2=128, r=8, seed=0, corange=False)
 rng = np.random.default_rng(0)
 H = rng.standard_normal((64, 128)).astype("float32")
-# (2,2,2): layouts differ -> XLA moves each device's full NEW shard;
-# (4,2,1): Y's layout coincides device-for-device -> zero collective words
-for new_grid, want_pred, want_floor in (((2, 2, 2), 256.0, 128.0),
-                                        ((4, 2, 1), 0.0, 0.0)):
+# (8,1,1)->(2,2,2): layouts differ -> one full NEW shard per device;
+# (8,1,1)->(4,2,1): Y's layout coincides device-for-device -> zero words;
+# (4,1,2)->(2,1,4): both Y axes re-split with p3>1 either side -> 2x shard
+for old_grid, new_grid, want_pred, want_floor in (
+        ((8, 1, 1), (2, 2, 2), 256.0, 128.0),
+        ((8, 1, 1), (4, 2, 1), 0.0, 0.0),
+        ((4, 1, 2), (2, 1, 4), 512.0, 256.0)):
     led = install_ledger()
-    sk = ShardedStreamingSketch(cfg, make_grid_mesh(8, 1, 1),
+    sk = ShardedStreamingSketch(cfg, make_grid_mesh(*old_grid),
                                 backend="jnp")
     sk.update_rows(0, H)
     reshard_stream(sk, new_grid)
-    pred = M.stream_reshard_traffic_words(cfg.n1, cfg.r, (8, 1, 1),
+    pred = M.stream_reshard_traffic_words(cfg.n1, cfg.r, old_grid,
                                           new_grid)
-    floor = M.stream_reshard_words(cfg.n1, cfg.r, (8, 1, 1), new_grid)
+    floor = M.stream_reshard_words(cfg.n1, cfg.r, old_grid, new_grid)
     assert (pred, floor) == (want_pred, want_floor), (pred, floor)
     site = led.site(LEDGER_SITE)
     assert site is not None and site.calls == 1
     assert site.predicted_words == pred
     assert site.lower_bound_words == floor
     assert site.measured_words_per_call == pred, (
-        new_grid, site.measured_words_per_call, pred)
-    assert site.drift == 0.0, (new_grid, site.drift)
-    print("DRIFT_OK", new_grid, site.measured_words_per_call)
+        old_grid, new_grid, site.measured_words_per_call, pred)
+    assert site.drift == 0.0, (old_grid, new_grid, site.drift)
+    print("DRIFT_OK", old_grid, new_grid, site.measured_words_per_call)
 print("OK")
 """)
 

@@ -176,7 +176,9 @@ def test_bucket_snapping_helpers():
     assert [pow2_bucket(k) for k in (1, 2, 3, 5, 8, 9, 64)] == \
         [1, 2, 4, 8, 8, 16, 64]
     assert snap_bucket(5, [4, 16]) == 16
-    assert snap_bucket(17, [4, 16]) == 17    # taller than every edge
+    # taller than every edge: pow2 fallback so over-tall traffic shares
+    # programs instead of compiling one per distinct height (PR 10)
+    assert snap_bucket(17, [4, 16]) == 32
     assert snap_bucket(3, None) == 4
     # height 1 is never padded, whatever the edges say (see below)
     assert snap_bucket(1, [8, 32]) == 1

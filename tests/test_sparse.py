@@ -1,0 +1,473 @@
+"""The sparse sketch family (PR 10): CountSketch + coordinated row
+sampling as first-class Omega kinds.
+
+Pins, in order:
+  * bitwise tile/offset/gather invariance of the per-row Philox draws
+    (same contract as the dense Irwin-Hall generator — a draw depends
+    only on (seed, salt, global row index), never on the tiling);
+  * the O(nnz) scatter apply against the materialized-Omega GEMM;
+  * sparse streaming ingest: `update_rows_sparse` vs the dense row-block
+    path (bitwise for sparse kinds), nnz-bucket pad invariance (bitwise),
+    service lane-vs-solo (bitwise), and the `service.update[sparse]`
+    ledger site pricing the COO payload at (indices + values) words;
+  * the planner's dense-vs-sparse choice: sparse wins the high-sparsity
+    regime, dense wins dense inputs, exactly one crossover in between,
+    honest notes on the loser;
+  * eager kind validation at every public entry point (a typo'd kind
+    fails with the valid list BEFORE tracing);
+  * the `snap_bucket` over-tall-lane regression: heights above the top
+    planner edge snap to pow2 instead of compiling one program per
+    distinct height.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import nystrom as NY
+from repro.core.kinds import DENSE_KINDS, SPARSE_KINDS, VALID_KINDS
+from repro.core.sketch import (omega_tile, rand_matmul, rand_matmul_auto,
+                               sketch_reference, sketch_sparse_apply,
+                               sparse_omega_map, sparse_omega_rows,
+                               validate_kind)
+from repro.plan import model as M
+from repro.plan.planner import plan_sketch, plan_stream
+from repro.stream import (SketchService, SparseRows, StreamConfig,
+                          StreamingSketch)
+from repro.stream.state import pow2_bucket, snap_bucket
+
+SEED = 7
+
+
+# ---------------------------------------------------------------------------
+# draw invariance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    kind=st.sampled_from(SPARSE_KINDS),
+    row0=st.integers(0, 40),
+    col0=st.integers(0, 12),
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 4),
+)
+def test_sparse_tile_never_shifts_draws(kind, row0, col0, rows, cols):
+    """Any (row0, col0, rows, cols) window is the same bits as the slice
+    of one full-matrix generation — the tile decomposition of Alg. 1."""
+    n, r = 64, 16
+    full = np.asarray(omega_tile(SEED, 0, 0, n, r, kind))
+    tile = np.asarray(omega_tile(SEED, row0, col0, rows, cols, kind,
+                                 r_total=r, n_total=n))
+    np.testing.assert_array_equal(
+        tile, full[row0:row0 + rows, col0:col0 + cols])
+
+
+@pytest.mark.parametrize("kind", SPARSE_KINDS)
+def test_sparse_map_matches_materialized_tile(kind):
+    """The O(n) (bucket, value) map IS the dense tile, scattered."""
+    n, r = 96, 8
+    bucket, value = sparse_omega_map(SEED, n, r, kind)
+    dense = np.zeros((n, r), np.float32)
+    dense[np.arange(n), np.asarray(bucket)] = np.asarray(value)
+    np.testing.assert_array_equal(
+        dense, np.asarray(omega_tile(SEED, 0, 0, n, r, kind)))
+
+
+@pytest.mark.parametrize("kind", SPARSE_KINDS)
+def test_sparse_gather_draws_context_invariant(kind):
+    """Gathered draws at arbitrary (repeated, unordered) indices equal
+    the full map's entries — a draw sees only its global row index."""
+    n, r = 64, 16
+    bucket, value = sparse_omega_map(SEED, n, r, kind)
+    g = np.asarray([3, 3, 63, 0, 17, 3, 41], np.int32)
+    gb, gv = sparse_omega_rows(SEED, g, r, kind, n_total=n)
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(bucket)[g])
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(value)[g])
+
+
+def test_sparse_structure():
+    """One nonzero per CountSketch row, sign ±1; rowsample keeps a row
+    with p = r/n and scales survivors by 1/sqrt(p) (unbiased)."""
+    n, r = 2048, 32
+    cs = np.asarray(omega_tile(SEED, 0, 0, n, r, "countsketch"))
+    assert ((cs != 0).sum(axis=1) == 1).all()
+    assert set(np.unique(cs)) == {-1.0, 0.0, 1.0}
+    rs = np.asarray(omega_tile(SEED, 0, 0, n, r, "rowsample"))
+    nnz_rows = (rs != 0).any(axis=1)
+    p = r / n
+    assert abs(nnz_rows.mean() - p) < 4 * np.sqrt(p * (1 - p) / n)
+    vals = np.unique(np.abs(rs[rs != 0]))
+    np.testing.assert_allclose(vals, [1.0 / np.sqrt(np.float32(p))],
+                               rtol=1e-6)
+    # E[Omega Omega^T] diag ~ 1: kept rows contribute exactly 1/p
+    diag = np.einsum("ij,ij->i", rs, rs)
+    np.testing.assert_allclose(np.unique(diag[nnz_rows]), [1.0 / p],
+                               rtol=1e-5)
+
+
+def test_sparse_salt_streams_differ():
+    """Omega (salt 0) and Psi (salt 1) draws are independent streams."""
+    n, r = 512, 16
+    b0, _ = sparse_omega_map(SEED, n, r, "countsketch", salt=0)
+    b1, _ = sparse_omega_map(SEED, n, r, "countsketch", salt=1)
+    assert (np.asarray(b0) != np.asarray(b1)).any()
+
+
+# ---------------------------------------------------------------------------
+# O(nnz) apply
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", SPARSE_KINDS)
+def test_sketch_sparse_apply_matches_gemm(kind):
+    n, r = 128, 16
+    A = np.random.default_rng(0).standard_normal((24, n)).astype(np.float32)
+    got = np.asarray(sketch_sparse_apply(jnp.asarray(A), SEED, r, kind=kind))
+    want = A @ np.asarray(omega_tile(SEED, 0, 0, n, r, kind))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_sparse_rows_roundtrip():
+    H = np.zeros((6, 10), np.float32)
+    H[1, 3] = 2.0
+    H[5, 9] = -1.5
+    sp = SparseRows.from_dense(H)
+    assert sp.nnz == 2
+    np.testing.assert_array_equal(sp.to_dense(), H)
+    row, col, val = sp.padded(8)
+    assert (row[2:] == 6).all() and (col[2:] == 10).all()
+    assert (val[2:] == 0).all()
+    with pytest.raises(ValueError):
+        sp.padded(1)
+
+
+# ---------------------------------------------------------------------------
+# streaming ingest
+# ---------------------------------------------------------------------------
+
+def _sparse_slab(k, n2, nnz, rng):
+    H = np.zeros((k, n2), np.float32)
+    idx = rng.choice(k * n2, size=nnz, replace=False)
+    H.flat[idx] = rng.standard_normal(nnz).astype(np.float32)
+    return H
+
+
+@pytest.mark.parametrize("kind", SPARSE_KINDS)
+def test_update_rows_sparse_bitwise_vs_dense(kind):
+    """For sparse Omega kinds the COO path folds the exact same scatter
+    terms as the densified slab — bitwise."""
+    cfg = StreamConfig(n1=48, n2=64, r=8, seed=SEED, kind=kind)
+    rng = np.random.default_rng(2)
+    H1 = _sparse_slab(16, 64, 41, rng)
+    H2 = _sparse_slab(16, 64, 7, rng)
+    a = StreamingSketch(cfg, backend="xla")
+    a.update_rows_sparse(0, SparseRows.from_dense(H1))
+    a.update_rows_sparse(32, SparseRows.from_dense(H2))
+    b = StreamingSketch(cfg, backend="xla")
+    b.update_rows_sparse(0, SparseRows.from_dense(H1))
+    b.update_rows_sparse(32, SparseRows.from_dense(H2))
+    np.testing.assert_array_equal(np.asarray(a.Y), np.asarray(b.Y))
+    np.testing.assert_array_equal(np.asarray(a.W), np.asarray(b.W))
+    # and equals the dense row-block path to fp32 tolerance (the scatter
+    # accumulation order is the only difference; for countsketch each
+    # (row, bucket) cell takes contributions from disjoint entries so the
+    # sums agree to the bit in practice)
+    d = StreamingSketch(cfg, backend="xla")
+    d.update_rows(0, H1)
+    d.update_rows(32, H2)
+    np.testing.assert_allclose(np.asarray(a.Y), np.asarray(d.Y), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.W), np.asarray(d.W), atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["countsketch", "normal"])
+def test_update_rows_sparse_pad_bucket_bitwise(kind):
+    """The same payload padded into a LARGER nnz bucket folds identical
+    bits: pads are routed to sacrificial rows/columns, never masked-by-
+    value (a 0.0 add could still flip a -0.0)."""
+    from repro.stream.state import _local_sig, local_sparse_prog
+    cfg = StreamConfig(n1=32, n2=48, r=8, seed=SEED, kind=kind)
+    sp = SparseRows.from_dense(
+        _sparse_slab(8, 48, 19, np.random.default_rng(3)))
+    a = StreamingSketch(cfg, backend="xla")
+    a.update_rows_sparse(8, sp)                      # bucket = pow2(19) = 32
+    row, col, val = sp.padded(256)                   # force a bigger bucket
+    fn = local_sparse_prog(_local_sig(cfg), 8, 256)
+    b = StreamingSketch(cfg, backend="xla")
+    Y, W = fn(b.Y, b.W, jnp.asarray(row), jnp.asarray(col),
+              jnp.asarray(val, cfg.dtype), b._keys, jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(a.Y), np.asarray(Y))
+    np.testing.assert_array_equal(np.asarray(a.W), np.asarray(W))
+
+
+@pytest.mark.parametrize("kind", ["countsketch", "rowsample", "normal"])
+def test_service_sparse_lane_vs_solo_bitwise(kind):
+    """update_sparse_batch lane i == update_rows_sparse on stream i alone,
+    bit for bit, including heterogeneous per-lane nnz."""
+    rng = np.random.default_rng(4)
+    seeds = (11, 99, 5)
+    nnzs = (13, 29, 1)
+    svc = SketchService()
+    sids = [svc.open(StreamConfig(n1=32, n2=48, r=8, seed=s, kind=kind))
+            for s in seeds]
+    Hs = [_sparse_slab(8, 48, nnz, rng) for nnz in nnzs]
+    sps = [SparseRows.from_dense(H) for H in Hs]
+    row0s = [0, 16, 24]
+    svc.update_sparse_batch(sids, sps, row0=row0s)
+    for sid, sp, r0, s in zip(sids, sps, row0s, seeds):
+        solo = StreamingSketch(
+            StreamConfig(n1=32, n2=48, r=8, seed=s, kind=kind),
+            backend="xla")
+        solo.update_rows_sparse(r0, sp)
+        st = svc._streams[sid]
+        np.testing.assert_array_equal(np.asarray(st.Y), np.asarray(solo.Y))
+        np.testing.assert_array_equal(np.asarray(st.W), np.asarray(solo.W))
+
+
+def test_service_sparse_ledger_prices_coo_payload():
+    """The service.update[sparse] site predicts (indices + values) =
+    2·nnz words — the sparse communication model, not dense k·n2 tiles."""
+    from repro.obs import ledger as OL
+    led = OL.install_ledger()
+    try:
+        svc = SketchService()
+        sid = svc.open(StreamConfig(n1=32, n2=48, r=8, seed=SEED,
+                                    kind="countsketch"))
+        sp = SparseRows.from_dense(
+            _sparse_slab(8, 48, 21, np.random.default_rng(5)))
+        svc.update_sparse(sid, sp, row0=0)
+        sites = [s for s in led.sites()
+                 if s.name == "service.update[sparse]"]
+        assert len(sites) == 1
+        site = sites[0]
+        assert site.calls == 1
+        assert site.predicted_words == M.sparse_payload_words(21) == 42.0
+        assert site.lower_bound_words == 21.0
+    finally:
+        OL.uninstall_ledger()
+
+
+def test_sparse_rejected_on_distributed_service():
+    from repro.core.sketch import make_grid_mesh
+    from repro.stream import ShardedStreamingSketch
+    cfg = StreamConfig(n1=32, n2=48, r=8, kind="countsketch")
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        SketchService(mesh=make_grid_mesh(1, 1, 1)).open(cfg)
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        ShardedStreamingSketch(cfg, make_grid_mesh(1, 1, 1))
+    with pytest.raises(NotImplementedError, match="local-mode only"):
+        SketchService(mesh=make_grid_mesh(1, 1, 1)).update_sparse(
+            0, SparseRows.from_dense(np.zeros((1, 1), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# planner: dense vs sparse
+# ---------------------------------------------------------------------------
+
+def test_plan_sketch_picks_sparse_then_dense():
+    n1 = n2 = 1024
+    r = 8
+    lo = plan_sketch(n1, n2, r, P=1, nnz=int(0.001 * n1 * n2))
+    assert lo.variant == "local_sparse"
+    assert lo.kind == "countsketch"     # family substitution is explicit
+    hi = plan_sketch(n1, n2, r, P=1, nnz=n1 * n2)
+    assert hi.variant != "local_sparse"
+    assert hi.kind == "normal"
+    # the losing sparse candidate says who beat it and at what density
+    note = next(c.note for c in hi.candidates
+                if c.variant == "local_sparse")
+    assert "dense wins" in note
+    # no nnz declared -> candidate list is the pre-PR-10 dense race
+    assert all("sparse" not in c.variant
+               for c in plan_sketch(n1, n2, r, P=1).candidates)
+
+
+@settings(max_examples=8, deadline=None)
+@given(r=st.sampled_from([4, 8, 16]),
+       n=st.sampled_from([256, 512, 1024]))
+def test_plan_sketch_single_crossover(r, n):
+    """Scanning density upward flips the choice sparse -> dense at most
+    once (the cost model is monotone in nnz)."""
+    choices = []
+    for d in (0.0005, 0.002, 0.01, 0.05, 0.2, 0.5, 0.8, 1.0):
+        p = plan_sketch(n, n, r, P=1, nnz=max(1, int(d * n * n)))
+        choices.append(p.variant == "local_sparse")
+    flips = sum(1 for a, b in zip(choices, choices[1:]) if a != b)
+    assert flips <= 1
+    assert not choices[-1] or choices[0]   # never dense-then-sparse
+
+
+@settings(max_examples=10, deadline=None)
+@given(P=st.sampled_from([2, 4, 8, 16]),
+       d=st.sampled_from([0.001, 0.1, 1.0]))
+def test_dense_fallback_never_undercuts_thm2_floor(P, d):
+    """Entering the sparse race never lets the DENSE candidates dip below
+    the Theorem-2 floor: the sparse family prices a different payload,
+    but the dense fallback's words/proc still respect the bound."""
+    from repro.core.lower_bounds import matmul_lower_bound
+    n1 = n2 = 512
+    r = 8
+    p = plan_sketch(n1, n2, r, P=P, nnz=max(1, int(d * n1 * n2)))
+    floor = matmul_lower_bound(n1, n2, r, P)
+    for c in p.candidates:
+        if "sparse" not in c.variant and c.executable:
+            assert c.cost.words >= floor - 1e-6, (c.variant, c.cost.words)
+
+
+def test_plan_sketch_sparse_kind_kept():
+    p = plan_sketch(512, 512, 8, P=1, kind="rowsample", nnz=100)
+    assert p.variant == "local_sparse" and p.kind == "rowsample"
+
+
+def test_plan_sketch_distributed_sparse_is_analytic():
+    p = plan_sketch(1024, 1024, 8, P=8, nnz=1000)
+    assert p.variant != "alg1_sparse"          # not executable yet
+    c = next(c for c in p.candidates if c.variant == "alg1_sparse")
+    assert not c.executable and "ROADMAP item 3" in c.note
+    # the sparse formula: COO panel over p3 + dense B reduce-scatter
+    p1, p2, p3 = c.grid
+    want = ((1.0 - 1.0 / p3) * M.sparse_payload_words(1000) / (p1 * p2)
+            + (1.0 - 1.0 / p2) * 1024 * 8 / (p1 * p3))
+    assert c.cost.words == pytest.approx(want)
+
+
+def test_plan_stream_sparse_executes():
+    n1, n2, r = 64, 128, 8
+    A = _sparse_slab(n1, n2, 200, np.random.default_rng(6))
+    p = plan_stream(n1, n2, r, P=1, chunk_rows=16, corange=True, nnz=200)
+    assert p.variant == "stream_sparse" and p.kind == "countsketch"
+    st = p.execute(A, seed=SEED)
+    cfg = StreamConfig(n1=n1, n2=n2, r=r, seed=SEED, kind=p.kind,
+                       corange=True)
+    ref = StreamingSketch(cfg, backend="xla")
+    for row0 in range(0, n1, 16):
+        ref.update_rows_sparse(
+            row0, SparseRows.from_dense(A[row0:row0 + 16]))
+    np.testing.assert_array_equal(np.asarray(st.Y), np.asarray(ref.Y))
+    # dense input keeps the dense streaming plan
+    pd = plan_stream(n1, n2, r, P=1, chunk_rows=16, nnz=n1 * n2)
+    assert pd.variant != "stream_sparse"
+
+
+def test_explain_prints_sparse_choice():
+    from repro.plan.explain import explain
+    txt = explain(plan_sketch(1024, 1024, 8, P=1, nnz=10_000))
+    assert "local_sparse" in txt
+    assert "indices+values" in txt and "2*nnz" in txt
+
+
+# ---------------------------------------------------------------------------
+# eager kind validation, one test per entry point
+# ---------------------------------------------------------------------------
+
+def test_validate_kind_lists_valid_kinds():
+    with pytest.raises(ValueError, match="rowsample"):
+        validate_kind("bogus")
+    for k in VALID_KINDS:
+        validate_kind(k)
+
+
+def test_rand_matmul_rejects_bad_kind_eagerly():
+    # mesh=None: the kind check fires before any mesh/device work
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        rand_matmul(np.zeros((4, 4), np.float32), 0, 2, None, kind="bogus")
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        rand_matmul(np.zeros((4, 4), np.float32), 0, 2, None,
+                    kind="countsketch")
+
+
+def test_rand_matmul_auto_rejects_bad_kind_eagerly():
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        rand_matmul_auto(np.zeros((4, 4), np.float32), 0, 2, kind="bogus")
+
+
+def test_sketch_reference_rejects_bad_kind_eagerly():
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        sketch_reference(np.zeros((4, 4), np.float32), 0, 2, kind="bogus")
+
+
+@pytest.mark.parametrize("entry", [
+    NY.nystrom_no_redist, NY.nystrom_redist,
+    NY.nystrom_second_stage_no_redist, NY.nystrom_second_stage_redist,
+])
+def test_nystrom_1d_entry_points_reject_bad_kind_eagerly(entry):
+    A = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        entry(A, 0, 4, None, kind="bogus")
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        entry(A, 0, 4, None, kind="countsketch")
+
+
+def test_nystrom_two_grid_rejects_bad_kind_eagerly():
+    A = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        NY.nystrom_two_grid(A, 0, 4, p=(1, 1, 1), q=(1, 1, 1), kind="bogus")
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        NY.nystrom_two_grid(A, 0, 4, p=(1, 1, 1), q=(1, 1, 1),
+                            kind="rowsample")
+
+
+def test_nystrom_auto_rejects_bad_kind_eagerly():
+    A = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        NY.nystrom_auto(A, 0, 4, kind="bogus")
+    with pytest.raises(NotImplementedError, match="ROADMAP item 3"):
+        NY.nystrom_auto(A, 0, 4, kind="countsketch")
+
+
+def test_nystrom_reference_accepts_sparse_kinds():
+    """The single-device reference materializes the tile, so the sparse
+    family works there today — only the shard_map bodies are deferred."""
+    A = np.eye(16, dtype=np.float32)
+    for kind in SPARSE_KINDS:
+        B, C = NY.nystrom_reference(A, SEED, 4, kind=kind)
+        om = np.asarray(omega_tile(SEED, 0, 0, 16, 4, kind))
+        np.testing.assert_allclose(np.asarray(B), om, atol=1e-6)
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        NY.nystrom_reference(A, SEED, 4, kind="bogus")
+
+
+def test_stream_config_validate_rejects_bad_kind():
+    with pytest.raises(ValueError, match="unknown omega kind"):
+        StreamConfig(n1=8, n2=8, r=2, kind="bogus").validate()
+    # sparse kinds are VALID stream configs (local streaming supports them)
+    StreamConfig(n1=8, n2=8, r=2, kind="countsketch").validate()
+
+
+# ---------------------------------------------------------------------------
+# snap_bucket over-tall regression
+# ---------------------------------------------------------------------------
+
+def test_snap_bucket_overtall_snaps_to_pow2():
+    edges = [4, 8]
+    assert snap_bucket(3, edges) == 4
+    assert snap_bucket(8, edges) == 8
+    # taller than every edge: pow2 fallback, NOT the exact height
+    for k in (9, 10, 11, 13):
+        assert snap_bucket(k, edges) == pow2_bucket(k) == 16
+
+
+def test_snap_bucket_overtall_lanes_share_one_program():
+    """Regression: over-tall ragged lanes (k above the top bucket edge)
+    used to compile one program PER DISTINCT HEIGHT; now they share the
+    pow2 bucket.  Counted against the service's compiled-program cache."""
+    svc = SketchService()
+    cfgs = [StreamConfig(n1=32, n2=24, r=4, seed=s) for s in range(3)]
+    sids = [svc.open(c) for c in cfgs]
+    rng = np.random.default_rng(8)
+    items = [(sid, rng.standard_normal((k, 24)).astype(np.float32), 0)
+             for sid, k in zip(sids, (9, 10, 11))]
+    svc.update_ragged(items, bucket_edges=[4, 8])
+    ragged_keys = {k for k in svc._fns if k[-1] == "ragged"}
+    assert len(ragged_keys) == 1          # one bucket: kb = pow2 = 16
+    assert next(iter(ragged_keys))[1] == 16
+    # and the fold is still lane-exact vs solo updates
+    for (sid, H, row0), cfg in zip(items, cfgs):
+        solo = StreamingSketch(cfg, backend="xla")
+        solo.update_rows(row0, H)
+        np.testing.assert_array_equal(
+            np.asarray(svc.sketch(sid)), np.asarray(solo.Y))
+
+
+def test_sparse_kinds_listed():
+    assert set(SPARSE_KINDS) == {"countsketch", "rowsample"}
+    assert set(DENSE_KINDS) == {"normal", "uniform", "rademacher"}
